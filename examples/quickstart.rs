@@ -1,0 +1,72 @@
+//! Quickstart: deploy one GEMM on a small SoftHier instance, simulate its
+//! performance, execute it functionally, and (if `make artifacts` has run)
+//! verify the numbers against the JAX/Pallas golden GEMM via PJRT.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use dit::arch::{ArchConfig, GemmShape};
+use dit::coordinator;
+use dit::schedule::Schedule;
+use dit::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // A 4×4 SoftHier instance (same template as the paper's 32×32 GH200
+    // configuration, scaled down so this demo runs in milliseconds).
+    let arch = ArchConfig::tiny(4, 4);
+    let shape = GemmShape::new(256, 256, 256);
+    println!("SoftHier {} | problem {shape}", arch.name);
+
+    // 1. Pick a deployment schedule (SUMMA dataflow, optimized layout).
+    let sched = Schedule::summa(&arch, shape);
+    println!("schedule: {}", sched.name());
+
+    // 2. Lower to per-PE programs and simulate the deployment.
+    let stats = coordinator::simulate_schedule(&arch, shape, &sched)?;
+    println!(
+        "simulated: {:.2} TFLOP/s ({:.1}% of peak), {} supersteps, {}",
+        stats.tflops(),
+        100.0 * stats.utilization(),
+        stats.supersteps,
+        dit::util::human_time_ns(stats.makespan_ns),
+    );
+
+    // 3. Execute the same programs functionally (real f32 data through the
+    //    simulated HBM/NoC) and check against a plain CPU GEMM.
+    let dep = coordinator::deploy_functional(&arch, shape, &sched)?;
+    let mut rng = Rng::new(42);
+    let a = rng.f32_vec(shape.m * shape.k);
+    let b = rng.f32_vec(shape.k * shape.n);
+    let got = dit::functional::run_gemm(&arch, &dep, &a, &b)?;
+    let mut want = vec![0f32; shape.m * shape.n];
+    dit::functional::mmad_f32(&a, &b, &mut want, shape.m, shape.n, shape.k);
+    let diff = dit::functional::max_abs_diff(&got, &want);
+    println!("functional vs CPU reference: max|diff| = {diff:.3e}");
+    anyhow::ensure!(diff < 1e-3, "functional mismatch");
+
+    // 4. Verify against the PJRT-executed JAX/Pallas golden GEMM.
+    match dit::runtime::Oracle::open_default() {
+        Ok(mut oracle) if oracle.has("gemm", shape.m, shape.n, shape.k) => {
+            let report = coordinator::verify(&arch, shape, &sched, &mut oracle, 7)?;
+            println!(
+                "PJRT golden check: max|diff| = {:.3e} (tol {:.3e}) -> {}",
+                report.max_abs_diff,
+                report.tolerance,
+                if report.passed() { "PASS" } else { "FAIL" }
+            );
+            anyhow::ensure!(report.passed(), "oracle mismatch");
+        }
+        _ => println!("(artifacts not built; run `make artifacts` for the PJRT check)"),
+    }
+
+    // 5. Let the autotuner pick the best schedule for this shape.
+    let tuned = coordinator::autotune(&arch, shape)?;
+    println!(
+        "autotuner best: {} at {:.2} TFLOP/s ({} candidates ranked)",
+        tuned.best().schedule.name(),
+        tuned.best().stats.tflops(),
+        tuned.ranking.len()
+    );
+    Ok(())
+}

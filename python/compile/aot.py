@@ -1,0 +1,101 @@
+"""AOT lowering: JAX/Pallas golden GEMMs -> HLO *text* artifacts.
+
+Run once by ``make artifacts`` (``python -m compile.aot --out-dir ../artifacts``).
+The Rust runtime (rust/src/runtime) loads these with
+``HloModuleProto::from_text_file`` and executes them on the PJRT CPU client;
+Python is never on the simulate/verify request path.
+
+HLO **text** — not ``.serialize()`` — is the interchange format: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids which xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifact set: one executable per *verification shape*. These are the shapes
+the Rust integration tests and examples deploy on small SoftHier grids and
+then check numerically; they are chosen to cover square / rectangular /
+ragged-irregular (TN = 66-grain, i.e. 2112/32) / flat-decode geometries.
+A ``manifest.txt`` maps entry name + shape -> artifact file.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (M, N, K) verification shapes. Keep them CPU-PJRT-fast: the Rust test
+# suite executes each artifact at least once.
+GEMM_SHAPES = [
+    (64, 64, 64),
+    (128, 128, 128),
+    (256, 256, 256),
+    (128, 384, 256),
+    (64, 528, 512),    # flat-GEMM analogue (LLM decode, Fig. 7d geometry)
+    (96, 66, 128),     # ragged: 66 = 2112/32, the paper's §4.1.3 example
+    (256, 192, 512),
+]
+EPILOGUE_SHAPES = [(64, 64, 64), (128, 96, 64)]
+
+
+def to_hlo_text(lowered) -> str:
+    """Lowered jax computation -> XLA HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_gemm(m: int, n: int, k: int) -> str:
+    a = jax.ShapeDtypeStruct((m, k), jnp.float32)
+    b = jax.ShapeDtypeStruct((k, n), jnp.float32)
+    return to_hlo_text(jax.jit(lambda x, y: (model.gemm(x, y),)).lower(a, b))
+
+
+def lower_gemm_bias_relu(m: int, n: int, k: int) -> str:
+    a = jax.ShapeDtypeStruct((m, k), jnp.float32)
+    b = jax.ShapeDtypeStruct((k, n), jnp.float32)
+    bias = jax.ShapeDtypeStruct((n,), jnp.float32)
+    return to_hlo_text(
+        jax.jit(lambda x, y, z: (model.gemm_bias_relu(x, y, z),)).lower(a, b, bias)
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = []
+    for m, n, k in GEMM_SHAPES:
+        name = f"gemm_{m}x{n}x{k}.hlo.txt"
+        path = os.path.join(args.out_dir, name)
+        text = lower_gemm(m, n, k)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"gemm {m} {n} {k} {name}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for m, n, k in EPILOGUE_SHAPES:
+        name = f"gemm_bias_relu_{m}x{n}x{k}.hlo.txt"
+        path = os.path.join(args.out_dir, name)
+        text = lower_gemm_bias_relu(m, n, k)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"gemm_bias_relu {m} {n} {k} {name}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("# entry M N K file\n")
+        f.write("\n".join(manifest) + "\n")
+    print(f"manifest: {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

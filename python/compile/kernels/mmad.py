@@ -1,0 +1,115 @@
+"""Layer-1 Pallas kernel: the SoftHier compute-tile MMAD.
+
+This kernel models the matrix engine of one SoftHier compute tile: a blocked
+``C[TM, TN] += A[TM, TK] @ B[TK, TN]`` accumulation whose operand blocks are
+staged through VMEM by ``BlockSpec`` — the Pallas analogue of the tile's
+software-managed L1 SPM (384 KB in the GH200-like configuration).
+
+Hardware adaptation (paper -> TPU, see DESIGN.md §Hardware-Adaptation):
+
+* SoftHier L1 scratchpad        -> VMEM blocks via BlockSpec
+* 64x16 CE array (FP8 MMAD)     -> MXU systolic array (f32 here; CPU PJRT has
+                                   no FP8 — timing uses the paper's FP8 rates)
+* HBM -> L1 DMA double-buffering-> the implicit BlockSpec HBM<->VMEM pipeline
+* per-superstep local MMAD      -> the sequential K-grid accumulation below
+
+``interpret=True`` everywhere: the artifacts must execute on the CPU PJRT
+client used by the Rust runtime; real-TPU lowering would emit Mosaic
+custom-calls the CPU plugin cannot run.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# The GH200-like SoftHier tile has a 64x16 CE array; these are the natural
+# sub-tile quanta of the matrix engine and the default VMEM block sizes.
+CE_M = 64
+CE_N = 16
+
+
+def _mmad_kernel(a_ref, b_ref, o_ref, *, n_k: int):
+    """One grid step: accumulate a TK-panel product into the output block.
+
+    Grid is (M/TM, N/TN, K/TK) with K innermost; the output BlockSpec ignores
+    the K index, so the same VMEM block is revisited across the K loop — the
+    canonical Pallas accumulation idiom and the analogue of the SoftHier
+    tile accumulating partial MMADs across BSP supersteps.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _ceil_to(x: int, q: int) -> int:
+    return (x + q - 1) // q * q
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn", "tk"))
+def mmad(a: jax.Array, b: jax.Array, *, tm: int = 128, tn: int = 128,
+         tk: int = 128) -> jax.Array:
+    """Blocked GEMM ``a @ b`` through the Pallas MMAD kernel.
+
+    Pads M/N/K up to tile multiples (SoftHier DMA-pads ragged edge tiles the
+    same way), runs the (M/TM, N/TN, K/TK) grid, then slices the result.
+    """
+    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+        raise ValueError(f"mmad: bad shapes {a.shape} @ {b.shape}")
+    m, k = a.shape
+    _, n = b.shape
+    tm, tn, tk = min(tm, _ceil_to(m, 8)), min(tn, _ceil_to(n, 8)), min(tk, _ceil_to(k, 8))
+    mp, np_, kp = _ceil_to(m, tm), _ceil_to(n, tn), _ceil_to(k, tk)
+    a_p = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+    b_p = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+    n_k = kp // tk
+
+    out = pl.pallas_call(
+        functools.partial(_mmad_kernel, n_k=n_k),
+        grid=(mp // tm, np_ // tn, n_k),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(a_p.astype(jnp.float32), b_p.astype(jnp.float32))
+    return out[:m, :n]
+
+
+def vmem_bytes(tm: int, tn: int, tk: int, itemsize: int = 4) -> int:
+    """VMEM footprint of one grid step (A block + B block + C block).
+
+    Used by the perf notes in DESIGN.md/EXPERIMENTS.md to check the blocks
+    fit the 384 KB SoftHier L1 budget analogue.
+    """
+    return itemsize * (tm * tk + tk * tn + tm * tn)
+
+
+def mxu_utilization_estimate(tm: int, tn: int, tk: int,
+                             ce_m: int = CE_M, ce_n: int = CE_N) -> float:
+    """Estimated matrix-engine (MXU-analogue) utilization for a tile shape.
+
+    The CE array quantizes M to ce_m and N to ce_n (quantization loss), the
+    systolic pipeline pays a ~ce_m-cycle fill per K panel (fill loss), and a
+    ragged edge (tm % ce_m or tn % ce_n nonzero) breaks the wavefront and
+    stalls the array (calibrated 0.7 factor, set so a TN=66 tile lands at
+    the ~50% utilization the paper reports in §4.1.3). This is the same
+    model the Rust simulator uses (rust/src/sim/tile.rs).
+    """
+    sub_m = -(-tm // ce_m)
+    sub_n = -(-tn // ce_n)
+    quant = (tm * tn) / (sub_m * ce_m * sub_n * ce_n)
+    fill = tk / (tk + ce_n)
+    ragged = 0.7 if (tm % ce_m or tn % ce_n) else 1.0
+    return min(1.0, quant * fill * ragged)

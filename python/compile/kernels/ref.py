@@ -1,0 +1,94 @@
+"""Pure-jnp oracles for the Pallas MMAD kernel and the schedule algebra.
+
+These are the build-time correctness anchors:
+
+* ``gemm_ref``            — plain ``a @ b`` in f32; the kernel must match it.
+* ``summa_ref``           — GEMM computed the way a P×Q SUMMA deployment
+                            decomposes it (K-panel broadcasts, per-tile local
+                            MMADs) so the schedule *algebra* is checked in
+                            numpy-land before the Rust codegen reproduces it.
+* ``splitk_ref``          — 3D (split-K) decomposition with an explicit
+                            partial-sum reduction, mirroring the NoC
+                            reduction dataflow.
+* ``systolic_ref``        — wavefront (Cannon-style skewed) decomposition.
+
+The Rust functional executor (rust/src/functional) re-implements the same
+decompositions over the simulated memory system; pytest pins these oracles
+to ``gemm_ref`` so any disagreement localizes to the Rust side.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gemm_ref(a, b):
+    """Golden GEMM: f32 ``a @ b``."""
+    return jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def _split(x, parts, axis):
+    """Split ``x`` into ``parts`` equal chunks along ``axis`` (must divide)."""
+    if x.shape[axis] % parts:
+        raise ValueError(f"{x.shape[axis]} not divisible by {parts}")
+    return jnp.split(x, parts, axis=axis)
+
+
+def summa_ref(a, b, p: int, q: int, kp: int | None = None):
+    """GEMM via the SUMMA decomposition on a logical p×q tile grid.
+
+    Iteration t broadcasts A's t-th K-panel along rows and B's t-th K-panel
+    along columns; every (i, j) tile accumulates ``A[i, t] @ B[t, j]``.
+    ``kp`` is the number of K panels (defaults to max(p, q) like classical
+    SUMMA); the result is reassembled from the per-tile outputs.
+    """
+    kp = kp or max(p, q)
+    a_rows = _split(a, p, 0)
+    b_cols = _split(b, q, 1)
+    out_rows = []
+    for i in range(p):
+        a_panels = _split(a_rows[i], kp, 1)
+        row = []
+        for j in range(q):
+            b_panels = _split(b_cols[j], kp, 0)
+            acc = jnp.zeros((a_rows[i].shape[0], b_cols[j].shape[1]), jnp.float32)
+            for t in range(kp):  # the broadcast step
+                acc = acc + gemm_ref(a_panels[t], b_panels[t])
+            row.append(acc)
+        out_rows.append(jnp.concatenate(row, axis=1))
+    return jnp.concatenate(out_rows, axis=0)
+
+
+def splitk_ref(a, b, splits: int):
+    """GEMM via 3D (split-K) tiling: disjoint K-slices + final reduction."""
+    a_parts = _split(a, splits, 1)
+    b_parts = _split(b, splits, 0)
+    partials = [gemm_ref(ap, bp) for ap, bp in zip(a_parts, b_parts)]
+    acc = partials[0]
+    for p in partials[1:]:  # the NoC reduction
+        acc = acc + p
+    return acc
+
+
+def systolic_ref(a, b, p: int):
+    """GEMM via a p×p systolic wavefront (Cannon-skewed block rotation).
+
+    Tile (i, j) at step t multiplies A-block (i, (i + j + t) % p) with
+    B-block ((i + j + t) % p, j): the same blocks a nearest-neighbour
+    right/down propagation delivers.
+    """
+    a_blocks = [_split(row, p, 1) for row in _split(a, p, 0)]
+    b_blocks = [_split(row, p, 1) for row in _split(b, p, 0)]
+    out_rows = []
+    for i in range(p):
+        row = []
+        for j in range(p):
+            acc = jnp.zeros(
+                (a_blocks[i][0].shape[0], b_blocks[0][j].shape[1]), jnp.float32
+            )
+            for t in range(p):
+                kk = (i + j + t) % p
+                acc = acc + gemm_ref(a_blocks[i][kk], b_blocks[kk][j])
+            row.append(acc)
+        out_rows.append(jnp.concatenate(row, axis=1))
+    return jnp.concatenate(out_rows, axis=0)

@@ -1,0 +1,43 @@
+"""Layer-2 JAX model: the golden GEMM compute graph lowered for the runtime.
+
+The Rust side (rust/src/runtime) never recomputes reference results in
+Python — it loads the HLO artifacts produced from *this* module and executes
+them on the PJRT CPU client. Two entry points are lowered:
+
+* ``gemm``        — blocked GEMM whose inner tile product is the Layer-1
+                    Pallas MMAD kernel. This is the numerical oracle against
+                    which the functional simulation of every deployment
+                    schedule is checked ("Benchmark" stage of the DiT
+                    workflow, Fig. 4 of the paper).
+* ``gemm_bias_relu`` — a fused epilogue variant exercised by the examples to
+                    show the oracle path is not GEMM-shaped-only.
+
+Schedule-algebra references (SUMMA / split-K / systolic decompositions) live
+in ``kernels.ref`` and are pytest-pinned to ``gemm``; the Rust codegen is
+checked against the same algebra through the functional executor.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import mmad as mmad_kernel
+from .kernels import ref as ref_oracle
+
+
+def gemm(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Golden GEMM through the Pallas tile kernel (f32 accumulate)."""
+    return mmad_kernel.mmad(a, b)
+
+
+def gemm_bias_relu(a: jax.Array, b: jax.Array, bias: jax.Array) -> jax.Array:
+    """GEMM + bias + ReLU epilogue (used by the epilogue example/tests)."""
+    return jnp.maximum(gemm(a, b) + bias[None, :], 0.0)
+
+
+# Re-exported so `compile.model` is the single import surface for tests.
+gemm_ref = ref_oracle.gemm_ref
+summa_ref = ref_oracle.summa_ref
+splitk_ref = ref_oracle.splitk_ref
+systolic_ref = ref_oracle.systolic_ref

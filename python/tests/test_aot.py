@@ -1,0 +1,50 @@
+"""AOT path: the lowered HLO text must be loadable interchange.
+
+These tests don't execute through PJRT from Python (that's the Rust side's
+job); they check the text artifacts have the structure the Rust loader
+depends on: an ENTRY computation, f32 parameters of the right shapes, and a
+tuple root (the Rust side unwraps with ``to_tuple1``).
+"""
+
+import re
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def hlo_small():
+    return aot.lower_gemm(8, 8, 8)
+
+
+def test_hlo_has_entry(hlo_small):
+    assert "ENTRY" in hlo_small
+
+
+def test_hlo_parameters_and_tuple_root(hlo_small):
+    assert "f32[8,8]" in hlo_small
+    # return_tuple=True => root is a 1-tuple of the result
+    assert re.search(r"\(f32\[8,8\]\s*(,|\))", hlo_small) or "tuple" in hlo_small
+
+
+def test_hlo_shapes_propagate():
+    text = aot.lower_gemm(16, 24, 32)
+    assert "f32[16,32]" in text  # A
+    assert "f32[32,24]" in text  # B
+    assert "f32[16,24]" in text  # C
+
+
+def test_epilogue_lowering_contains_relu():
+    text = aot.lower_gemm_bias_relu(8, 8, 8)
+    assert "maximum" in text
+    assert "f32[8]" in text
+
+
+def test_manifest_shape_list_is_consistent():
+    for m, n, k in aot.GEMM_SHAPES:
+        assert m > 0 and n > 0 and k > 0
+    # the ragged §4.1.3 shape must be present: N = 2112/32 = 66
+    assert any(n == 66 for _, n, _ in aot.GEMM_SHAPES)
+    # a flat-GEMM analogue must be present (M much smaller than N)
+    assert any(m <= 64 and n >= 8 * m for m, n, _ in aot.GEMM_SHAPES)

@@ -1,0 +1,84 @@
+"""Layer-2 correctness: schedule-algebra references vs the golden GEMM.
+
+The Rust codegen produces per-tile programs whose *algebra* (which block is
+multiplied with which, when partials are reduced) follows exactly these
+decompositions. Pinning them to ``gemm_ref`` here means a Rust functional
+mismatch localizes to the Rust IR/codegen, not the maths.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+
+RTOL, ATOL = 2e-5, 2e-4
+
+
+def rand(shape, seed):
+    return np.random.default_rng(seed).standard_normal(shape).astype(np.float32)
+
+
+def _check(got, a, b):
+    want = np.asarray(model.gemm_ref(jnp.asarray(a), jnp.asarray(b)))
+    np.testing.assert_allclose(np.asarray(got), want, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("p,q", [(1, 1), (2, 2), (4, 4), (2, 4), (4, 2), (1, 8)])
+def test_summa_algebra(p, q):
+    a, b = rand((64, 128), 0), rand((128, 96), 1)
+    _check(model.summa_ref(jnp.asarray(a), jnp.asarray(b), p, q), a, b)
+
+
+@pytest.mark.parametrize("kp", [1, 2, 4, 8, 16])
+def test_summa_kpanel_count_invariance(kp):
+    a, b = rand((32, 64), 2), rand((64, 32), 3)
+    _check(model.summa_ref(jnp.asarray(a), jnp.asarray(b), 2, 2, kp=kp), a, b)
+
+
+@pytest.mark.parametrize("splits", [1, 2, 4, 8])
+def test_splitk_algebra(splits):
+    a, b = rand((48, 64), 4), rand((64, 80), 5)
+    _check(model.splitk_ref(jnp.asarray(a), jnp.asarray(b), splits), a, b)
+
+
+@pytest.mark.parametrize("p", [1, 2, 4])
+def test_systolic_algebra(p):
+    a, b = rand((64, 64), 6), rand((64, 64), 7)
+    _check(model.systolic_ref(jnp.asarray(a), jnp.asarray(b), p), a, b)
+
+
+def test_systolic_equals_summa():
+    """Different dataflows, identical numerics (paper §3.3.2)."""
+    a, b = rand((32, 32), 8), rand((32, 32), 9)
+    s1 = model.summa_ref(jnp.asarray(a), jnp.asarray(b), 4, 4)
+    s2 = model.systolic_ref(jnp.asarray(a), jnp.asarray(b), 4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=RTOL, atol=ATOL)
+
+
+def test_split_requires_divisibility():
+    with pytest.raises(ValueError):
+        model.summa_ref(jnp.zeros((30, 30)), jnp.zeros((30, 30)), 4, 4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    p=st.sampled_from([1, 2, 4]),
+    q=st.sampled_from([1, 2, 4]),
+    scale_m=st.integers(1, 3),
+    scale_k=st.integers(1, 3),
+    seed=st.integers(0, 10**6),
+)
+def test_summa_hypothesis(p, q, scale_m, scale_k, seed):
+    m, k, n = 16 * p * scale_m, 16 * max(p, q) * scale_k, 16 * q
+    a, b = rand((m, k), seed), rand((k, n), seed + 1)
+    _check(model.summa_ref(jnp.asarray(a), jnp.asarray(b), p, q), a, b)
+
+
+def test_gemm_bias_relu():
+    a, b, bias = rand((32, 48), 10), rand((48, 24), 11), rand((24,), 12)
+    got = np.asarray(model.gemm_bias_relu(jnp.asarray(a), jnp.asarray(b), jnp.asarray(bias)))
+    want = np.maximum(a @ b + bias[None, :], 0.0)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)

@@ -1,0 +1,419 @@
+//! Paper-figure bench harness: regenerates every table and figure of the
+//! evaluation section (`cargo bench`, or `cargo bench -- fig9` to filter).
+//!
+//! | id     | paper content                                              |
+//! |--------|------------------------------------------------------------|
+//! | table1 | system specification                                       |
+//! | fig1   | CUTLASS utilization A100 vs GH200 (GPU baseline model)     |
+//! | fig7a  | roofline: baseline/SUMMA x base/optimal layout             |
+//! | fig7b  | dataflow-pattern comparison (2D tiling)                    |
+//! | fig7c  | 2D SUMMA vs 3D split-K SUMMA                               |
+//! | fig7d  | flat GEMM: 2D vs 3D + cluster remap                        |
+//! | fig8   | pipeline stages: compute- vs store-intensive               |
+//! | fig9   | compute-bound GEMM vs GH200 CUTLASS/DeepGEMM               |
+//! | fig10  | flat GEMM TFLOPS vs GH200                                  |
+//! | fig11  | flat GEMM HBM bandwidth utilization                        |
+//! | fig12  | portability: SoftHier-A100/GH200 vs the matching GPUs      |
+//!
+//! Absolute numbers come from the analytical-contention SoftHier model and
+//! the calibrated GPU baselines (see DESIGN.md §Substitutions); the point
+//! of comparison with the paper is the *shape* of each result (who wins,
+//! by what factor, where crossovers sit). Results are archived in
+//! EXPERIMENTS.md.
+
+use std::time::Instant;
+
+use dit::arch::{ArchConfig, GemmShape};
+use dit::coordinator::{autotune, simulate_schedule};
+use dit::perfmodel::{ridge_intensity, roofline_tflops, workloads, GpuSpec};
+use dit::report::{AsciiPlot, Table};
+use dit::schedule::{retune_tk, Dataflow, Schedule};
+use dit::sim::RunStats;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let want = |id: &str| {
+        args.iter().all(|a| a.starts_with('-'))
+            || args.iter().any(|a| a == id || id.starts_with(a.as_str()))
+    };
+    let t0 = Instant::now();
+    if want("table1") {
+        table1();
+    }
+    if want("fig1") {
+        fig1();
+    }
+    if want("fig7a") {
+        fig7a();
+    }
+    if want("fig7b") {
+        fig7b();
+    }
+    if want("fig7c") {
+        fig7c();
+    }
+    if want("fig7d") {
+        fig7d();
+    }
+    if want("fig8") {
+        fig8();
+    }
+    if want("fig9") {
+        fig9();
+    }
+    if want("fig10") {
+        fig10();
+    }
+    if want("fig11") {
+        fig11();
+    }
+    if want("fig12") {
+        fig12();
+    }
+    eprintln!("\n[bench harness completed in {:.1?}]", t0.elapsed());
+}
+
+fn sim(arch: &ArchConfig, shape: GemmShape, sched: &Schedule) -> RunStats {
+    simulate_schedule(arch, shape, sched)
+        .unwrap_or_else(|e| panic!("{} on {shape}: {e}", sched.name()))
+}
+
+/// Best-of-candidates for a shape — "we iterate through our predefined
+/// schedule candidates ... to automatically select the kernel achieving the
+/// best performance" (§4.1.4).
+fn best(arch: &ArchConfig, shape: GemmShape) -> (Schedule, RunStats) {
+    let r = autotune(arch, shape).expect("autotune");
+    (r.best().schedule.clone(), r.best().stats.clone())
+}
+
+// --------------------------------------------------------------------
+fn table1() {
+    let a = ArchConfig::gh200_like();
+    let mut t = Table::new(
+        "Table 1: System Specifications (GH200-matched SoftHier instance)",
+        &["item", "value", "paper"],
+    );
+    t.row(vec![
+        "system".into(),
+        format!("{}x{} tiles, {}-bit NoC links", a.rows, a.cols, a.noc.link_bits),
+        "32x32 tiles, 4096-bit NoC link width".into(),
+    ]);
+    t.row(vec![
+        "hbm".into(),
+        format!(
+            "{}x2 channels (west+south), {:.0} GB/s total",
+            a.hbm.channels_per_edge,
+            a.hbm.total_gbps()
+        ),
+        "32x2 channels, 4 TB/s".into(),
+    ]);
+    t.row(vec![
+        "tile".into(),
+        format!(
+            "{}x{} CE array @ {:.3} GHz = {:.2} TFLOPS FP8, {} KB L1 @ {:.0} GB/s",
+            a.tile.ce_m,
+            a.tile.ce_n,
+            a.tile.clock_ghz,
+            a.tile.peak_tflops(),
+            a.tile.l1_bytes / 1024,
+            a.tile.l1_gbps
+        ),
+        "64x16 CE, 1.93 TFLOPS FP8, 384 KB".into(),
+    ]);
+    t.row(vec![
+        "summary".into(),
+        format!("{:.0} TFLOPS peak, {:.0} GB/s HBM", a.peak_tflops(), a.hbm.total_gbps()),
+        "1979 TFLOPS, 4 TB/s".into(),
+    ]);
+    print!("\n{}", t.markdown());
+}
+
+// --------------------------------------------------------------------
+fn fig1() {
+    let a100 = GpuSpec::a100();
+    let gh200 = GpuSpec::gh200();
+    let mut t = Table::new(
+        "Fig 1: CUTLASS utilization, A100 vs GH200 (analytical GPU baseline)",
+        &["shape", "A100 util %", "GH200 util %"],
+    );
+    for shape in workloads::compute_bound() {
+        t.row(vec![
+            shape.to_string(),
+            format!("{:.1}", 100.0 * a100.utilization(a100.cutlass_tflops(shape))),
+            format!("{:.1}", 100.0 * gh200.utilization(gh200.cutlass_tflops(shape))),
+        ]);
+    }
+    print!("\n{}", t.markdown());
+    println!("(paper: the newer/larger GH200 shows LOWER average utilization than A100)");
+}
+
+// --------------------------------------------------------------------
+fn fig7a() {
+    let arch = ArchConfig::gh200_like();
+    let shape = workloads::compute_intensive();
+    let mk = |dataflow: Dataflow, opt: bool| {
+        let base = match dataflow {
+            Dataflow::Baseline => Schedule::baseline(&arch, shape),
+            _ => Schedule::summa(&arch, shape),
+        };
+        retune_tk(&arch, shape, &Schedule { opt_layout: opt, ..base })
+    };
+    let series = [
+        ("baseline w/o optimal layout", mk(Dataflow::Baseline, false)),
+        ("baseline w/ optimal layout", mk(Dataflow::Baseline, true)),
+        ("SUMMA w/o optimal layout", mk(Dataflow::Summa, false)),
+        ("SUMMA w/ optimal layout", mk(Dataflow::Summa, true)),
+    ];
+    let mut t = Table::new(
+        format!("Fig 7a: roofline, {shape} (ridge {:.0} FLOP/B)", ridge_intensity(&arch)),
+        &["schedule", "intensity FLOP/B", "TFLOP/s", "roofline ceiling", "util %"],
+    );
+    let mut plot = AsciiPlot::new("Fig 7a roofline", "operational intensity (FLOP/B)", "TFLOP/s");
+    let mut pts = Vec::new();
+    for (name, sched) in &series {
+        let stats = sim(&arch, shape, sched);
+        t.row(vec![
+            name.to_string(),
+            format!("{:.1}", stats.intensity()),
+            format!("{:.1}", stats.tflops()),
+            format!("{:.1}", roofline_tflops(&arch, stats.intensity())),
+            format!("{:.1}", 100.0 * stats.utilization()),
+        ]);
+        pts.push((stats.intensity(), stats.tflops()));
+    }
+    // Roofline ceiling curve.
+    let ceiling: Vec<(f64, f64)> = (0..40)
+        .map(|i| {
+            let x = 1.5f64.powi(i);
+            (x, roofline_tflops(&arch, x))
+        })
+        .collect();
+    plot.series('*', pts);
+    plot.series('.', ceiling);
+    print!("\n{}", t.markdown());
+    print!("{}", plot.render());
+    println!("(paper: layout lifts baseline toward the memory ceiling; SUMMA lifts intensity;\n SUMMA + optimal layout approaches the compute ceiling)");
+}
+
+// --------------------------------------------------------------------
+fn fig7b() {
+    let arch = ArchConfig::gh200_like();
+    let shapes = [
+        GemmShape::new(4096, 2112, 7168),
+        GemmShape::new(4096, 4096, 7168),
+        GemmShape::new(4096, 7168, 2048),
+        GemmShape::new(8192, 8192, 4096),
+    ];
+    let mut t = Table::new(
+        "Fig 7b: dataflow patterns, 2D tiling (TFLOP/s)",
+        &["shape", "baseline", "SUMMA", "systolic", "sys/SUMMA g4", "SUMMA/sys g2"],
+    );
+    for shape in shapes {
+        let b = retune_tk(&arch, shape, &Schedule { opt_layout: true, ..Schedule::baseline(&arch, shape) });
+        let s = Schedule::summa(&arch, shape);
+        let sy = Schedule::systolic(&arch, shape);
+        let h1 = retune_tk(&arch, shape, &Schedule {
+            dataflow: Dataflow::SystolicOverSumma { group: 4 },
+            ..Schedule::summa(&arch, shape)
+        });
+        let h2 = retune_tk(&arch, shape, &Schedule {
+            dataflow: Dataflow::SummaOverSystolic { group: 2 },
+            ..Schedule::summa(&arch, shape)
+        });
+        t.row(vec![
+            shape.to_string(),
+            format!("{:.0}", sim(&arch, shape, &b).tflops()),
+            format!("{:.0}", sim(&arch, shape, &s).tflops()),
+            format!("{:.0}", sim(&arch, shape, &sy).tflops()),
+            format!("{:.0}", sim(&arch, shape, &h1).tflops()),
+            format!("{:.0}", sim(&arch, shape, &h2).tflops()),
+        ]);
+    }
+    print!("\n{}", t.markdown());
+    println!("(paper: whether tiles start simultaneously drives the differences;\n SUMMA leads on compute-intensive shapes)");
+}
+
+// --------------------------------------------------------------------
+fn fig7c() {
+    let arch = ArchConfig::gh200_like();
+    let shape = GemmShape::new(4096, 2112, 7168);
+    let mut t = Table::new(
+        "Fig 7c: 2D SUMMA vs 3D (split-K) SUMMA",
+        &["schedule", "TN", "TFLOP/s", "util %"],
+    );
+    let s2d = Schedule::summa(&arch, shape);
+    let st = sim(&arch, shape, &s2d);
+    t.row(vec![
+        "2D SUMMA".into(),
+        format!("{}", s2d.plan(&arch, shape).tn),
+        format!("{:.0}", st.tflops()),
+        format!("{:.1}", 100.0 * st.utilization()),
+    ]);
+    for splits in [2, 4, 8] {
+        let s = Schedule::splitk(&arch, shape, splits);
+        let stats = sim(&arch, shape, &s);
+        t.row(vec![
+            format!("3D SUMMA split-K={splits}"),
+            format!("{}", s.plan(&arch, shape).tn),
+            format!("{:.0}", stats.tflops()),
+            format!("{:.1}", 100.0 * stats.utilization()),
+        ]);
+    }
+    print!("\n{}", t.markdown());
+    println!("(paper Insight 3: 3D tiling turns the ragged TN=66 slices into\n matrix-engine-friendly TN=528 tiles and lifts utilization)");
+}
+
+// --------------------------------------------------------------------
+fn fig7d() {
+    let arch = ArchConfig::gh200_like();
+    let shape = GemmShape::new(64, 2112, 7168);
+    let mut t = Table::new(
+        "Fig 7d: flat GEMM (LLM decode) — cluster dimension remap",
+        &["schedule", "logical grid", "TFLOP/s", "HBM util %"],
+    );
+    let s2d = Schedule::summa(&arch, shape);
+    let st = sim(&arch, shape, &s2d);
+    t.row(vec![
+        "2D SUMMA (32x32)".into(),
+        "32x32".into(),
+        format!("{:.0}", st.tflops()),
+        format!("{:.1}", 100.0 * st.hbm_utilization()),
+    ]);
+    for splits in [8, 16, 32] {
+        let s = Schedule::flat_remap(&arch, shape, splits);
+        let stats = sim(&arch, shape, &s);
+        t.row(vec![
+            format!("3D split-K={splits} + remap"),
+            format!("1x{} x{splits}", s.logical.1),
+            format!("{:.0}", stats.tflops()),
+            format!("{:.1}", 100.0 * stats.hbm_utilization()),
+        ]);
+    }
+    print!("\n{}", t.markdown());
+    println!("(paper Insight 4: remapping 32x32 -> 1x1024 logical with 3D tiling\n gives hardware-favorable tiles and much higher bandwidth use)");
+}
+
+// --------------------------------------------------------------------
+fn fig8() {
+    let arch = ArchConfig::gh200_like();
+    let cases = [
+        ("compute-intensive (Fig 8a)", workloads::compute_intensive()),
+        ("store-intensive (Fig 8b)", workloads::store_intensive()),
+    ];
+    let mut t = Table::new(
+        "Fig 8: pipeline stages (makespan, microseconds; lower is better)",
+        &["case", "1 stage", "2 stages", "4 stages", "8 stages"],
+    );
+    for (name, shape) in cases {
+        let mut row = vec![format!("{name} {shape}")];
+        for stages in [1usize, 2, 4, 8] {
+            let s = Schedule { pipeline_stages: stages, ..Schedule::summa(&arch, shape) };
+            let stats = sim(&arch, shape, &s);
+            row.push(format!("{:.1}", stats.makespan_ns / 1e3));
+        }
+        t.row(row);
+    }
+    print!("\n{}", t.markdown());
+    println!("(paper: pipelining only wastes time on compute-intensive shapes, but\n reduces HBM store contention on store-intensive ones — up to a point)");
+}
+
+// --------------------------------------------------------------------
+fn fig9() {
+    let arch = ArchConfig::gh200_like();
+    let gpu = GpuSpec::gh200();
+    let mut t = Table::new(
+        "Fig 9: compute-bound GEMM vs GH200 (TFLOP/s)",
+        &["shape", "DiT (best)", "schedule", "CUTLASS", "DeepGEMM", "speedup"],
+    );
+    for shape in workloads::compute_bound() {
+        let (sched, stats) = best(&arch, shape);
+        let cut = gpu.cutlass_tflops(shape);
+        let deep = gpu.deepgemm_tflops(shape);
+        let best_gpu = cut.max(deep);
+        t.row(vec![
+            shape.to_string(),
+            format!("{:.0}", stats.tflops()),
+            sched.name(),
+            format!("{:.0}", cut),
+            format!("{:.0}", deep),
+            format!("{:.2}x", stats.tflops() / best_gpu),
+        ]);
+    }
+    print!("\n{}", t.markdown());
+    println!("(paper: 1.2-1.5x higher TFLOPS than either library for all matrices)");
+}
+
+// --------------------------------------------------------------------
+fn fig10() {
+    let arch = ArchConfig::gh200_like();
+    let gpu = GpuSpec::gh200();
+    let mut t = Table::new(
+        "Fig 10: flat GEMM performance vs GH200 (TFLOP/s)",
+        &["shape", "DiT (best)", "schedule", "CUTLASS", "DeepGEMM", "speedup"],
+    );
+    for shape in workloads::flat() {
+        let (sched, stats) = best(&arch, shape);
+        let cut = gpu.cutlass_tflops(shape);
+        let deep = gpu.deepgemm_tflops(shape);
+        let best_gpu = cut.max(deep);
+        t.row(vec![
+            shape.to_string(),
+            format!("{:.0}", stats.tflops()),
+            sched.name(),
+            format!("{:.0}", cut),
+            format!("{:.0}", deep),
+            format!("{:.2}x", stats.tflops() / best_gpu),
+        ]);
+    }
+    print!("\n{}", t.markdown());
+    println!("(paper: ~1.2-2.0x speedup in the memory-bound decode regime)");
+}
+
+// --------------------------------------------------------------------
+fn fig11() {
+    let arch = ArchConfig::gh200_like();
+    let gpu = GpuSpec::gh200();
+    let mut t = Table::new(
+        "Fig 11: flat GEMM HBM bandwidth utilization",
+        &["shape", "DiT GB/s", "DiT util %", "GPU GB/s", "GPU util %"],
+    );
+    for shape in workloads::flat() {
+        let (_, stats) = best(&arch, shape);
+        let gpu_tflops = gpu.cutlass_tflops(shape).max(gpu.deepgemm_tflops(shape));
+        let gpu_bw = gpu.achieved_gbps(shape, gpu_tflops);
+        t.row(vec![
+            shape.to_string(),
+            format!("{:.0}", stats.hbm_gbps()),
+            format!("{:.1}", 100.0 * stats.hbm_utilization()),
+            format!("{:.0}", gpu_bw),
+            format!("{:.1}", 100.0 * gpu_bw / gpu.hbm_gbps),
+        ]);
+    }
+    print!("\n{}", t.markdown());
+    println!("(paper: DiT achieves higher HBM bandwidth utilization in this regime)");
+}
+
+// --------------------------------------------------------------------
+fn fig12() {
+    let mut t = Table::new(
+        "Fig 12: portability — utilization on spec-matched SoftHier vs real GPU",
+        &["shape", "SoftHier-A100 %", "A100 CUTLASS %", "SoftHier-GH200 %", "GH200 CUTLASS %"],
+    );
+    let sh_a100 = ArchConfig::a100_like();
+    let sh_gh200 = ArchConfig::gh200_like();
+    let a100 = GpuSpec::a100();
+    let gh200 = GpuSpec::gh200();
+    for shape in workloads::compute_bound() {
+        let (_, sa) = best(&sh_a100, shape);
+        let (_, sg) = best(&sh_gh200, shape);
+        t.row(vec![
+            shape.to_string(),
+            format!("{:.1}", 100.0 * sa.utilization()),
+            format!("{:.1}", 100.0 * a100.utilization(a100.cutlass_tflops(shape))),
+            format!("{:.1}", 100.0 * sg.utilization()),
+            format!("{:.1}", 100.0 * gh200.utilization(gh200.cutlass_tflops(shape))),
+        ]);
+    }
+    print!("\n{}", t.markdown());
+    println!("(paper: CUTLASS drops on GH200; SoftHier utilization stays consistently\n high as the architecture scales — and beats its spec-matched GPU)");
+}

@@ -1,0 +1,414 @@
+//! Parametric SoftHier architecture descriptions.
+//!
+//! SoftHier (paper §2.1) is a template: a `rows × cols` grid of compute
+//! tiles (matrix engine + DMAs + software-managed L1 SPM) joined by a 2D
+//! mesh NoC with hardware collective support; HBM channels sit on the west
+//! and south die edges behind memory controllers. Everything is
+//! configurable, mirroring the paper's "fully configurable through
+//! architecture configuration files".
+//!
+//! Two calibrated presets reproduce the paper's evaluation instances:
+//! [`ArchConfig::gh200_like`] (Table 1: 32×32 tiles, 1979 TFLOPS FP8,
+//! 4 TB/s) and [`ArchConfig::a100_like`] (312 TFLOPS, 1.56 TB/s), plus
+//! [`ArchConfig::tiny`] grids for functional verification.
+
+use crate::collective::TileCoord;
+use crate::util::cfgtext::Doc;
+
+/// A GEMM problem: `C[M,N] = A[M,K] @ B[K,N]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GemmShape {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+}
+
+impl GemmShape {
+    pub fn new(m: usize, n: usize, k: usize) -> Self {
+        GemmShape { m, n, k }
+    }
+
+    /// Total floating-point work (multiply + add).
+    pub fn flops(&self) -> f64 {
+        2.0 * self.m as f64 * self.n as f64 * self.k as f64
+    }
+
+    /// Compulsory off-chip traffic in elements (read A, read B, write C).
+    pub fn min_elems(&self) -> usize {
+        self.m * self.k + self.k * self.n + self.m * self.n
+    }
+
+    /// Arithmetic intensity at `elem_bytes` per element (FLOP/byte).
+    pub fn intensity(&self, elem_bytes: usize) -> f64 {
+        self.flops() / (self.min_elems() as f64 * elem_bytes as f64)
+    }
+
+    /// "Flat" GEMMs (LLM decode: small M, huge N·K) are the paper's
+    /// memory-bound regime (§4.1.4).
+    pub fn is_flat(&self) -> bool {
+        self.m <= 128 && self.n.max(self.k) >= 8 * self.m
+    }
+}
+
+impl std::fmt::Display for GemmShape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}x{}", self.m, self.n, self.k)
+    }
+}
+
+/// One compute tile: matrix engine + DMA + L1 scratchpad.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TileSpec {
+    /// CE array rows (M dimension of one engine pass).
+    pub ce_m: usize,
+    /// CE array columns (N dimension of one engine pass).
+    pub ce_n: usize,
+    /// Engine clock in GHz. Peak tile TFLOPS = 2·ce_m·ce_n·clock.
+    pub clock_ghz: f64,
+    /// L1 scratchpad bytes (384 KB in Table 1).
+    pub l1_bytes: usize,
+    /// L1 bandwidth, bytes/ns (== GB/s).
+    pub l1_gbps: f64,
+    /// Independent DMA engines per tile.
+    pub dma_engines: usize,
+}
+
+impl TileSpec {
+    /// Peak tile throughput in TFLOP/s.
+    pub fn peak_tflops(&self) -> f64 {
+        2.0 * self.ce_m as f64 * self.ce_n as f64 * self.clock_ghz * 1e9 / 1e12
+    }
+}
+
+/// The 2D-mesh NoC.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NocSpec {
+    /// Link width in bits (Table 1: 4096).
+    pub link_bits: usize,
+    /// NoC clock, GHz. Link bandwidth = link_bits/8 · clock GB/s.
+    pub clock_ghz: f64,
+    /// Per-hop router latency, ns.
+    pub hop_ns: f64,
+}
+
+impl NocSpec {
+    /// One link's bandwidth in bytes/ns (== GB/s).
+    pub fn link_gbps(&self) -> f64 {
+        self.link_bits as f64 / 8.0 * self.clock_ghz
+    }
+}
+
+/// Which die edge a set of HBM channels attaches to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Edge {
+    West,
+    South,
+}
+
+/// The distributed multi-channel HBM system.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HbmSpec {
+    /// Channels per edge; total = 2 × per_edge (west + south, Table 1).
+    pub channels_per_edge: usize,
+    /// Per-channel bandwidth, bytes/ns (GB/s).
+    pub channel_gbps: f64,
+    /// Fixed per-request service overhead, ns (row activation, controller).
+    pub request_overhead_ns: f64,
+    /// Efficiency floor for single-burst (well-coalesced) streams.
+    pub stream_efficiency: f64,
+}
+
+impl HbmSpec {
+    pub fn num_channels(&self) -> usize {
+        2 * self.channels_per_edge
+    }
+
+    /// Aggregate bandwidth, GB/s.
+    pub fn total_gbps(&self) -> f64 {
+        self.num_channels() as f64 * self.channel_gbps
+    }
+}
+
+/// A complete SoftHier instance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArchConfig {
+    /// Human-readable preset name.
+    pub name: String,
+    /// Physical tile-grid rows.
+    pub rows: usize,
+    /// Physical tile-grid columns.
+    pub cols: usize,
+    pub tile: TileSpec,
+    pub noc: NocSpec,
+    pub hbm: HbmSpec,
+    /// Element size for *performance* accounting (1 = FP8 like the paper;
+    /// functional verification always computes in f32).
+    pub elem_bytes: usize,
+}
+
+impl ArchConfig {
+    /// The paper's Table 1 instance: spec-matched to an NVIDIA GH200.
+    ///
+    /// 32×32 tiles; per-tile 64×16 CE array at 0.943 GHz → 1.93 TFLOPS FP8
+    /// (grid total 1979 TFLOPS); 4096-bit NoC links; 32×2 HBM channels
+    /// split over the west and south edges totalling 4 TB/s.
+    pub fn gh200_like() -> ArchConfig {
+        ArchConfig {
+            name: "softhier-gh200".into(),
+            rows: 32,
+            cols: 32,
+            tile: TileSpec {
+                ce_m: 64,
+                ce_n: 16,
+                clock_ghz: 0.943,
+                l1_bytes: 384 * 1024,
+                l1_gbps: 512.0,
+                dma_engines: 2,
+            },
+            noc: NocSpec {
+                link_bits: 4096,
+                clock_ghz: 1.0,
+                hop_ns: 1.0,
+            },
+            hbm: HbmSpec {
+                channels_per_edge: 32,
+                channel_gbps: 64.0,
+                request_overhead_ns: 6.0,
+                stream_efficiency: 0.92,
+            },
+            elem_bytes: 1, // FP8
+        }
+    }
+
+    /// SoftHier instance spec-matched to an NVIDIA A100 (312 TFLOPS FP16,
+    /// 1.56 TB/s HBM2e) for the portability study (§4.2 / Fig. 12).
+    pub fn a100_like() -> ArchConfig {
+        ArchConfig {
+            name: "softhier-a100".into(),
+            rows: 16,
+            cols: 16,
+            tile: TileSpec {
+                ce_m: 32,
+                ce_n: 16,
+                clock_ghz: 1.19,
+                l1_bytes: 256 * 1024,
+                l1_gbps: 384.0,
+                dma_engines: 2,
+            },
+            noc: NocSpec {
+                link_bits: 2048,
+                clock_ghz: 1.0,
+                hop_ns: 1.0,
+            },
+            hbm: HbmSpec {
+                channels_per_edge: 16,
+                channel_gbps: 48.6,
+                request_overhead_ns: 6.0,
+                stream_efficiency: 0.92,
+            },
+            elem_bytes: 2, // FP16
+        }
+    }
+
+    /// A small instance for functional verification and unit tests: the
+    /// same template scaled down so whole-system runs finish in
+    /// milliseconds and every byte can be checked.
+    pub fn tiny(rows: usize, cols: usize) -> ArchConfig {
+        ArchConfig {
+            name: format!("softhier-tiny-{rows}x{cols}"),
+            rows,
+            cols,
+            tile: TileSpec {
+                ce_m: 16,
+                ce_n: 8,
+                clock_ghz: 1.0,
+                l1_bytes: 256 * 1024,
+                l1_gbps: 256.0,
+                dma_engines: 2,
+            },
+            noc: NocSpec {
+                link_bits: 1024,
+                clock_ghz: 1.0,
+                hop_ns: 1.0,
+            },
+            hbm: HbmSpec {
+                channels_per_edge: rows.max(1),
+                channel_gbps: 32.0,
+                request_overhead_ns: 6.0,
+                stream_efficiency: 0.92,
+            },
+            elem_bytes: 4, // functional runs are f32
+        }
+    }
+
+    pub fn num_tiles(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// System peak throughput, TFLOP/s.
+    pub fn peak_tflops(&self) -> f64 {
+        self.num_tiles() as f64 * self.tile.peak_tflops()
+    }
+
+    /// The mesh router an HBM channel is attached to. West-edge channels
+    /// attach along column 0 (top to bottom, wrapping if there are more
+    /// channels than rows); south-edge channels along the bottom row.
+    pub fn hbm_router(&self, channel: usize) -> TileCoord {
+        assert!(channel < self.hbm.num_channels(), "channel {channel} out of range");
+        let per_edge = self.hbm.channels_per_edge;
+        if channel < per_edge {
+            TileCoord::new(channel % self.rows, 0) // west
+        } else {
+            TileCoord::new(self.rows - 1, (channel - per_edge) % self.cols) // south
+        }
+    }
+
+    /// Sanity-check all derived quantities.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.rows > 0 && self.cols > 0, "empty grid");
+        anyhow::ensure!(self.tile.ce_m > 0 && self.tile.ce_n > 0, "empty CE array");
+        anyhow::ensure!(self.tile.clock_ghz > 0.0, "zero tile clock");
+        anyhow::ensure!(self.tile.l1_bytes >= 4096, "L1 too small");
+        anyhow::ensure!(self.noc.link_bits >= 8, "NoC link too narrow");
+        anyhow::ensure!(self.hbm.channels_per_edge > 0, "no HBM channels");
+        anyhow::ensure!(
+            (1..=8).contains(&self.elem_bytes),
+            "unreasonable element size {}",
+            self.elem_bytes
+        );
+        Ok(())
+    }
+
+    /// Serialize to the `.dit` config-text format.
+    pub fn to_text(&self) -> String {
+        format!(
+            "# SoftHier architecture description\n\
+             name = \"{}\"\nelem_bytes = {}\n\n\
+             [grid]\nrows = {}\ncols = {}\n\n\
+             [tile]\nce_m = {}\nce_n = {}\nclock_ghz = {}\nl1_bytes = {}\nl1_gbps = {}\ndma_engines = {}\n\n\
+             [noc]\nlink_bits = {}\nclock_ghz = {}\nhop_ns = {}\n\n\
+             [hbm]\nchannels_per_edge = {}\nchannel_gbps = {}\nrequest_overhead_ns = {}\nstream_efficiency = {}\n",
+            self.name, self.elem_bytes, self.rows, self.cols,
+            self.tile.ce_m, self.tile.ce_n, self.tile.clock_ghz, self.tile.l1_bytes,
+            self.tile.l1_gbps, self.tile.dma_engines,
+            self.noc.link_bits, self.noc.clock_ghz, self.noc.hop_ns,
+            self.hbm.channels_per_edge, self.hbm.channel_gbps,
+            self.hbm.request_overhead_ns, self.hbm.stream_efficiency,
+        )
+    }
+
+    /// Parse from config text; starts from [`ArchConfig::gh200_like`]
+    /// defaults so partial configs are valid.
+    pub fn from_text(text: &str) -> anyhow::Result<ArchConfig> {
+        let doc = Doc::parse(text)?;
+        let mut a = ArchConfig::gh200_like();
+        if let Some(name) = doc.get_str("", "name") {
+            a.name = name.to_string();
+        }
+        if let Some(v) = doc.get_int("", "elem_bytes") {
+            a.elem_bytes = v as usize;
+        }
+        let geti = |sec: &str, key: &str, dflt: usize| -> usize {
+            doc.get_int(sec, key).map(|v| v as usize).unwrap_or(dflt)
+        };
+        let getf = |sec: &str, key: &str, dflt: f64| -> f64 {
+            doc.get_f64(sec, key).unwrap_or(dflt)
+        };
+        a.rows = geti("grid", "rows", a.rows);
+        a.cols = geti("grid", "cols", a.cols);
+        a.tile.ce_m = geti("tile", "ce_m", a.tile.ce_m);
+        a.tile.ce_n = geti("tile", "ce_n", a.tile.ce_n);
+        a.tile.clock_ghz = getf("tile", "clock_ghz", a.tile.clock_ghz);
+        a.tile.l1_bytes = geti("tile", "l1_bytes", a.tile.l1_bytes);
+        a.tile.l1_gbps = getf("tile", "l1_gbps", a.tile.l1_gbps);
+        a.tile.dma_engines = geti("tile", "dma_engines", a.tile.dma_engines);
+        a.noc.link_bits = geti("noc", "link_bits", a.noc.link_bits);
+        a.noc.clock_ghz = getf("noc", "clock_ghz", a.noc.clock_ghz);
+        a.noc.hop_ns = getf("noc", "hop_ns", a.noc.hop_ns);
+        a.hbm.channels_per_edge = geti("hbm", "channels_per_edge", a.hbm.channels_per_edge);
+        a.hbm.channel_gbps = getf("hbm", "channel_gbps", a.hbm.channel_gbps);
+        a.hbm.request_overhead_ns = getf("hbm", "request_overhead_ns", a.hbm.request_overhead_ns);
+        a.hbm.stream_efficiency = getf("hbm", "stream_efficiency", a.hbm.stream_efficiency);
+        a.validate()?;
+        Ok(a)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gh200_matches_table1() {
+        let a = ArchConfig::gh200_like();
+        a.validate().unwrap();
+        assert_eq!(a.num_tiles(), 1024);
+        // Table 1: 1979 TFLOPS peak, 1.93 TFLOPS/tile, 4 TB/s HBM.
+        assert!((a.tile.peak_tflops() - 1.93).abs() < 0.01, "{}", a.tile.peak_tflops());
+        assert!((a.peak_tflops() - 1979.0).abs() < 10.0, "{}", a.peak_tflops());
+        assert_eq!(a.hbm.num_channels(), 64);
+        assert!((a.hbm.total_gbps() - 4096.0).abs() < 1.0);
+        // 4096-bit NoC at 1 GHz = 512 GB/s per link.
+        assert!((a.noc.link_gbps() - 512.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn a100_matches_spec() {
+        let a = ArchConfig::a100_like();
+        a.validate().unwrap();
+        assert!((a.peak_tflops() - 312.0).abs() < 5.0, "{}", a.peak_tflops());
+        assert!((a.hbm.total_gbps() - 1555.0).abs() < 5.0, "{}", a.hbm.total_gbps());
+    }
+
+    #[test]
+    fn hbm_router_placement() {
+        let a = ArchConfig::gh200_like();
+        // West channels on column 0.
+        assert_eq!(a.hbm_router(0), TileCoord::new(0, 0));
+        assert_eq!(a.hbm_router(31), TileCoord::new(31, 0));
+        // South channels on the bottom row.
+        assert_eq!(a.hbm_router(32), TileCoord::new(31, 0));
+        assert_eq!(a.hbm_router(63), TileCoord::new(31, 31));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn hbm_router_rejects_bad_channel() {
+        ArchConfig::gh200_like().hbm_router(64);
+    }
+
+    #[test]
+    fn config_text_roundtrip() {
+        for a in [ArchConfig::gh200_like(), ArchConfig::a100_like(), ArchConfig::tiny(4, 4)] {
+            let b = ArchConfig::from_text(&a.to_text()).unwrap();
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn partial_config_uses_defaults() {
+        let a = ArchConfig::from_text("[grid]\nrows = 8\ncols = 8\n").unwrap();
+        assert_eq!(a.rows, 8);
+        assert_eq!(a.tile.ce_m, 64); // GH200 default
+    }
+
+    #[test]
+    fn validate_rejects_nonsense() {
+        let mut a = ArchConfig::tiny(2, 2);
+        a.elem_bytes = 0;
+        assert!(a.validate().is_err());
+        let mut b = ArchConfig::tiny(2, 2);
+        b.rows = 0;
+        assert!(b.validate().is_err());
+    }
+
+    #[test]
+    fn gemm_shape_math() {
+        let s = GemmShape::new(64, 2112, 7168);
+        assert_eq!(s.flops(), 2.0 * 64.0 * 2112.0 * 7168.0);
+        assert!(s.is_flat());
+        assert!(!GemmShape::new(4096, 2112, 7168).is_flat());
+        // flat GEMM: intensity below the GH200 ridge point (~483 FLOP/B).
+        assert!(s.intensity(1) < 200.0);
+    }
+}

@@ -1,0 +1,331 @@
+//! The `dit` command-line interface (hand-rolled; no clap offline).
+//!
+//! ```text
+//! dit arch      --preset gh200|a100|tiny4            # show/save a config
+//! dit candidates --preset P --shape MxNxK            # list schedules
+//! dit simulate  --preset P --shape MxNxK [--schedule NAME] [--tk N] ...
+//! dit autotune  --preset P --shape MxNxK             # rank all candidates
+//! dit verify    --shape MxNxK [--grid RxC] [--schedule NAME]   # vs PJRT
+//! dit fig       --id 7a|7b|7c|7d|8|9|10|11|12|1|table1  # regen a figure
+//! ```
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::arch::{ArchConfig, GemmShape};
+use crate::coordinator;
+use crate::report::Table;
+use crate::schedule::{candidates, Dataflow, Schedule};
+
+/// Parsed CLI arguments: positional command + `--key value` flags.
+pub struct Args {
+    pub command: String,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut it = argv.iter();
+        let command = it.next().cloned().unwrap_or_else(|| "help".to_string());
+        let mut flags = HashMap::new();
+        while let Some(arg) = it.next() {
+            let key = arg
+                .strip_prefix("--")
+                .with_context(|| format!("expected --flag, got {arg:?}"))?;
+            let value = it.next().with_context(|| format!("--{key} needs a value"))?;
+            flags.insert(key.to_string(), value.clone());
+        }
+        Ok(Args { command, flags })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, dflt: &'a str) -> &'a str {
+        self.get(key).unwrap_or(dflt)
+    }
+}
+
+/// Parse `MxNxK` into a [`GemmShape`].
+pub fn parse_shape(s: &str) -> Result<GemmShape> {
+    let parts: Vec<&str> = s.split('x').collect();
+    if parts.len() != 3 {
+        bail!("shape must be MxNxK, got {s:?}");
+    }
+    Ok(GemmShape::new(
+        parts[0].parse().context("M")?,
+        parts[1].parse().context("N")?,
+        parts[2].parse().context("K")?,
+    ))
+}
+
+/// Resolve an architecture preset or config file.
+pub fn parse_arch(spec: &str) -> Result<ArchConfig> {
+    match spec {
+        "gh200" => Ok(ArchConfig::gh200_like()),
+        "a100" => Ok(ArchConfig::a100_like()),
+        _ if spec.starts_with("tiny") => {
+            let n: usize = spec.trim_start_matches("tiny").parse().unwrap_or(4);
+            Ok(ArchConfig::tiny(n, n))
+        }
+        path => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("unknown preset and unreadable file: {path:?}"))?;
+            ArchConfig::from_text(&text)
+        }
+    }
+}
+
+/// Build a schedule from CLI flags.
+pub fn parse_schedule(args: &Args, arch: &ArchConfig, shape: GemmShape) -> Result<Schedule> {
+    let name = args.get_or("schedule", "summa");
+    let mut s = match name {
+        "summa" => Schedule::summa(arch, shape),
+        "baseline" => Schedule::baseline(arch, shape),
+        "systolic" => Schedule::systolic(arch, shape),
+        "splitk" => {
+            let splits: usize = args.get_or("splits", "4").parse().context("--splits")?;
+            Schedule::splitk(arch, shape, splits)
+        }
+        "flat" => {
+            let splits: usize = args.get_or("splits", "8").parse().context("--splits")?;
+            Schedule::flat_remap(arch, shape, splits)
+        }
+        "systolic-over-summa" => Schedule {
+            dataflow: Dataflow::SystolicOverSumma {
+                group: args.get_or("group", "2").parse().context("--group")?,
+            },
+            ..Schedule::summa(arch, shape)
+        },
+        "summa-over-systolic" => Schedule {
+            dataflow: Dataflow::SummaOverSystolic {
+                group: args.get_or("group", "2").parse().context("--group")?,
+            },
+            ..Schedule::summa(arch, shape)
+        },
+        other => bail!("unknown schedule {other:?}"),
+    };
+    if let Some(tk) = args.get("tk") {
+        s.tk = tk.parse().context("--tk")?;
+    }
+    if let Some(ps) = args.get("stages") {
+        s.pipeline_stages = ps.parse().context("--stages")?;
+    }
+    if let Some(db) = args.get("double-buffer") {
+        s.double_buffer = db.parse().context("--double-buffer")?;
+    }
+    if let Some(ol) = args.get("opt-layout") {
+        s.opt_layout = ol.parse().context("--opt-layout")?;
+    }
+    Ok(s)
+}
+
+const HELP: &str = "\
+dit — Design in Tiles: automated GEMM deployment on tile-based many-PE accelerators
+
+USAGE: dit <command> [--flag value]...
+
+COMMANDS:
+  arch        --preset gh200|a100|tiny4 [--save FILE]   show or save a config
+  candidates  --preset P --shape MxNxK                  list candidate schedules
+  simulate    --preset P --shape MxNxK [--schedule S]   simulate one deployment
+              [--tk N] [--stages N] [--double-buffer b] [--opt-layout b]
+              [--splits N] [--group N]
+  autotune    --preset P --shape MxNxK                  rank all candidates
+  verify      --shape MxNxK [--grid N] [--schedule S]   functional vs PJRT oracle
+              [--artifacts DIR] [--seed N]
+  help                                                  this text
+
+EXAMPLES:
+  dit simulate --preset gh200 --shape 4096x2112x7168 --schedule summa
+  dit autotune --preset gh200 --shape 64x2112x7168
+  dit verify   --shape 128x128x128 --grid 4 --schedule splitk --splits 2
+";
+
+/// CLI entry point (called from main).
+pub fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        "arch" => cmd_arch(&args),
+        "candidates" => cmd_candidates(&args),
+        "simulate" => cmd_simulate(&args),
+        "autotune" => cmd_autotune(&args),
+        "verify" => cmd_verify(&args),
+        other => bail!("unknown command {other:?}; try `dit help`"),
+    }
+}
+
+fn cmd_arch(args: &Args) -> Result<()> {
+    let arch = parse_arch(args.get_or("preset", "gh200"))?;
+    let text = arch.to_text();
+    if let Some(path) = args.get("save") {
+        std::fs::write(path, &text)?;
+        println!("saved {} to {path}", arch.name);
+    } else {
+        print!("{text}");
+        println!(
+            "# derived: {} tiles, {:.0} TFLOPS peak, {:.0} GB/s HBM",
+            arch.num_tiles(),
+            arch.peak_tflops(),
+            arch.hbm.total_gbps()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_candidates(args: &Args) -> Result<()> {
+    let arch = parse_arch(args.get_or("preset", "gh200"))?;
+    let shape = parse_shape(args.get("shape").context("--shape required")?)?;
+    let mut t = Table::new(
+        format!("candidate schedules for {shape} on {}", arch.name),
+        &["schedule", "logical", "tk", "l1_bytes"],
+    );
+    for s in candidates(&arch, shape) {
+        t.row(vec![
+            s.name(),
+            format!("{}x{}x{}", s.logical.0, s.logical.1, s.splits()),
+            s.tk.to_string(),
+            crate::schedule::l1_estimate(&arch, shape, &s).to_string(),
+        ]);
+    }
+    print!("{}", t.markdown());
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let arch = parse_arch(args.get_or("preset", "gh200"))?;
+    let shape = parse_shape(args.get("shape").context("--shape required")?)?;
+    let sched = parse_schedule(args, &arch, shape)?;
+    let stats = coordinator::simulate_schedule(&arch, shape, &sched)?;
+    println!("schedule   : {}", sched.name());
+    println!("supersteps : {}", stats.supersteps);
+    println!("makespan   : {}", crate::util::human_time_ns(stats.makespan_ns));
+    println!("throughput : {:.1} TFLOP/s ({:.1}% of {:.0} peak)",
+        stats.tflops(), 100.0 * stats.utilization(), stats.peak_tflops);
+    println!("hbm traffic: {} read, {} write ({:.0} GB/s, {:.1}% of peak)",
+        crate::util::human_bytes(stats.hbm_read_bytes),
+        crate::util::human_bytes(stats.hbm_write_bytes),
+        stats.hbm_gbps(),
+        100.0 * stats.hbm_utilization());
+    println!("intensity  : {:.1} FLOP/B", stats.intensity());
+    if args.get("steps").is_some() {
+        let mut prev = 0.0;
+        for (i, end) in stats.step_end_ns.iter().enumerate() {
+            println!("  step {i:>3}: {:>10}", crate::util::human_time_ns(end - prev));
+            prev = *end;
+        }
+    }
+    Ok(())
+}
+
+fn cmd_autotune(args: &Args) -> Result<()> {
+    let arch = parse_arch(args.get_or("preset", "gh200"))?;
+    let shape = parse_shape(args.get("shape").context("--shape required")?)?;
+    let result = coordinator::autotune(&arch, shape)?;
+    let mut t = Table::new(
+        format!("autotune {shape} on {}", arch.name),
+        &["rank", "schedule", "TFLOP/s", "util %", "HBM %", "makespan"],
+    );
+    for (i, s) in result.ranking.iter().enumerate() {
+        t.row(vec![
+            (i + 1).to_string(),
+            s.schedule.name(),
+            format!("{:.1}", s.stats.tflops()),
+            format!("{:.1}", 100.0 * s.stats.utilization()),
+            format!("{:.1}", 100.0 * s.stats.hbm_utilization()),
+            crate::util::human_time_ns(s.stats.makespan_ns),
+        ]);
+    }
+    print!("{}", t.markdown());
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> Result<()> {
+    let grid: usize = args.get_or("grid", "4").parse().context("--grid")?;
+    let arch = ArchConfig::tiny(grid, grid);
+    let shape = parse_shape(args.get("shape").context("--shape required")?)?;
+    let sched = parse_schedule(args, &arch, shape)?;
+    let mut oracle = match args.get("artifacts") {
+        Some(dir) => crate::runtime::Oracle::open(dir)?,
+        None => crate::runtime::Oracle::open_default()?,
+    };
+    anyhow::ensure!(
+        oracle.has("gemm", shape.m, shape.n, shape.k),
+        "no artifact for {shape}; available: {:?}",
+        oracle.shapes("gemm")
+    );
+    let seed: u64 = args.get_or("seed", "7").parse().context("--seed")?;
+    let report = coordinator::verify(&arch, shape, &sched, &mut oracle, seed)?;
+    println!(
+        "verify {} via {} on {}x{} grid: max|diff| = {:.3e} (tol {:.3e}) -> {}",
+        report.shape,
+        report.schedule,
+        grid,
+        grid,
+        report.max_abs_diff,
+        report.tolerance,
+        if report.passed() { "PASS" } else { "FAIL" }
+    );
+    anyhow::ensure!(report.passed(), "verification failed");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parse_shape_ok() {
+        let s = parse_shape("4096x2112x7168").unwrap();
+        assert_eq!((s.m, s.n, s.k), (4096, 2112, 7168));
+        assert!(parse_shape("12x34").is_err());
+        assert!(parse_shape("axbxc").is_err());
+    }
+
+    #[test]
+    fn parse_args_flags() {
+        let a = Args::parse(&argv("simulate --shape 1x2x3 --preset gh200")).unwrap();
+        assert_eq!(a.command, "simulate");
+        assert_eq!(a.get("shape"), Some("1x2x3"));
+        assert!(Args::parse(&argv("x --oops")).is_err());
+        assert!(Args::parse(&argv("x stray")).is_err());
+    }
+
+    #[test]
+    fn parse_arch_presets() {
+        assert_eq!(parse_arch("gh200").unwrap().rows, 32);
+        assert_eq!(parse_arch("a100").unwrap().rows, 16);
+        assert_eq!(parse_arch("tiny8").unwrap().rows, 8);
+        assert!(parse_arch("/no/such/file").is_err());
+    }
+
+    #[test]
+    fn parse_schedule_flags() {
+        let arch = ArchConfig::tiny(4, 4);
+        let shape = GemmShape::new(64, 64, 64);
+        let a = Args::parse(&argv("simulate --schedule splitk --splits 2 --tk 32")).unwrap();
+        let s = parse_schedule(&a, &arch, shape).unwrap();
+        assert_eq!(s.splits(), 2);
+        assert_eq!(s.tk, 32);
+        let a = Args::parse(&argv("simulate --schedule nope")).unwrap();
+        assert!(parse_schedule(&a, &arch, shape).is_err());
+    }
+
+    #[test]
+    fn run_simulate_smoke() {
+        run(&argv("simulate --preset tiny4 --shape 64x64x64")).unwrap();
+        run(&argv("candidates --preset tiny4 --shape 64x64x64")).unwrap();
+        run(&argv("arch --preset a100")).unwrap();
+        assert!(run(&argv("bogus")).is_err());
+    }
+}

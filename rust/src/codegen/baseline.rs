@@ -1,0 +1,120 @@
+//! Baseline dataflow: "a reference without specialized data placement or
+//! on-chip communication" (paper §4.1.1).
+//!
+//! Every tile independently DMAs its own A and B panels from HBM each
+//! K-step and multiplies locally — the same operand bytes are fetched once
+//! *per consumer tile*, so off-chip traffic is `Q×` (for A) and `P×` (for
+//! B) the compulsory traffic. On the roofline this is the low-operational-
+//! intensity point of Fig. 7a; with the base layout it is additionally
+//! bandwidth-starved because all requests hit one channel per matrix.
+
+use crate::collective::TileCoord;
+use crate::ir::{Op, Program};
+
+use super::Ctx;
+
+pub fn gen(ctx: &Ctx) -> Vec<Program> {
+    let (p_dim, q_dim) = ctx.sched.logical;
+    let plan = &ctx.plan;
+    let db = ctx.sched.double_buffer;
+    let mut programs = Vec::with_capacity(p_dim * q_dim);
+
+    for lp in 0..p_dim {
+        for lq in 0..q_dim {
+            let tile = plan.remap.to_phys(lp, lq);
+            let mut prog = Program::new(tile);
+
+            let a_bytes = ctx.panel_bytes(plan.tm, plan.tk);
+            let b_bytes = ctx.panel_bytes(plan.tk, plan.tn);
+            let c_bytes = ctx.panel_bytes(plan.tm, plan.tn);
+            let nbuf = if db { 2 } else { 1 };
+            let a_bufs: Vec<_> = (0..nbuf).map(|i| prog.buf(format!("a{i}"), a_bytes)).collect();
+            let b_bufs: Vec<_> = (0..nbuf).map(|i| prog.buf(format!("b{i}"), b_bytes)).collect();
+            let c_buf = prog.buf("c", c_bytes);
+
+            let (r0, r1) = (lp * plan.tm, (lp + 1) * plan.tm);
+            let (c0, c1) = (lq * plan.tn, (lq + 1) * plan.tn);
+
+            for t in 0..plan.kp {
+                let (k0, k1) = (t * plan.tk, (t + 1) * plan.tk);
+                let (fetch_step, mmad_step) = if db {
+                    // Software pipeline: fetch t while computing t-1.
+                    (t, t + 1)
+                } else {
+                    // Strictly serial: comm and compute never share a step.
+                    (2 * t, 2 * t + 1)
+                };
+                let ab = a_bufs[t % nbuf];
+                let bb = b_bufs[t % nbuf];
+                prog.push(fetch_step, Op::DmaIn {
+                    runs: ctx.layouts.a.rect_runs(r0, r1, k0, k1),
+                    dst: ab,
+                });
+                prog.push(fetch_step, Op::DmaIn {
+                    runs: ctx.layouts.b.rect_runs(k0, k1, c0, c1),
+                    dst: bb,
+                });
+                prog.push(mmad_step, Op::Mmad {
+                    a: ab,
+                    b: bb,
+                    c: c_buf,
+                    m: plan.tm,
+                    n: plan.tn,
+                    k: plan.tk,
+                    init: t == 0,
+                });
+            }
+            let last = if db { plan.kp + 1 } else { 2 * plan.kp };
+            prog.push(last, Op::DmaOut {
+                src: c_buf,
+                runs: ctx.layouts.c.rect_runs(r0, r1, c0, c1),
+            });
+            programs.push(prog);
+        }
+    }
+    let _ = TileCoord::new(0, 0); // (import anchor)
+    programs
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::arch::{ArchConfig, GemmShape};
+    use crate::codegen::generate;
+    use crate::ir::Op;
+    use crate::schedule::Schedule;
+
+    #[test]
+    fn no_double_buffer_serializes_steps() {
+        let arch = ArchConfig::tiny(2, 2);
+        let shape = GemmShape::new(32, 32, 128);
+        let mut sched = Schedule::baseline(&arch, shape);
+        sched.tk = 32; // 4 K-panels
+        let dep_db = generate(&arch, shape, &sched, 4).unwrap();
+        sched.double_buffer = false;
+        let dep_nodb = generate(&arch, shape, &sched, 4).unwrap();
+        assert!(dep_nodb.supersteps() > dep_db.supersteps());
+    }
+
+    #[test]
+    fn fetches_cover_panels_redundantly() {
+        // Baseline refetches B for every row of tiles: total A+B DMA bytes
+        // = Q*|A| + P*|B| (the no-reuse signature).
+        let arch = ArchConfig::tiny(2, 2);
+        let shape = GemmShape::new(32, 32, 64);
+        let sched = Schedule::baseline(&arch, shape);
+        let dep = generate(&arch, shape, &sched, 4).unwrap();
+        let in_bytes: u64 = dep
+            .programs
+            .iter()
+            .flat_map(|p| p.steps.iter())
+            .flat_map(|s| s.ops.iter())
+            .map(|op| match op {
+                Op::DmaIn { runs, .. } => runs.iter().map(|r| r.bytes).sum::<u64>(),
+                _ => 0,
+            })
+            .sum();
+        let a = (dep.padded.m * dep.padded.k * 4) as u64;
+        let b = (dep.padded.k * dep.padded.n * 4) as u64;
+        assert_eq!(in_bytes, 2 * a + 2 * b);
+    }
+}

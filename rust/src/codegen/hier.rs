@@ -1,0 +1,474 @@
+//! Hierarchical schedule code generation (paper §3.3.2, Fig. 6c/6d).
+//!
+//! Two compositions of the primitive dataflows over a `g × g` group
+//! decomposition of the grid:
+//!
+//! * **Systolic-over-SUMMA** (Fig. 6c): the grid is partitioned into tile
+//!   groups; *within* each group every K panel is distributed with SUMMA
+//!   broadcasts (rectangle masks), while *across* groups the panels
+//!   propagate east/south as a group-granular systolic wavefront.
+//! * **SUMMA-over-systolic** (Fig. 6d): each K macro-panel is scattered
+//!   from its owner group column/row to *all* groups at once using strided
+//!   multicast masks (`col ≡ phase (mod g)` — the flexible mask-based
+//!   addressing at work), pre-skewed Cannon-style; groups then perform `g`
+//!   local systolic rotation steps with nearest-neighbour (wrapping)
+//!   sends.
+
+use std::collections::HashMap;
+
+use crate::collective::{synthesize, Mask, TileCoord};
+use crate::ir::{BufId, Op, Program};
+
+use super::Ctx;
+
+struct Grid {
+    programs: HashMap<TileCoord, Program>,
+    /// Per-tile named buffers.
+    bufs: HashMap<(TileCoord, &'static str, usize), BufId>,
+}
+
+impl Grid {
+    fn new(rows: usize, cols: usize) -> Grid {
+        let mut programs = HashMap::new();
+        for i in 0..rows {
+            for j in 0..cols {
+                let t = TileCoord::new(i, j);
+                programs.insert(t, Program::new(t));
+            }
+        }
+        Grid { programs, bufs: HashMap::new() }
+    }
+
+    fn buf(&mut self, t: TileCoord, name: &'static str, idx: usize, bytes: u64) -> BufId {
+        if let Some(b) = self.bufs.get(&(t, name, idx)) {
+            return *b;
+        }
+        let b = self.programs.get_mut(&t).unwrap().buf(format!("{name}{idx}"), bytes);
+        self.bufs.insert((t, name, idx), b);
+        b
+    }
+
+    fn push(&mut self, t: TileCoord, step: usize, op: Op) {
+        self.programs.get_mut(&t).unwrap().push(step, op);
+    }
+
+    /// Emit a multicast (or unicast fallback) at `step`.
+    fn bcast(
+        &mut self,
+        ctx: &Ctx,
+        step: usize,
+        root: TileCoord,
+        members: &[TileCoord],
+        src: BufId,
+        dst: impl Fn(TileCoord) -> BufId,
+        bytes: u64,
+    ) {
+        let tag = ctx.tag();
+        if let Some(mask) = synthesize(members, ctx.arch.rows, ctx.arch.cols) {
+            // If the root is not itself a member (e.g. the Cannon pre-skew
+            // scatter), it has no receive buffer: use `src` as a benign
+            // placeholder dst (the hardware writes member L1s only).
+            let root_dst = if members.contains(&root) { dst(root) } else { src };
+            self.push(root, step, Op::Multicast { src, group: mask, dst: root_dst, bytes, tag });
+            for &m in members {
+                if m != root {
+                    self.push(m, step, Op::RecvMulticast { from: root, dst: dst(m), bytes, tag });
+                }
+            }
+        } else {
+            for &m in members {
+                if m == root {
+                    continue;
+                }
+                let t = ctx.tag();
+                self.push(root, step, Op::Send { to: m, src, bytes, tag: t });
+                self.push(m, step, Op::Recv { from: root, dst: dst(m), bytes, tag: t });
+            }
+        }
+    }
+
+    /// Emit a point-to-point transfer at `step`.
+    fn xfer(
+        &mut self,
+        ctx: &Ctx,
+        step: usize,
+        from: TileCoord,
+        to: TileCoord,
+        src: BufId,
+        dst: BufId,
+        bytes: u64,
+    ) {
+        let tag = ctx.tag();
+        self.push(from, step, Op::Send { to, src, bytes, tag });
+        self.push(to, step, Op::Recv { from, dst, bytes, tag });
+    }
+
+    fn finish(self) -> Vec<Program> {
+        let mut v: Vec<Program> = self.programs.into_values().collect();
+        v.sort_by_key(|p| (p.tile.row, p.tile.col));
+        v
+    }
+}
+
+/// Fig. 6c: outer systolic over groups, inner SUMMA within each group.
+pub fn gen_systolic_over_summa(ctx: &Ctx, g: usize) -> Vec<Program> {
+    let plan = &ctx.plan;
+    let (rows, cols) = ctx.sched.logical;
+    let (gr, gc) = (rows / g, cols / g); // group-grid dimensions
+    let kp = plan.kp;
+    let a_bytes = ctx.panel_bytes(plan.tm, plan.tk);
+    let b_bytes = ctx.panel_bytes(plan.tk, plan.tn);
+    let c_bytes = ctx.panel_bytes(plan.tm, plan.tn);
+
+    let mut grid = Grid::new(rows, cols);
+    // Declare buffers up front (deterministic ids).
+    for i in 0..rows {
+        for j in 0..cols {
+            let t = TileCoord::new(i, j);
+            for idx in 0..2 {
+                grid.buf(t, "a_f", idx, a_bytes);
+                grid.buf(t, "a_r", idx, a_bytes);
+                grid.buf(t, "b_f", idx, b_bytes);
+                grid.buf(t, "b_r", idx, b_bytes);
+            }
+            grid.buf(t, "c", 0, c_bytes);
+        }
+    }
+
+    for big_i in 0..gr {
+        for big_j in 0..gc {
+            let d = big_i + big_j; // wavefront delay of this group
+            for t in 0..kp {
+                let acquire = d + t;
+                let exchange = acquire + 1;
+                let compute = acquire + 2;
+                let buf = t % 2;
+                let (k0, k1) = (t * plan.tk, (t + 1) * plan.tk);
+
+                // ---- A owners: one per group row, local column t % g.
+                for p_local in 0..g {
+                    let i = big_i * g + p_local;
+                    let owner = TileCoord::new(i, big_j * g + (t % g));
+                    let a_f = grid.buf(owner, "a_f", buf, a_bytes);
+                    if big_j == 0 {
+                        let (r0, r1) = (i * plan.tm, (i + 1) * plan.tm);
+                        grid.push(owner, acquire, Op::DmaIn {
+                            runs: ctx.layouts.a.rect_runs(r0, r1, k0, k1),
+                            dst: a_f,
+                        });
+                    }
+                    // Broadcast within the group row.
+                    let members: Vec<TileCoord> =
+                        (0..g).map(|q| TileCoord::new(i, big_j * g + q)).collect();
+                    let dsts: HashMap<TileCoord, BufId> = members
+                        .iter()
+                        .map(|&m| (m, grid.buf(m, "a_r", buf, a_bytes)))
+                        .collect();
+                    grid.bcast(ctx, exchange, owner, &members, a_f, |m| dsts[&m], a_bytes);
+                    // Forward to the east group's owner tile.
+                    if big_j + 1 < gc {
+                        let east_owner = TileCoord::new(i, (big_j + 1) * g + (t % g));
+                        let dst = grid.buf(east_owner, "a_f", buf, a_bytes);
+                        grid.xfer(ctx, exchange, owner, east_owner, a_f, dst, a_bytes);
+                    }
+                }
+
+                // ---- B owners: one per group column, local row t % g.
+                for q_local in 0..g {
+                    let j = big_j * g + q_local;
+                    let owner = TileCoord::new(big_i * g + (t % g), j);
+                    let b_f = grid.buf(owner, "b_f", buf, b_bytes);
+                    if big_i == 0 {
+                        let (c0, c1) = (j * plan.tn, (j + 1) * plan.tn);
+                        grid.push(owner, acquire, Op::DmaIn {
+                            runs: ctx.layouts.b.rect_runs(k0, k1, c0, c1),
+                            dst: b_f,
+                        });
+                    }
+                    let members: Vec<TileCoord> =
+                        (0..g).map(|p| TileCoord::new(big_i * g + p, j)).collect();
+                    let dsts: HashMap<TileCoord, BufId> = members
+                        .iter()
+                        .map(|&m| (m, grid.buf(m, "b_r", buf, b_bytes)))
+                        .collect();
+                    grid.bcast(ctx, exchange, owner, &members, b_f, |m| dsts[&m], b_bytes);
+                    if big_i + 1 < gr {
+                        let south_owner = TileCoord::new((big_i + 1) * g + (t % g), j);
+                        let dst = grid.buf(south_owner, "b_f", buf, b_bytes);
+                        grid.xfer(ctx, exchange, owner, south_owner, b_f, dst, b_bytes);
+                    }
+                }
+
+                // ---- Compute on every tile of the group.
+                for p_local in 0..g {
+                    for q_local in 0..g {
+                        let t_coord = TileCoord::new(big_i * g + p_local, big_j * g + q_local);
+                        let a_r = grid.buf(t_coord, "a_r", buf, a_bytes);
+                        let b_r = grid.buf(t_coord, "b_r", buf, b_bytes);
+                        let c = grid.buf(t_coord, "c", 0, c_bytes);
+                        grid.push(t_coord, compute, Op::Mmad {
+                            a: a_r,
+                            b: b_r,
+                            c,
+                            m: plan.tm,
+                            n: plan.tn,
+                            k: plan.tk,
+                            init: t == 0,
+                        });
+                    }
+                }
+            }
+
+            // ---- Stores, staggered by group wavefront.
+            for p_local in 0..g {
+                for q_local in 0..g {
+                    let i = big_i * g + p_local;
+                    let j = big_j * g + q_local;
+                    let t_coord = TileCoord::new(i, j);
+                    let c = grid.buf(t_coord, "c", 0, c_bytes);
+                    let (r0, r1) = (i * plan.tm, (i + 1) * plan.tm);
+                    let (c0, c1) = (j * plan.tn, (j + 1) * plan.tn);
+                    grid.push(t_coord, d + kp + 2, Op::DmaOut {
+                        src: c,
+                        runs: ctx.layouts.c.rect_runs(r0, r1, c0, c1),
+                    });
+                }
+            }
+        }
+    }
+    grid.finish()
+}
+
+/// Fig. 6d: outer SUMMA across groups (strided multicast), inner Cannon
+/// rotation within each group.
+pub fn gen_summa_over_systolic(ctx: &Ctx, g: usize) -> Vec<Program> {
+    let plan = &ctx.plan;
+    let (rows, cols) = ctx.sched.logical;
+    let (gr, gc) = (rows / g, cols / g);
+    let kp = plan.kp;
+    assert!(plan.tk % g == 0, "tk {} must divide by group {g}", plan.tk);
+    let tks = plan.tk / g; // sub-chunk K depth
+    let a_bytes = ctx.panel_bytes(plan.tm, tks);
+    let b_bytes = ctx.panel_bytes(tks, plan.tn);
+    let c_bytes = ctx.panel_bytes(plan.tm, plan.tn);
+
+    let mut grid = Grid::new(rows, cols);
+    for i in 0..rows {
+        for j in 0..cols {
+            let t = TileCoord::new(i, j);
+            for idx in 0..2 {
+                grid.buf(t, "a_f", idx, a_bytes);
+                grid.buf(t, "a_i", idx, a_bytes);
+                grid.buf(t, "a_rot", idx, a_bytes);
+                grid.buf(t, "b_f", idx, b_bytes);
+                grid.buf(t, "b_i", idx, b_bytes);
+                grid.buf(t, "b_rot", idx, b_bytes);
+            }
+            grid.buf(t, "c", 0, c_bytes);
+        }
+    }
+
+    // Buffer holding the A sub-chunk consumed at rotation step `u`.
+    let a_buf_at = |grid: &mut Grid, t: TileCoord, panel: usize, u: usize| {
+        if u == 0 {
+            grid.buf(t, "a_i", panel % 2, a_bytes)
+        } else {
+            grid.buf(t, "a_rot", u % 2, a_bytes)
+        }
+    };
+    let b_buf_at = |grid: &mut Grid, t: TileCoord, panel: usize, u: usize| {
+        if u == 0 {
+            grid.buf(t, "b_i", panel % 2, b_bytes)
+        } else {
+            grid.buf(t, "b_rot", u % 2, b_bytes)
+        }
+    };
+
+    for t in 0..kp {
+        let fetch = t * g;
+        let scatter = fetch + 1;
+        let buf = t % 2;
+
+        // ---- A: owner group column t % gc fetches + strided-multicasts.
+        let big_j = t % gc;
+        for i in 0..rows {
+            for u in 0..g {
+                let owner = TileCoord::new(i, big_j * g + u);
+                let a_f = grid.buf(owner, "a_f", buf, a_bytes);
+                let (r0, r1) = (i * plan.tm, (i + 1) * plan.tm);
+                let (k0, k1) = (t * plan.tk + u * tks, t * plan.tk + (u + 1) * tks);
+                grid.push(owner, fetch, Op::DmaIn {
+                    runs: ctx.layouts.a.rect_runs(r0, r1, k0, k1),
+                    dst: a_f,
+                });
+                // Cannon pre-skew: receiver (i, q) wants sub-chunk
+                // (i%g + q%g) % g, i.e. q%g == (u - i%g) mod g.
+                let phase = (u + g - i % g) % g;
+                let members: Vec<TileCoord> = (0..cols)
+                    .filter(|q| q % g == phase)
+                    .map(|q| TileCoord::new(i, q))
+                    .collect();
+                let mask = Mask {
+                    s_row: i,
+                    m_row: crate::collective::full_mask(rows),
+                    s_col: phase,
+                    m_col: g - 1,
+                };
+                debug_assert!(mask.covers_exactly(&members, rows, cols));
+                let dsts: HashMap<TileCoord, BufId> = members
+                    .iter()
+                    .map(|&m| (m, grid.buf(m, "a_i", buf, a_bytes)))
+                    .collect();
+                grid.bcast(ctx, scatter, owner, &members, a_f, |m| dsts[&m], a_bytes);
+            }
+        }
+
+        // ---- B: owner group row t % gr fetches + strided-multicasts.
+        let big_i = t % gr;
+        for j in 0..cols {
+            for u in 0..g {
+                let owner = TileCoord::new(big_i * g + u, j);
+                let b_f = grid.buf(owner, "b_f", buf, b_bytes);
+                let (k0, k1) = (t * plan.tk + u * tks, t * plan.tk + (u + 1) * tks);
+                let (c0, c1) = (j * plan.tn, (j + 1) * plan.tn);
+                grid.push(owner, fetch, Op::DmaIn {
+                    runs: ctx.layouts.b.rect_runs(k0, k1, c0, c1),
+                    dst: b_f,
+                });
+                // Receiver (p, j) wants sub-chunk (p%g + j%g) % g.
+                let phase = (u + g - j % g) % g;
+                let members: Vec<TileCoord> = (0..rows)
+                    .filter(|p| p % g == phase)
+                    .map(|p| TileCoord::new(p, j))
+                    .collect();
+                let dsts: HashMap<TileCoord, BufId> = members
+                    .iter()
+                    .map(|&m| (m, grid.buf(m, "b_i", buf, b_bytes)))
+                    .collect();
+                grid.bcast(ctx, scatter, owner, &members, b_f, |m| dsts[&m], b_bytes);
+            }
+        }
+
+        // ---- Inner Cannon: g rotation steps per macro panel.
+        for u in 0..g {
+            let step = fetch + 2 + u;
+            for i in 0..rows {
+                for j in 0..cols {
+                    let tile = TileCoord::new(i, j);
+                    let a = a_buf_at(&mut grid, tile, t, u);
+                    let b = b_buf_at(&mut grid, tile, t, u);
+                    let c = grid.buf(tile, "c", 0, c_bytes);
+                    grid.push(tile, step, Op::Mmad {
+                        a,
+                        b,
+                        c,
+                        m: plan.tm,
+                        n: plan.tn,
+                        k: tks,
+                        init: t == 0 && u == 0,
+                    });
+                    if u + 1 < g {
+                        // Rotate A west (wrap within group), B north.
+                        let gj = j / g;
+                        let west = TileCoord::new(i, gj * g + (j % g + g - 1) % g);
+                        let a_dst = a_buf_at(&mut grid, west, t, u + 1);
+                        grid.xfer(ctx, step, tile, west, a, a_dst, a_bytes);
+                        let gi = i / g;
+                        let north = TileCoord::new(gi * g + (i % g + g - 1) % g, j);
+                        let b_dst = b_buf_at(&mut grid, north, t, u + 1);
+                        grid.xfer(ctx, step, tile, north, b, b_dst, b_bytes);
+                    }
+                }
+            }
+        }
+    }
+
+    // ---- Stores.
+    let last = (kp - 1) * g + 2 + (g - 1);
+    for i in 0..rows {
+        for j in 0..cols {
+            let tile = TileCoord::new(i, j);
+            let c = grid.buf(tile, "c", 0, c_bytes);
+            let (r0, r1) = (i * plan.tm, (i + 1) * plan.tm);
+            let (c0, c1) = (j * plan.tn, (j + 1) * plan.tn);
+            grid.push(tile, last + 1, Op::DmaOut {
+                src: c,
+                runs: ctx.layouts.c.rect_runs(r0, r1, c0, c1),
+            });
+        }
+    }
+    grid.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::arch::{ArchConfig, GemmShape};
+    use crate::codegen::generate;
+    use crate::ir::Op;
+    use crate::schedule::{Dataflow, Schedule};
+
+    fn sched_with(arch: &ArchConfig, shape: GemmShape, df: Dataflow) -> Schedule {
+        Schedule { dataflow: df, ..Schedule::summa(arch, shape) }
+    }
+
+    #[test]
+    fn systolic_over_summa_lowers() {
+        let arch = ArchConfig::tiny(4, 4);
+        let shape = GemmShape::new(64, 64, 128);
+        let dep = generate(
+            &arch,
+            shape,
+            &sched_with(&arch, shape, Dataflow::SystolicOverSumma { group: 2 }),
+            4,
+        )
+        .unwrap();
+        // Every tile computes and the wavefront staggers group stores.
+        assert_eq!(dep.programs.len(), 16);
+        let mut store_steps = std::collections::BTreeSet::new();
+        for p in &dep.programs {
+            for (i, s) in p.steps.iter().enumerate() {
+                if s.ops.iter().any(|o| matches!(o, Op::DmaOut { .. })) {
+                    store_steps.insert(i);
+                }
+            }
+        }
+        assert_eq!(store_steps.len(), 3, "{store_steps:?}"); // d in {0,1,2}
+    }
+
+    #[test]
+    fn summa_over_systolic_uses_strided_masks() {
+        let arch = ArchConfig::tiny(4, 4);
+        let shape = GemmShape::new(64, 64, 128);
+        let dep = generate(
+            &arch,
+            shape,
+            &sched_with(&arch, shape, Dataflow::SummaOverSystolic { group: 2 }),
+            4,
+        )
+        .unwrap();
+        // The outer SUMMA must emit strided multicasts (m_col == g-1 == 1
+        // means "cols ≡ phase (mod 2)" — a strided group).
+        let strided = dep
+            .programs
+            .iter()
+            .flat_map(|p| p.steps.iter())
+            .flat_map(|s| s.ops.iter())
+            .any(|op| matches!(op, Op::Multicast { group, .. } if group.m_col == 1 || group.m_row == 1));
+        assert!(strided, "no strided multicast found");
+    }
+
+    #[test]
+    fn hierarchical_flops_match() {
+        // (Also covered by the codegen-wide test; kept here for focus.)
+        let arch = ArchConfig::tiny(4, 4);
+        let shape = GemmShape::new(32, 32, 64);
+        for df in [
+            Dataflow::SystolicOverSumma { group: 2 },
+            Dataflow::SummaOverSystolic { group: 2 },
+        ] {
+            let dep = generate(&arch, shape, &sched_with(&arch, shape, df), 4).unwrap();
+            let total: f64 = dep.programs.iter().map(|p| p.flops()).sum();
+            assert!((total - dep.padded.flops()).abs() < 1e-3, "{df:?}");
+        }
+    }
+}

@@ -1,0 +1,278 @@
+//! Schedule → per-PE IR lowering: the "Generate and Optimize" stage of the
+//! DiT workflow (paper Fig. 4).
+//!
+//! Each dataflow primitive (§3.3.2, Fig. 6) has its own generator:
+//!
+//! * [`baseline`] — no on-chip sharing; every tile fetches its own panels.
+//! * [`summa`] — SUMMA and split-K SUMMA (with cluster remap, pipeline
+//!   staging and double-buffering knobs).
+//! * [`systolic`] — nearest-neighbour wavefront.
+//! * [`hier`] — the two hierarchical compositions (systolic-over-SUMMA and
+//!   SUMMA-over-systolic).
+//!
+//! Generators emit [`Multicast`](crate::ir::Op::Multicast)/[`Reduce`]
+//! (crate::ir::Op::Reduce) collectives whenever the group is expressible as
+//! a hardware `(S, M)` mask (via [`crate::collective::synthesize`]); when a
+//! group is *not* expressible the generator degrades to point-to-point
+//! sends, so the cost of collective-unfriendly mappings is visible in the
+//! simulation — the mechanism behind the paper's Insight 2.
+
+pub mod baseline;
+pub mod hier;
+pub mod summa;
+pub mod systolic;
+
+use std::cell::Cell;
+
+use crate::arch::{ArchConfig, GemmShape};
+use crate::ir::Deployment;
+use crate::layout::{ChannelAssign, GemmLayouts, MatrixLayout, Placement};
+use crate::schedule::{Dataflow, Plan, Schedule};
+
+/// Shared generator context.
+pub struct Ctx<'a> {
+    pub arch: &'a ArchConfig,
+    pub shape: GemmShape,
+    pub sched: &'a Schedule,
+    pub plan: Plan,
+    /// A/B element width in bytes (perf: `arch.elem_bytes`; functional: 4).
+    pub elem: usize,
+    pub layouts: GemmLayouts,
+    tag: Cell<u32>,
+}
+
+impl<'a> Ctx<'a> {
+    /// Fresh communication tag (globally unique within the deployment).
+    pub fn tag(&self) -> u32 {
+        let t = self.tag.get();
+        self.tag.set(t + 1);
+        t
+    }
+
+    /// Bytes of an `r × c` element panel at the generation element width.
+    pub fn panel_bytes(&self, r: usize, c: usize) -> u64 {
+        (r * c * self.elem) as u64
+    }
+}
+
+/// Build the HBM layouts a schedule implies (padded dimensions).
+///
+/// Optimized layouts (§3.2) make the *placement tile equal the fetch unit*
+/// and round-robin blocks over every channel; the base layout stores each
+/// matrix row-major in a single channel (A→0, B→1, C→2), reproducing the
+/// paper's unoptimized reference.
+pub fn build_layouts(
+    arch: &ArchConfig,
+    sched: &Schedule,
+    plan: &Plan,
+    elem: usize,
+) -> GemmLayouts {
+    let p = sched.logical.0;
+    let q = sched.logical.1;
+    let kb = plan.splits * plan.kp; // K-panel blocks across the padded K
+    let pad = plan.padded;
+    if sched.opt_layout {
+        let chans = arch.hbm.num_channels();
+        let mut layouts = GemmLayouts {
+            a: MatrixLayout {
+                base_offset: 0,
+                rows: pad.m,
+                cols: pad.k,
+                elem_bytes: elem,
+                split: (p, kb),
+                tile: (plan.tm, plan.tk),
+                placement: Placement::RowMajor,
+                channels: ChannelAssign::RoundRobin { first: 0, count: chans },
+            },
+            b: MatrixLayout {
+                base_offset: 0,
+                rows: pad.k,
+                cols: pad.n,
+                elem_bytes: elem,
+                split: (kb, q),
+                tile: (plan.tk, plan.tn),
+                placement: Placement::RowMajor,
+                channels: ChannelAssign::RoundRobin { first: 0, count: chans },
+            },
+            c: MatrixLayout {
+                base_offset: 0,
+                rows: pad.m,
+                cols: pad.n,
+                elem_bytes: elem,
+                split: (p, q),
+                tile: (plan.tm, plan.tn),
+                placement: Placement::RowMajor,
+                channels: ChannelAssign::RoundRobin { first: 0, count: chans },
+            },
+        };
+        // Stack A, B, C back-to-back within the shared channels.
+        layouts.b.base_offset = layouts.a.max_extent();
+        layouts.c.base_offset = layouts.b.base_offset + layouts.b.max_extent();
+        layouts
+    } else {
+        let mut layouts = GemmLayouts {
+            a: MatrixLayout::base(pad.m, pad.k, elem, 0),
+            b: MatrixLayout::base(pad.k, pad.n, elem, 1 % arch.hbm.num_channels()),
+            c: MatrixLayout::base(pad.m, pad.n, elem, 2 % arch.hbm.num_channels()),
+        };
+        // On small channel counts the base layout wraps onto shared
+        // channels: stack to avoid overlap there too.
+        layouts.b.base_offset = layouts.a.max_extent();
+        layouts.c.base_offset = layouts.b.base_offset + layouts.b.max_extent();
+        layouts
+    }
+}
+
+/// Lower a schedule to a validated [`Deployment`].
+///
+/// `elem` is the element width to generate at: `arch.elem_bytes` for
+/// performance runs, 4 (f32) for functional verification.
+pub fn generate(
+    arch: &ArchConfig,
+    shape: GemmShape,
+    sched: &Schedule,
+    elem: usize,
+) -> anyhow::Result<Deployment> {
+    sched.validate(arch)?;
+    let plan = sched.plan(arch, shape);
+    let layouts = build_layouts(arch, sched, &plan, elem);
+    layouts.validate()?;
+    let ctx = Ctx {
+        arch,
+        shape,
+        sched,
+        plan: plan.clone(),
+        elem,
+        layouts,
+        tag: Cell::new(0),
+    };
+    let programs = match sched.dataflow {
+        Dataflow::Baseline => baseline::gen(&ctx),
+        Dataflow::Summa | Dataflow::SplitKSumma { .. } => summa::gen(&ctx),
+        Dataflow::Systolic => systolic::gen(&ctx),
+        Dataflow::SystolicOverSumma { group } => hier::gen_systolic_over_summa(&ctx, group),
+        Dataflow::SummaOverSystolic { group } => hier::gen_summa_over_systolic(&ctx, group),
+    };
+    let dep = Deployment {
+        rows: arch.rows,
+        cols: arch.cols,
+        programs,
+        layouts: ctx.layouts,
+        shape,
+        padded: plan.padded,
+        descr: sched.name(),
+    };
+    crate::ir::validate(arch, &dep)?;
+    Ok(dep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ArchConfig;
+    use crate::ir::Op;
+    use crate::schedule::{candidates, Schedule};
+
+    /// Every candidate schedule for a suite of shapes must lower to a
+    /// *valid* deployment whose MMAD flop total covers the padded problem.
+    #[test]
+    fn all_candidates_lower_and_validate() {
+        let arch = ArchConfig::tiny(4, 4);
+        for shape in [
+            GemmShape::new(64, 64, 64),
+            GemmShape::new(128, 96, 256),
+            GemmShape::new(32, 264, 512), // flat-ish, ragged N
+        ] {
+            for sched in candidates(&arch, shape) {
+                let dep = generate(&arch, shape, &sched, 4)
+                    .unwrap_or_else(|e| panic!("{} on {shape}: {e}", sched.name()));
+                let total: f64 = dep.programs.iter().map(|p| p.flops()).sum();
+                let padded_flops = dep.padded.flops();
+                assert!(
+                    (total - padded_flops).abs() < 1e-3,
+                    "{}: mmad flops {} != padded {}",
+                    sched.name(),
+                    total,
+                    padded_flops
+                );
+            }
+        }
+    }
+
+    /// Every output element must be stored exactly once across the grid.
+    #[test]
+    fn c_store_coverage() {
+        let arch = ArchConfig::tiny(4, 4);
+        let shape = GemmShape::new(64, 64, 64);
+        for sched in candidates(&arch, shape) {
+            let dep = generate(&arch, shape, &sched, 4).unwrap();
+            let stored: u64 = dep
+                .programs
+                .iter()
+                .flat_map(|p| p.steps.iter())
+                .flat_map(|s| s.ops.iter())
+                .map(|op| match op {
+                    Op::DmaOut { runs, .. } => runs
+                        .iter()
+                        .filter(|r| {
+                            dep.layouts.c.channels_used().contains(&r.channel)
+                        })
+                        .map(|r| r.bytes)
+                        .sum::<u64>(),
+                    _ => 0,
+                })
+                .sum();
+            let c_bytes = (dep.padded.m * dep.padded.n * 4) as u64;
+            assert_eq!(stored, c_bytes, "{}: stored {stored} != C {c_bytes}", sched.name());
+        }
+    }
+
+    #[test]
+    fn collective_schedules_emit_multicasts() {
+        let arch = ArchConfig::tiny(4, 4);
+        let shape = GemmShape::new(64, 64, 128);
+        let dep = generate(&arch, shape, &Schedule::summa(&arch, shape), 4).unwrap();
+        let n_mc = dep
+            .programs
+            .iter()
+            .flat_map(|p| p.steps.iter())
+            .flat_map(|s| s.ops.iter())
+            .filter(|op| matches!(op, Op::Multicast { .. }))
+            .count();
+        assert!(n_mc > 0, "SUMMA must use hardware multicast");
+    }
+
+    #[test]
+    fn baseline_never_uses_noc() {
+        let arch = ArchConfig::tiny(4, 4);
+        let shape = GemmShape::new(64, 64, 128);
+        let dep = generate(&arch, shape, &Schedule::baseline(&arch, shape), 4).unwrap();
+        for p in &dep.programs {
+            for s in &p.steps {
+                for op in &s.ops {
+                    assert!(
+                        matches!(op, Op::DmaIn { .. } | Op::DmaOut { .. } | Op::Mmad { .. }),
+                        "baseline emitted {op:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn splitk_emits_reductions() {
+        let arch = ArchConfig::tiny(4, 4);
+        let shape = GemmShape::new(64, 64, 256);
+        let sched = Schedule::splitk(&arch, shape, 2);
+        let dep = generate(&arch, shape, &sched, 4).unwrap();
+        let n_red = dep
+            .programs
+            .iter()
+            .flat_map(|p| p.steps.iter())
+            .flat_map(|s| s.ops.iter())
+            .filter(|op| matches!(op, Op::Reduce { .. }))
+            .count();
+        // Every tile contributes one reduction.
+        assert_eq!(n_red, arch.num_tiles(), "{}", sched.name());
+    }
+}

@@ -1,0 +1,365 @@
+//! SUMMA and split-K SUMMA code generation (paper §3.3.2, Fig. 6a/6e).
+//!
+//! Per K-panel `t`: the owner tile of each logical row fetches that row's
+//! A panel and multicasts it across the row; the owner of each logical
+//! column multicasts the B panel down the column; everyone accumulates
+//! `C += A_panel @ B_panel`. With split-K, the grid is carved into
+//! `S` K-groups (bands of logical rows), each running SUMMA over its own
+//! K-slice; partials then meet in a strided-mask NoC reduction whose root
+//! (chosen by the [`ReducePolicy`](crate::schedule::ReducePolicy)) commits
+//! the output tile to HBM.
+//!
+//! Knobs handled here:
+//! * **double buffering** (§3.3.1) — pipelined fetch/broadcast/compute
+//!   (3-stage software pipeline) vs strictly serialized supersteps;
+//! * **pipeline stages** (Fig. 8) — logical rows are divided into stage
+//!   bands whose timelines are offset by one superstep each, trading
+//!   simultaneous-start compute for spread-out HBM store bursts;
+//! * **cluster remap** (§3.1.2) — all tile coordinates go through
+//!   [`Remap`](crate::schedule::remap::Remap), and collective masks are
+//!   synthesized on the *physical* grid.
+
+use crate::collective::{synthesize, TileCoord};
+use crate::ir::{BufId, Op, Program};
+use crate::schedule::ReducePolicy;
+
+use super::Ctx;
+
+/// Emit a multicast from `root` to `members` if the group is mask-
+/// expressible, otherwise degrade to point-to-point sends (Insight 2's
+/// fallback). Returns ops to add: (root ops, per-member ops).
+pub(crate) fn bcast(
+    ctx: &Ctx,
+    root: TileCoord,
+    members: &[TileCoord],
+    src: BufId,
+    dst_of: impl Fn(TileCoord) -> BufId,
+    bytes: u64,
+) -> (Vec<Op>, Vec<(TileCoord, Op)>) {
+    let tag = ctx.tag();
+    if let Some(mask) = synthesize(members, ctx.arch.rows, ctx.arch.cols) {
+        let mut member_ops = Vec::new();
+        for &m in members {
+            if m != root {
+                member_ops.push((m, Op::RecvMulticast { from: root, dst: dst_of(m), bytes, tag }));
+            }
+        }
+        (
+            vec![Op::Multicast { src, group: mask, dst: dst_of(root), bytes, tag }],
+            member_ops,
+        )
+    } else {
+        // Unicast fallback: one send per non-root member.
+        let mut root_ops = Vec::new();
+        let mut member_ops = Vec::new();
+        for &m in members {
+            if m == root {
+                continue;
+            }
+            let t = ctx.tag();
+            root_ops.push(Op::Send { to: m, src, bytes, tag: t });
+            member_ops.push((m, Op::Recv { from: root, dst: dst_of(m), bytes, tag: t }));
+        }
+        (root_ops, member_ops)
+    }
+}
+
+struct TileSlot {
+    prog: Program,
+    a_f: BufId,
+    a_r: Vec<BufId>,
+    b_f: BufId,
+    b_r: Vec<BufId>,
+    c: BufId,
+}
+
+pub fn gen(ctx: &Ctx) -> Vec<Program> {
+    let plan = &ctx.plan;
+    let (p_dim, q_dim) = ctx.sched.logical;
+    let splits = plan.splits;
+    let db = ctx.sched.double_buffer;
+    let nbuf = if db { 2 } else { 1 };
+    let stages = ctx.sched.pipeline_stages;
+    let band_rows = p_dim.div_ceil(stages);
+    // Stage bands are offset by kp/stages supersteps so each band's HBM
+    // store burst lands inside the other bands' compute window (Fig. 8b's
+    // store-contention relief); for compute-bound shapes the added drain
+    // is pure loss (Fig. 8a).
+    let stage_stride = (plan.kp / stages).max(1);
+
+    let a_bytes = ctx.panel_bytes(plan.tm, plan.tk);
+    let b_bytes = ctx.panel_bytes(plan.tk, plan.tn);
+    // C accumulates at the output element width (the paper's DeepGEMM-
+    // style FP8 pipeline stores FP8 C); functional runs are elem=4 (f32).
+    let c_bytes = ctx.panel_bytes(plan.tm, plan.tn);
+    let c_hbm_bytes = ctx.panel_bytes(plan.tm, plan.tn);
+
+    // Index: slot[s][p][q]
+    let mut slots: Vec<Vec<Vec<TileSlot>>> = (0..splits)
+        .map(|s| {
+            (0..p_dim)
+                .map(|p| {
+                    (0..q_dim)
+                        .map(|q| {
+                            let tile = plan.remap.to_phys(s * p_dim + p, q);
+                            let mut prog = Program::new(tile);
+                            // Staging buffers are single: a tile owns every
+                            // Q-th (resp. band-th) panel, and BSP entry-state
+                            // semantics let a fetch overwrite the buffer in
+                            // the superstep after its broadcast read.
+                            let a_f = prog.buf("a_f", a_bytes);
+                            let a_r =
+                                (0..nbuf).map(|i| prog.buf(format!("a_r{i}"), a_bytes)).collect();
+                            let b_f = prog.buf("b_f", b_bytes);
+                            let b_r =
+                                (0..nbuf).map(|i| prog.buf(format!("b_r{i}"), b_bytes)).collect();
+                            let c = prog.buf("c", c_bytes);
+                            TileSlot { prog, a_f, a_r, b_f, b_r, c }
+                        })
+                        .collect()
+                })
+                .collect()
+        })
+        .collect();
+
+    // Timeline per panel t (band offset `off`):
+    //   db:  fetch @ off+t,   bcast @ off+t+1,   mmad @ off+t+2
+    //   !db: fetch @ off+3t,  bcast @ off+3t+1,  mmad @ off+3t+2
+    let fetch_step = |off: usize, t: usize| if db { off + t } else { off + 3 * t };
+    let bcast_step = |off: usize, t: usize| fetch_step(off, t) + 1;
+    let mmad_step = |off: usize, t: usize| fetch_step(off, t) + 2;
+    let epilogue = |off: usize| {
+        if db {
+            off + plan.kp + 2
+        } else {
+            off + 3 * (plan.kp - 1) + 3
+        }
+    };
+
+    for s in 0..splits {
+        for p in 0..p_dim {
+            let off = (p / band_rows) * stage_stride; // pipeline-stage offset
+            let band = p / band_rows;
+            let band_start = band * band_rows;
+            let rows_in_band = band_rows.min(p_dim - band_start);
+            for q in 0..q_dim {
+                let (r0, r1) = (p * plan.tm, (p + 1) * plan.tm);
+                let (cc0, cc1) = (q * plan.tn, (q + 1) * plan.tn);
+
+                for t in 0..plan.kp {
+                    // Global K range of this group's panel t.
+                    let k0 = (s * plan.kp + t) * plan.tk;
+                    let k1 = k0 + plan.tk;
+                    let buf = t % nbuf;
+
+                    // ---- A: row owner fetches + broadcasts along the row.
+                    let a_owner_q = t % q_dim;
+                    if q == a_owner_q {
+                        let src = slots[s][p][q].a_f;
+                        let dst_self = slots[s][p][q].a_r[buf];
+                        slots[s][p][q].prog.push(fetch_step(off, t), Op::DmaIn {
+                            runs: ctx.layouts.a.rect_runs(r0, r1, k0, k1),
+                            dst: src,
+                        });
+                        let members: Vec<TileCoord> = (0..q_dim)
+                            .map(|qq| plan.remap.to_phys(s * p_dim + p, qq))
+                            .collect();
+                        let root = plan.remap.to_phys(s * p_dim + p, q);
+                        let (root_ops, member_ops) =
+                            bcast(ctx, root, &members, src, |_| dst_self, a_bytes);
+                        let step = bcast_step(off, t);
+                        for op in root_ops {
+                            slots[s][p][q].prog.push(step, op);
+                        }
+                        for (m, op) in member_ops {
+                            let (lr, lq) = plan.remap.to_logical(m);
+                            debug_assert_eq!(lr, s * p_dim + p);
+                            // Fix dst buffer for the actual member slot.
+                            let dst = slots[s][p][lq].a_r[buf];
+                            let op = retarget(op, dst);
+                            slots[s][p][lq].prog.push(step, op);
+                        }
+                    }
+
+                    // ---- B: column owner within the stage band.
+                    let b_owner_p = band_start + (t % rows_in_band);
+                    if p == b_owner_p {
+                        let src = slots[s][p][q].b_f;
+                        let dst_self = slots[s][p][q].b_r[buf];
+                        slots[s][p][q].prog.push(fetch_step(off, t), Op::DmaIn {
+                            runs: ctx.layouts.b.rect_runs(k0, k1, cc0, cc1),
+                            dst: src,
+                        });
+                        let members: Vec<TileCoord> = (band_start..band_start + rows_in_band)
+                            .map(|pp| plan.remap.to_phys(s * p_dim + pp, q))
+                            .collect();
+                        let root = plan.remap.to_phys(s * p_dim + p, q);
+                        let (root_ops, member_ops) =
+                            bcast(ctx, root, &members, src, |_| dst_self, b_bytes);
+                        let step = bcast_step(off, t);
+                        for op in root_ops {
+                            slots[s][p][q].prog.push(step, op);
+                        }
+                        for (m, op) in member_ops {
+                            let (lr, lq) = plan.remap.to_logical(m);
+                            let pp = lr - s * p_dim;
+                            let dst = slots[s][pp][lq].b_r[buf];
+                            let op = retarget(op, dst);
+                            slots[s][pp][lq].prog.push(step, op);
+                        }
+                    }
+
+                    // ---- Compute.
+                    let slot = &mut slots[s][p][q];
+                    slot.prog.push(mmad_step(off, t), Op::Mmad {
+                        a: slot.a_r[buf],
+                        b: slot.b_r[buf],
+                        c: slot.c,
+                        m: plan.tm,
+                        n: plan.tn,
+                        k: plan.tk,
+                        init: t == 0,
+                    });
+                }
+
+                // ---- Epilogue: direct store, or split-K reduction + store.
+                let ep = epilogue(off);
+                if splits == 1 {
+                    let slot = &mut slots[s][p][q];
+                    slot.prog.push(ep, Op::DmaOut {
+                        src: slot.c,
+                        runs: ctx.layouts.c.rect_runs(r0, r1, cc0, cc1),
+                    });
+                } else if s == 0 {
+                    // Emit the reduction once per (p, q): all K-groups join.
+                    let members: Vec<TileCoord> =
+                        (0..splits).map(|ss| plan.remap.to_phys(ss * p_dim + p, q)).collect();
+                    let root_s = match ctx.sched.reduce_policy {
+                        ReducePolicy::FirstGroup => 0,
+                        ReducePolicy::RoundRobin => (p * q_dim + q) % splits,
+                    };
+                    let root = members[root_s];
+                    let mask = synthesize(&members, ctx.arch.rows, ctx.arch.cols)
+                        .unwrap_or_else(|| {
+                            panic!("split-K reduce group not mask-expressible: {members:?}")
+                        });
+                    let tag = ctx.tag();
+                    for (ss, &m) in members.iter().enumerate() {
+                        let slot = &mut slots[ss][p][q];
+                        debug_assert_eq!(slot.prog.tile, m);
+                        // In-place reduction: the root's own C accumulator
+                        // receives the combined sum at the barrier.
+                        slot.prog.push(ep, Op::Reduce {
+                            group: mask,
+                            root,
+                            src: slot.c,
+                            dst: slot.c,
+                            bytes: c_hbm_bytes,
+                            tag,
+                        });
+                        if m == root {
+                            slot.prog.push(ep + 1, Op::DmaOut {
+                                src: slot.c,
+                                runs: ctx.layouts.c.rect_runs(r0, r1, cc0, cc1),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    slots
+        .into_iter()
+        .flatten()
+        .flatten()
+        .map(|s| s.prog)
+        .collect()
+}
+
+/// Replace the destination buffer of a Recv/RecvMulticast op.
+fn retarget(op: Op, dst: BufId) -> Op {
+    match op {
+        Op::RecvMulticast { from, bytes, tag, .. } => Op::RecvMulticast { from, dst, bytes, tag },
+        Op::Recv { from, bytes, tag, .. } => Op::Recv { from, dst, bytes, tag },
+        other => other,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::arch::{ArchConfig, GemmShape};
+    use crate::codegen::generate;
+    use crate::ir::Op;
+    use crate::schedule::Schedule;
+
+    #[test]
+    fn summa_reuses_panels_via_broadcast() {
+        // SUMMA fetches each operand byte exactly once (per padded matrix).
+        let arch = ArchConfig::tiny(4, 4);
+        let shape = GemmShape::new(64, 64, 128);
+        let dep = generate(&arch, shape, &Schedule::summa(&arch, shape), 4).unwrap();
+        let in_bytes: u64 = dep
+            .programs
+            .iter()
+            .flat_map(|p| p.steps.iter())
+            .flat_map(|s| s.ops.iter())
+            .map(|op| match op {
+                Op::DmaIn { runs, .. } => runs.iter().map(|r| r.bytes).sum::<u64>(),
+                _ => 0,
+            })
+            .sum();
+        let compulsory = ((dep.padded.m + dep.padded.n) * dep.padded.k * 4) as u64;
+        assert_eq!(in_bytes, compulsory);
+    }
+
+    #[test]
+    fn pipeline_stages_stagger_stores() {
+        let arch = ArchConfig::tiny(4, 4);
+        let shape = GemmShape::new(64, 64, 128);
+        let mut sched = Schedule::summa(&arch, shape);
+        sched.pipeline_stages = 2;
+        let dep = generate(&arch, shape, &sched, 4).unwrap();
+        // Stores from different stage bands land in different supersteps.
+        let mut store_steps = std::collections::BTreeSet::new();
+        for p in &dep.programs {
+            for (i, s) in p.steps.iter().enumerate() {
+                if s.ops.iter().any(|o| matches!(o, Op::DmaOut { .. })) {
+                    store_steps.insert(i);
+                }
+            }
+        }
+        assert!(store_steps.len() >= 2, "{store_steps:?}");
+    }
+
+    #[test]
+    fn splitk_roundrobin_spreads_reduce_roots() {
+        let arch = ArchConfig::tiny(4, 4);
+        let shape = GemmShape::new(32, 64, 256);
+        let sched = Schedule::splitk(&arch, shape, 2);
+        let dep = generate(&arch, shape, &sched, 4).unwrap();
+        let mut roots = std::collections::BTreeSet::new();
+        for p in &dep.programs {
+            for s in &p.steps {
+                for op in &s.ops {
+                    if let Op::Reduce { root, .. } = op {
+                        roots.insert((root.row, root.col));
+                    }
+                }
+            }
+        }
+        // RoundRobin policy must use more than one root tile row.
+        let rows: std::collections::BTreeSet<usize> = roots.iter().map(|r| r.0).collect();
+        assert!(rows.len() > 1, "{roots:?}");
+    }
+
+    #[test]
+    fn flat_remap_generates_valid_summa() {
+        let arch = ArchConfig::tiny(4, 4);
+        let shape = GemmShape::new(16, 264, 512); // flat, ragged N
+        let sched = Schedule::flat_remap(&arch, shape, 4);
+        let dep = generate(&arch, shape, &sched, 4).unwrap();
+        assert!(dep.programs.len() == 16);
+        assert!(dep.supersteps() > 0);
+    }
+}

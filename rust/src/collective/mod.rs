@@ -1,0 +1,365 @@
+//! Mask-based NoC collective group calculus (paper §2.1, Eq. 1).
+//!
+//! SoftHier's hardware collectives address a *group* of tiles with selector
+//! coordinates and masks carried in the packet header:
+//!
+//! ```text
+//! Tile_group = { Tile(i,j) ∈ P | (i & M_row) = S_row  ∧  (j & M_col) = S_col }
+//! ```
+//!
+//! A broadcast delivers one payload to every member; a reduction combines
+//! one contribution per member at a root. This module implements the
+//! calculus itself plus *mask synthesis*: turning the groups the deployment
+//! schedules need (rows, columns, power-of-two aligned rectangles, strided
+//! subsets, logical-grid rows after a cluster-index remap) into
+//! `(S, M)` pairs, and verifying exact coverage.
+
+use crate::util::is_pow2;
+
+/// A tile coordinate on the physical grid (row-major).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TileCoord {
+    pub row: usize,
+    pub col: usize,
+}
+
+impl TileCoord {
+    pub fn new(row: usize, col: usize) -> Self {
+        TileCoord { row, col }
+    }
+
+    /// Linear (row-major) index on a grid with `cols` columns.
+    pub fn linear(&self, cols: usize) -> usize {
+        self.row * cols + self.col
+    }
+
+    /// Inverse of [`TileCoord::linear`].
+    pub fn from_linear(lin: usize, cols: usize) -> Self {
+        TileCoord::new(lin / cols, lin % cols)
+    }
+
+    /// Manhattan (mesh-hop) distance.
+    pub fn hops_to(&self, other: TileCoord) -> usize {
+        self.row.abs_diff(other.row) + self.col.abs_diff(other.col)
+    }
+}
+
+impl std::fmt::Display for TileCoord {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "({},{})", self.row, self.col)
+    }
+}
+
+/// A collective addressing mask: the packet-header `(S, M)` pairs.
+///
+/// Tile `(i, j)` is a member iff `(i & m_row) == s_row && (j & m_col) == s_col`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Mask {
+    pub s_row: usize,
+    pub m_row: usize,
+    pub s_col: usize,
+    pub m_col: usize,
+}
+
+impl Mask {
+    /// Hardware membership test — Eq. (1) verbatim.
+    #[inline]
+    pub fn contains(&self, t: TileCoord) -> bool {
+        (t.row & self.m_row) == self.s_row && (t.col & self.m_col) == self.s_col
+    }
+
+    /// Enumerate members on a `rows × cols` grid, row-major order.
+    pub fn members(&self, rows: usize, cols: usize) -> Vec<TileCoord> {
+        let mut out = Vec::new();
+        for i in 0..rows {
+            if (i & self.m_row) != self.s_row {
+                continue;
+            }
+            for j in 0..cols {
+                if (j & self.m_col) == self.s_col {
+                    out.push(TileCoord::new(i, j));
+                }
+            }
+        }
+        out
+    }
+
+    /// Member count on a grid without materializing the member list.
+    pub fn count(&self, rows: usize, cols: usize) -> usize {
+        let r = (0..rows).filter(|i| (i & self.m_row) == self.s_row).count();
+        let c = (0..cols).filter(|j| (j & self.m_col) == self.s_col).count();
+        r * c
+    }
+
+    /// All tiles of the grid. (`M = 0` matches everything when `S = 0`.)
+    pub fn all() -> Mask {
+        Mask { s_row: 0, m_row: 0, s_col: 0, m_col: 0 }
+    }
+
+    /// The single tile `(i, j)` on a grid no larger than `rows × cols`
+    /// (masks select all coordinate bits).
+    pub fn single(t: TileCoord, rows: usize, cols: usize) -> Mask {
+        Mask {
+            s_row: t.row,
+            m_row: full_mask(rows),
+            s_col: t.col,
+            m_col: full_mask(cols),
+        }
+    }
+
+    /// Physical row `i` (all columns).
+    pub fn row(i: usize, rows: usize) -> Mask {
+        Mask { s_row: i, m_row: full_mask(rows), s_col: 0, m_col: 0 }
+    }
+
+    /// Physical column `j` (all rows).
+    pub fn col(j: usize, cols: usize) -> Mask {
+        Mask { s_row: 0, m_row: 0, s_col: j, m_col: full_mask(cols) }
+    }
+
+    /// A power-of-two aligned rectangle: rows `[r0, r0+h)`, cols
+    /// `[c0, c0+w)` where `h`/`w` are powers of two and `r0`/`c0` are
+    /// aligned to them — the constraint the AND-mask hardware imposes.
+    pub fn rect(r0: usize, c0: usize, h: usize, w: usize, rows: usize, cols: usize) -> Option<Mask> {
+        if !is_pow2(h) || !is_pow2(w) || r0 % h != 0 || c0 % w != 0 {
+            return None;
+        }
+        Some(Mask {
+            s_row: r0,
+            m_row: full_mask(rows) & !(h - 1),
+            s_col: c0,
+            m_col: full_mask(cols) & !(w - 1),
+        })
+    }
+
+    /// A strided row subset: rows ≡ `phase (mod stride)` (power-of-two
+    /// stride), all columns — the "strided broadcast" used by split-K
+    /// (§3.3.2).
+    pub fn row_stride(phase: usize, stride: usize) -> Option<Mask> {
+        if !is_pow2(stride) || phase >= stride {
+            return None;
+        }
+        Some(Mask { s_row: phase, m_row: stride - 1, s_col: 0, m_col: 0 })
+    }
+
+    /// A strided column subset: cols ≡ `phase (mod stride)`.
+    pub fn col_stride(phase: usize, stride: usize) -> Option<Mask> {
+        if !is_pow2(stride) || phase >= stride {
+            return None;
+        }
+        Some(Mask { s_row: 0, m_row: 0, s_col: phase, m_col: stride - 1 })
+    }
+
+    /// Does this mask cover *exactly* the given tile set on the grid?
+    pub fn covers_exactly(&self, tiles: &[TileCoord], rows: usize, cols: usize) -> bool {
+        let mut want: Vec<TileCoord> = tiles.to_vec();
+        want.sort();
+        want.dedup();
+        self.members(rows, cols) == want
+    }
+}
+
+/// All-ones mask wide enough for coordinates `0..extent`.
+pub fn full_mask(extent: usize) -> usize {
+    if extent <= 1 {
+        // A 1-wide dimension still needs its (only) coordinate bit checked;
+        // use mask 1 so selector 0 matches only coordinate 0.
+        1
+    } else {
+        (1usize << (usize::BITS - (extent - 1).leading_zeros())) - 1
+    }
+}
+
+/// Synthesize a mask covering an arbitrary tile set, if the AND-mask
+/// hardware can express it (the set must be a Cartesian product of
+/// mask-expressible row and column sets). Returns `None` otherwise —
+/// callers then fall back to iterated unicast (which the simulator charges
+/// accordingly, making the cost of non-collective-friendly mappings
+/// visible, as the paper's Insight 2 demands).
+pub fn synthesize(tiles: &[TileCoord], rows: usize, cols: usize) -> Option<Mask> {
+    if tiles.is_empty() {
+        return None;
+    }
+    let mut rset: Vec<usize> = tiles.iter().map(|t| t.row).collect();
+    let mut cset: Vec<usize> = tiles.iter().map(|t| t.col).collect();
+    rset.sort_unstable();
+    rset.dedup();
+    cset.sort_unstable();
+    cset.dedup();
+    // Must be a full Cartesian product.
+    if tiles.len() != rset.len() * cset.len() {
+        let mut uniq = tiles.to_vec();
+        uniq.sort();
+        uniq.dedup();
+        if uniq.len() != rset.len() * cset.len() {
+            return None;
+        }
+    }
+    let (s_row, m_row) = synthesize_1d(&rset, rows)?;
+    let (s_col, m_col) = synthesize_1d(&cset, cols)?;
+    let mask = Mask { s_row, m_row, s_col, m_col };
+    mask.covers_exactly(tiles, rows, cols).then_some(mask)
+}
+
+/// 1-D synthesis: find `(s, m)` with `{ x < extent | x & m == s }  == set`.
+fn synthesize_1d(set: &[usize], extent: usize) -> Option<(usize, usize)> {
+    debug_assert!(!set.is_empty());
+    let full = full_mask(extent);
+    // Bits that vary across the set must be 0 in the mask; bits constant
+    // across the set should be 1 (checked) with selector = the constant.
+    let first = set[0];
+    let varying = set.iter().fold(0usize, |acc, &x| acc | (x ^ first));
+    let m = full & !varying;
+    let s = first & m;
+    // Verify: the candidate is the *unique* maximal mask; if the set is not
+    // exactly the matched set, no AND-mask expresses it.
+    let matched: Vec<usize> = (0..extent).filter(|&x| x & m == s).collect();
+    (matched == set).then_some((s, m))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickprop::check;
+
+    #[test]
+    fn full_mask_widths() {
+        assert_eq!(full_mask(1), 1);
+        assert_eq!(full_mask(2), 1);
+        assert_eq!(full_mask(32), 31);
+        assert_eq!(full_mask(33), 63);
+    }
+
+    #[test]
+    fn row_and_col_groups() {
+        let m = Mask::row(3, 32);
+        assert_eq!(m.count(32, 32), 32);
+        assert!(m.contains(TileCoord::new(3, 17)));
+        assert!(!m.contains(TileCoord::new(4, 17)));
+
+        let m = Mask::col(5, 32);
+        assert_eq!(m.count(32, 32), 32);
+        assert!(m.contains(TileCoord::new(9, 5)));
+        assert!(!m.contains(TileCoord::new(9, 6)));
+    }
+
+    #[test]
+    fn single_tile_group() {
+        let m = Mask::single(TileCoord::new(7, 9), 32, 32);
+        assert_eq!(m.members(32, 32), vec![TileCoord::new(7, 9)]);
+    }
+
+    #[test]
+    fn rect_groups() {
+        // 2x2-aligned rectangle inside a 4x4 grid (paper Fig. 6c inner groups).
+        let m = Mask::rect(2, 0, 2, 2, 4, 4).unwrap();
+        assert_eq!(
+            m.members(4, 4),
+            vec![
+                TileCoord::new(2, 0),
+                TileCoord::new(2, 1),
+                TileCoord::new(3, 0),
+                TileCoord::new(3, 1)
+            ]
+        );
+        // Misaligned or non-pow2 rectangles are not expressible.
+        assert!(Mask::rect(1, 0, 2, 2, 4, 4).is_none());
+        assert!(Mask::rect(0, 0, 3, 2, 4, 4).is_none());
+    }
+
+    #[test]
+    fn strided_groups() {
+        // Every second row, phase 1 (split-K strided broadcast).
+        let m = Mask::row_stride(1, 2).unwrap();
+        let members = m.members(4, 2);
+        assert_eq!(
+            members,
+            vec![
+                TileCoord::new(1, 0),
+                TileCoord::new(1, 1),
+                TileCoord::new(3, 0),
+                TileCoord::new(3, 1)
+            ]
+        );
+        assert!(Mask::row_stride(2, 2).is_none());
+        assert!(Mask::row_stride(0, 3).is_none());
+    }
+
+    #[test]
+    fn synthesis_recovers_standard_groups() {
+        for grid in [(4usize, 4usize), (8, 8), (32, 32)] {
+            let (rows, cols) = grid;
+            let row_set = Mask::row(rows / 2, rows).members(rows, cols);
+            let got = synthesize(&row_set, rows, cols).unwrap();
+            assert!(got.covers_exactly(&row_set, rows, cols));
+
+            let col_set = Mask::col(cols - 1, cols).members(rows, cols);
+            let got = synthesize(&col_set, rows, cols).unwrap();
+            assert!(got.covers_exactly(&col_set, rows, cols));
+        }
+    }
+
+    #[test]
+    fn synthesis_rejects_non_product_sets() {
+        // An L-shape is not a Cartesian product -> not mask-expressible.
+        let l = vec![TileCoord::new(0, 0), TileCoord::new(0, 1), TileCoord::new(1, 0)];
+        assert!(synthesize(&l, 4, 4).is_none());
+    }
+
+    #[test]
+    fn synthesis_rejects_unaligned_ranges() {
+        // Rows {1, 2} share no AND-mask (1 = 0b01, 2 = 0b10).
+        let set: Vec<TileCoord> = (0..4).map(|j| TileCoord::new(1, j)).collect::<Vec<_>>()
+            .into_iter()
+            .chain((0..4).map(|j| TileCoord::new(2, j)))
+            .collect();
+        assert!(synthesize(&set, 4, 4).is_none());
+    }
+
+    #[test]
+    fn prop_synthesis_roundtrips_every_mask() {
+        // Any (S, M) pair's member set must synthesize back to an
+        // equivalent mask — the calculus is closed under synthesis.
+        check("mask synthesis roundtrip", 200, |rng| {
+            let rows = *rng.choose(&[2usize, 4, 8, 16, 32]);
+            let cols = *rng.choose(&[2usize, 4, 8, 16, 32]);
+            let mask = Mask {
+                s_row: rng.below(rows as u64) as usize,
+                m_row: rng.below(full_mask(rows) as u64 + 1) as usize,
+                s_col: rng.below(cols as u64) as usize,
+                m_col: rng.below(full_mask(cols) as u64 + 1) as usize,
+            };
+            let members = mask.members(rows, cols);
+            if members.is_empty() {
+                return; // selector outside masked space: legal, empty
+            }
+            let again = synthesize(&members, rows, cols)
+                .unwrap_or_else(|| panic!("unsynthesizable mask {mask:?} -> {members:?}"));
+            assert!(again.covers_exactly(&members, rows, cols));
+        });
+    }
+
+    #[test]
+    fn prop_count_matches_members() {
+        check("count == members.len()", 100, |rng| {
+            let rows = rng.range(1, 16);
+            let cols = rng.range(1, 16);
+            let mask = Mask {
+                s_row: rng.below(16) as usize,
+                m_row: rng.below(16) as usize,
+                s_col: rng.below(16) as usize,
+                m_col: rng.below(16) as usize,
+            };
+            assert_eq!(mask.count(rows, cols), mask.members(rows, cols).len());
+        });
+    }
+
+    #[test]
+    fn linear_roundtrip() {
+        check("linear index roundtrip", 100, |rng| {
+            let cols = rng.range(1, 64);
+            let t = TileCoord::new(rng.range(0, 63), rng.range(0, cols - 1));
+            assert_eq!(TileCoord::from_linear(t.linear(cols), cols), t);
+        });
+    }
+}

@@ -1,0 +1,226 @@
+//! The deployment coordinator: DiT's end-to-end driver.
+//!
+//! Ties the stages of the paper's workflow (Fig. 4) together:
+//!
+//! * [`deploy`] — schedule → validated per-PE programs (performance
+//!   element width) — the "Generate and Optimize" stage;
+//! * [`deploy_functional`] — the same at f32 for numerical runs;
+//! * [`verify`] — functional execution vs the PJRT golden GEMM (the
+//!   "Benchmark … compares results against reference outputs" stage);
+//! * [`autotune`] — "we iterate through our predefined schedule
+//!   candidates, guided by the insights above, to automatically select
+//!   the kernel achieving the best performance" (§4.1.4).
+
+use anyhow::Result;
+
+use crate::arch::{ArchConfig, GemmShape};
+use crate::codegen::generate;
+pub use crate::ir::Deployment;
+use crate::schedule::{candidates, Schedule};
+use crate::sim::{simulate, RunStats};
+
+/// Lower a schedule for performance simulation (arch element width).
+pub fn deploy(arch: &ArchConfig, shape: GemmShape, sched: &Schedule) -> Result<Deployment> {
+    generate(arch, shape, sched, arch.elem_bytes)
+}
+
+/// Lower a schedule for functional (f32) execution.
+pub fn deploy_functional(
+    arch: &ArchConfig,
+    shape: GemmShape,
+    sched: &Schedule,
+) -> Result<Deployment> {
+    generate(arch, shape, sched, 4)
+}
+
+/// Deploy with automatic output chunking: if the schedule's per-tile
+/// working set exceeds L1 (huge shapes like 16384×32768), the problem is
+/// split into `chunks` column slices executed back-to-back — the same
+/// multi-pass strategy a real deployment uses when an output tile cannot
+/// stay resident. Returns one deployment per chunk.
+pub fn deploy_chunked(
+    arch: &ArchConfig,
+    shape: GemmShape,
+    sched: &Schedule,
+) -> Result<Vec<Deployment>> {
+    let l1 = arch.tile.l1_bytes as u64;
+    if crate::schedule::l1_estimate(arch, shape, sched) <= l1 {
+        return Ok(vec![deploy(arch, shape, sched)?]);
+    }
+    // Choose the chunking whose re-derived K-panel depth is largest (the
+    // matrix-engine fill efficiency grows with tk), breaking ties toward
+    // fewer chunks (less A re-fetch traffic).
+    let mut best: Option<(usize, usize, crate::schedule::Schedule)> = None; // (chunks, tk, sched)
+    for chunks in [2usize, 4, 8, 16, 32, 64] {
+        let chunk_n = shape.n.div_ceil(chunks);
+        let chunk_shape = GemmShape::new(shape.m, chunk_n, shape.k);
+        let tuned = crate::schedule::retune_tk(arch, chunk_shape, sched);
+        if crate::schedule::l1_estimate(arch, chunk_shape, &tuned) <= l1
+            && best.as_ref().map(|(_, tk, _)| tuned.tk > *tk).unwrap_or(true)
+        {
+            best = Some((chunks, tuned.tk, tuned));
+        }
+    }
+    let Some((chunks, _, tuned)) = best else {
+        anyhow::bail!("no chunking makes {} fit L1 for {}", shape, sched.name())
+    };
+    let chunk_n = shape.n.div_ceil(chunks);
+    let mut deps = Vec::with_capacity(chunks);
+    let mut remaining = shape.n;
+    while remaining > 0 {
+        let n = remaining.min(chunk_n);
+        deps.push(deploy(arch, GemmShape::new(shape.m, n, shape.k), &tuned)?);
+        remaining -= n;
+    }
+    Ok(deps)
+}
+
+/// Simulate a (possibly chunked) deployment: chunks execute sequentially,
+/// so makespans add and traffic accumulates.
+pub fn simulate_chunked(arch: &ArchConfig, deps: &[Deployment]) -> Result<RunStats> {
+    anyhow::ensure!(!deps.is_empty(), "no deployments");
+    let mut acc: Option<RunStats> = None;
+    for dep in deps {
+        let s = simulate(arch, dep)?;
+        acc = Some(match acc {
+            None => s,
+            Some(mut a) => {
+                a.makespan_ns += s.makespan_ns;
+                a.useful_flops += s.useful_flops;
+                a.total_flops += s.total_flops;
+                a.hbm_read_bytes += s.hbm_read_bytes;
+                a.hbm_write_bytes += s.hbm_write_bytes;
+                a.noc_link_bytes += s.noc_link_bytes;
+                a.compute_busy_ns += s.compute_busy_ns;
+                a.supersteps += s.supersteps;
+                let base = a.step_end_ns.last().copied().unwrap_or(0.0);
+                a.step_end_ns.extend(s.step_end_ns.iter().map(|t| t + base));
+                a
+            }
+        });
+    }
+    Ok(acc.unwrap())
+}
+
+/// Deploy (chunking if needed) and simulate in one call — what the paper-
+/// figure benches use.
+pub fn simulate_schedule(
+    arch: &ArchConfig,
+    shape: GemmShape,
+    sched: &Schedule,
+) -> Result<RunStats> {
+    let deps = deploy_chunked(arch, shape, sched)?;
+    simulate_chunked(arch, &deps)
+}
+
+/// One scored autotuning candidate.
+#[derive(Debug, Clone)]
+pub struct Scored {
+    pub schedule: Schedule,
+    pub stats: RunStats,
+}
+
+/// Autotuning outcome: candidates ranked by simulated makespan.
+#[derive(Debug, Clone)]
+pub struct AutotuneResult {
+    /// All scored candidates, best first.
+    pub ranking: Vec<Scored>,
+}
+
+impl AutotuneResult {
+    pub fn best(&self) -> &Scored {
+        &self.ranking[0]
+    }
+}
+
+/// Enumerate, lower, simulate and rank every candidate schedule.
+/// Candidates that fail to lower (e.g. L1 overflow on an exotic shape) are
+/// skipped — the tuner only returns deployable schedules.
+pub fn autotune(arch: &ArchConfig, shape: GemmShape) -> Result<AutotuneResult> {
+    let mut ranking = Vec::new();
+    for sched in candidates(arch, shape) {
+        let Ok(stats) = simulate_schedule(arch, shape, &sched) else { continue };
+        ranking.push(Scored { schedule: sched, stats });
+    }
+    anyhow::ensure!(!ranking.is_empty(), "no deployable schedule candidate for {shape}");
+    ranking.sort_by(|a, b| a.stats.makespan_ns.total_cmp(&b.stats.makespan_ns));
+    Ok(AutotuneResult { ranking })
+}
+
+/// Numerical verification report.
+#[derive(Debug, Clone)]
+pub struct VerifyReport {
+    pub shape: GemmShape,
+    pub schedule: String,
+    pub max_abs_diff: f32,
+    pub tolerance: f32,
+}
+
+impl VerifyReport {
+    pub fn passed(&self) -> bool {
+        self.max_abs_diff <= self.tolerance
+    }
+}
+
+/// Functionally execute a schedule and compare against the PJRT golden
+/// GEMM (the JAX/Pallas artifact). Requires `make artifacts`.
+pub fn verify(
+    arch: &ArchConfig,
+    shape: GemmShape,
+    sched: &Schedule,
+    oracle: &mut crate::runtime::Oracle,
+    seed: u64,
+) -> Result<VerifyReport> {
+    let dep = deploy_functional(arch, shape, sched)?;
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let a = rng.f32_vec(shape.m * shape.k);
+    let b = rng.f32_vec(shape.k * shape.n);
+    let got = crate::functional::run_gemm(arch, &dep, &a, &b)?;
+    let want = oracle.gemm(shape.m, shape.n, shape.k, &a, &b)?;
+    let diff = crate::functional::max_abs_diff(&got, &want);
+    // f32 accumulation-order tolerance, scaled with K.
+    let tolerance = 1e-5 * (shape.k as f32).sqrt().max(1.0) * 8.0;
+    Ok(VerifyReport {
+        shape,
+        schedule: sched.name(),
+        max_abs_diff: diff,
+        tolerance,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::Dataflow;
+
+    #[test]
+    fn autotune_ranks_candidates() {
+        let arch = ArchConfig::tiny(4, 4);
+        let shape = GemmShape::new(128, 128, 256);
+        let result = autotune(&arch, shape).unwrap();
+        assert!(result.ranking.len() >= 4);
+        // Ranking is sorted.
+        for w in result.ranking.windows(2) {
+            assert!(w[0].stats.makespan_ns <= w[1].stats.makespan_ns);
+        }
+        // The naive base-layout baseline never wins.
+        let best = result.best();
+        assert!(
+            !(best.schedule.dataflow == Dataflow::Baseline && !best.schedule.opt_layout),
+            "baseline won autotuning: {}",
+            best.schedule.name()
+        );
+    }
+
+    #[test]
+    fn autotune_prefers_remap_for_flat_gemm() {
+        // Insight 4: flat GEMM wants cluster remapping + 3D tiling.
+        let arch = ArchConfig::tiny(4, 4);
+        let shape = GemmShape::new(16, 512, 512);
+        let result = autotune(&arch, shape).unwrap();
+        let best = result.best();
+        let flat_wins = best.schedule.logical.0 == 1
+            || matches!(best.schedule.dataflow, Dataflow::SplitKSumma { .. });
+        assert!(flat_wins, "best for flat was {}", best.schedule.name());
+    }
+}

@@ -1,0 +1,635 @@
+//! The per-PE program IR (paper contribution 2).
+//!
+//! "An Intermediate Representation (IR) explicitly models per-PE workload,
+//! including data movement, workload mapping and inter-tile communication."
+//!
+//! A [`Program`] is one compute tile's fully-unrolled instruction stream,
+//! organized as BSP supersteps (§3.3.3). Within a superstep the tile's
+//! engines run **concurrently**:
+//!
+//! * the *compute phase* — [`Op::Mmad`] tasklets, executed in program order
+//!   on the matrix engine, reading L1 state as of superstep entry (plus
+//!   their own chain of writes);
+//! * the *communication phase* — DMA transfers and NoC sends/collectives,
+//!   each **reading L1 state as of superstep entry** and making writes
+//!   visible only at the superstep boundary.
+//!
+//! The barrier at superstep end waits for both phases on every tile. These
+//! semantics make double buffering (§3.3.1) a first-class property: a
+//! buffer may not be both compute-touched and comm-written in the same
+//! superstep — [`validate`] rejects programs that race, which is exactly
+//! the discipline the AST-based superstep description in the paper encodes
+//! ("designating the buffers used for computation and those used
+//! concurrently for communication within each superstep").
+
+use std::collections::HashMap;
+
+use crate::arch::{ArchConfig, GemmShape};
+use crate::collective::{Mask, TileCoord};
+use crate::layout::{GemmLayouts, Run};
+
+/// Index of an L1 buffer within a tile's [`Program`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BufId(pub u32);
+
+/// An L1 buffer declaration. Sizes are in **bytes** for the element width
+/// the deployment was generated at (perf runs use `arch.elem_bytes`,
+/// functional runs are always f32).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BufDecl {
+    pub name: String,
+    pub bytes: u64,
+}
+
+/// One IR operation. Communication ops carry a `tag` that pairs senders
+/// with receivers inside the same superstep.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// HBM → L1. `runs` are the coalesced channel bursts (from
+    /// [`MatrixLayout::rect_runs`](crate::layout::MatrixLayout::rect_runs)).
+    DmaIn { runs: Vec<Run>, dst: BufId },
+    /// L1 → HBM.
+    DmaOut { src: BufId, runs: Vec<Run> },
+    /// Hardware collective multicast: this tile is the root; every member
+    /// of `group` (which may include the root) gets `bytes` from `src`
+    /// into its own `dst` buffer. Non-root members must post a matching
+    /// [`Op::RecvMulticast`].
+    Multicast { src: BufId, group: Mask, dst: BufId, bytes: u64, tag: u32 },
+    /// Receive leg of a multicast rooted at `from`.
+    RecvMulticast { from: TileCoord, dst: BufId, bytes: u64, tag: u32 },
+    /// Point-to-point send (systolic neighbour traffic).
+    Send { to: TileCoord, src: BufId, bytes: u64, tag: u32 },
+    /// Point-to-point receive.
+    Recv { from: TileCoord, dst: BufId, bytes: u64, tag: u32 },
+    /// Hardware collective reduction: every member of `group` (the root
+    /// included) posts this op with its `src` contribution; the elementwise
+    /// f32 sum lands in the **root's** `dst` at the superstep boundary.
+    Reduce { group: Mask, root: TileCoord, src: BufId, dst: BufId, bytes: u64, tag: u32 },
+    /// Matrix-engine tasklet: `c (+)= a[m×k] @ b[k×n]` (f32 accumulate;
+    /// `init` zeroes `c` first). Dimensions are in elements.
+    Mmad { a: BufId, b: BufId, c: BufId, m: usize, n: usize, k: usize, init: bool },
+}
+
+impl Op {
+    /// Buffers this op reads during the superstep.
+    pub fn reads(&self) -> Vec<BufId> {
+        match self {
+            Op::DmaIn { .. } | Op::RecvMulticast { .. } | Op::Recv { .. } => vec![],
+            Op::DmaOut { src, .. } | Op::Send { src, .. } => vec![*src],
+            Op::Multicast { src, .. } => vec![*src],
+            Op::Reduce { src, .. } => vec![*src],
+            Op::Mmad { a, b, c, init, .. } => {
+                if *init {
+                    vec![*a, *b]
+                } else {
+                    vec![*a, *b, *c]
+                }
+            }
+        }
+    }
+
+    /// Buffers this op writes (visible at superstep end for comm ops,
+    /// immediately within the compute chain for Mmad).
+    pub fn writes(&self) -> Vec<BufId> {
+        match self {
+            Op::DmaIn { dst, .. } | Op::RecvMulticast { dst, .. } | Op::Recv { dst, .. } => {
+                vec![*dst]
+            }
+            Op::Multicast { dst, .. } => vec![*dst],
+            Op::Reduce { .. } => vec![], // root's dst handled separately
+            Op::DmaOut { .. } | Op::Send { .. } => vec![],
+            Op::Mmad { c, .. } => vec![*c],
+        }
+    }
+
+    pub fn is_compute(&self) -> bool {
+        matches!(self, Op::Mmad { .. })
+    }
+}
+
+/// One BSP superstep of one tile.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Superstep {
+    pub ops: Vec<Op>,
+}
+
+/// One tile's complete program.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Program {
+    pub tile: TileCoord,
+    pub bufs: Vec<BufDecl>,
+    pub steps: Vec<Superstep>,
+}
+
+impl Program {
+    pub fn new(tile: TileCoord) -> Program {
+        Program { tile, bufs: Vec::new(), steps: Vec::new() }
+    }
+
+    /// Declare a buffer, returning its id.
+    pub fn buf(&mut self, name: impl Into<String>, bytes: u64) -> BufId {
+        let id = BufId(self.bufs.len() as u32);
+        self.bufs.push(BufDecl { name: name.into(), bytes });
+        id
+    }
+
+    /// Total L1 bytes declared.
+    pub fn l1_bytes(&self) -> u64 {
+        self.bufs.iter().map(|b| b.bytes).sum()
+    }
+
+    /// Ensure the program has at least `n` supersteps.
+    pub fn reserve_steps(&mut self, n: usize) {
+        if self.steps.len() < n {
+            self.steps.resize(n, Superstep::default());
+        }
+    }
+
+    /// Append `op` to superstep `step` (growing as needed).
+    pub fn push(&mut self, step: usize, op: Op) {
+        self.reserve_steps(step + 1);
+        self.steps[step].ops.push(op);
+    }
+
+    /// Total MMAD flops in this program.
+    pub fn flops(&self) -> f64 {
+        self.steps
+            .iter()
+            .flat_map(|s| &s.ops)
+            .map(|op| match op {
+                Op::Mmad { m, n, k, .. } => 2.0 * *m as f64 * *n as f64 * *k as f64,
+                _ => 0.0,
+            })
+            .sum()
+    }
+}
+
+/// A deployed GEMM: per-tile programs + the layouts they address.
+///
+/// This is the artifact the "Generate and Optimize" stage of the DiT
+/// workflow produces, and what both executors (performance [`crate::sim`],
+/// functional [`crate::functional`]) consume.
+#[derive(Debug, Clone)]
+pub struct Deployment {
+    /// Physical grid the programs target.
+    pub rows: usize,
+    pub cols: usize,
+    /// One program per participating tile.
+    pub programs: Vec<Program>,
+    /// HBM layouts (padded dimensions).
+    pub layouts: GemmLayouts,
+    /// Original (unpadded) problem.
+    pub shape: GemmShape,
+    /// Padded problem actually computed.
+    pub padded: GemmShape,
+    /// Human-readable schedule description (for reports).
+    pub descr: String,
+}
+
+impl Deployment {
+    /// Useful flops (of the *unpadded* problem — padding work is overhead).
+    pub fn useful_flops(&self) -> f64 {
+        self.shape.flops()
+    }
+
+    /// Number of supersteps (max across tiles).
+    pub fn supersteps(&self) -> usize {
+        self.programs.iter().map(|p| p.steps.len()).max().unwrap_or(0)
+    }
+}
+
+/// IR validation errors.
+#[derive(Debug, thiserror::Error)]
+pub enum IrError {
+    #[error("tile {tile}: buffer {buf:?} undeclared (op {op})")]
+    UndeclaredBuf { tile: TileCoord, buf: BufId, op: String },
+    #[error("tile {tile}: L1 over budget: {used} > {cap} bytes")]
+    L1OverBudget { tile: TileCoord, used: u64, cap: u64 },
+    #[error("tile {tile}: buffer {buf:?} too small: needs {need}, has {have}")]
+    BufTooSmall { tile: TileCoord, buf: BufId, need: u64, have: u64 },
+    #[error("tile {tile} step {step}: double-buffer race on {buf:?}: compute touches while comm writes")]
+    BufferRace { tile: TileCoord, step: usize, buf: BufId },
+    #[error("step {step} tag {tag}: unmatched communication: {detail}")]
+    UnmatchedComm { step: usize, tag: u32, detail: String },
+    #[error("tile {tile} step {step}: {detail}")]
+    Malformed { tile: TileCoord, step: usize, detail: String },
+    #[error("duplicate program for tile {0}")]
+    DuplicateProgram(TileCoord),
+}
+
+/// Validate a deployment against an architecture: buffer discipline,
+/// L1 capacity, communication matching, mask sanity.
+pub fn validate(arch: &ArchConfig, dep: &Deployment) -> Result<(), IrError> {
+    let mut by_tile: HashMap<TileCoord, &Program> = HashMap::new();
+    for p in &dep.programs {
+        if by_tile.insert(p.tile, p).is_some() {
+            return Err(IrError::DuplicateProgram(p.tile));
+        }
+    }
+
+    // Per-tile checks.
+    for p in &dep.programs {
+        let cap = arch.tile.l1_bytes as u64;
+        if p.l1_bytes() > cap {
+            return Err(IrError::L1OverBudget { tile: p.tile, used: p.l1_bytes(), cap });
+        }
+        for (step_idx, step) in p.steps.iter().enumerate() {
+            let mut compute_touched: Vec<BufId> = Vec::new();
+            let mut comm_written: Vec<BufId> = Vec::new();
+            for op in &step.ops {
+                for b in op.reads().iter().chain(op.writes().iter()) {
+                    if b.0 as usize >= p.bufs.len() {
+                        return Err(IrError::UndeclaredBuf {
+                            tile: p.tile,
+                            buf: *b,
+                            op: format!("{op:?}"),
+                        });
+                    }
+                }
+                check_sizes(p, step_idx, op)?;
+                if op.is_compute() {
+                    compute_touched.extend(op.reads());
+                    compute_touched.extend(op.writes());
+                } else {
+                    comm_written.extend(op.writes());
+                    if let Op::Reduce { root, dst, .. } = op {
+                        if *root == p.tile {
+                            comm_written.push(*dst);
+                        }
+                    }
+                }
+            }
+            // Double-buffer discipline: comm writes may not touch buffers
+            // the compute phase touches in the same superstep.
+            for b in &comm_written {
+                if compute_touched.contains(b) {
+                    return Err(IrError::BufferRace { tile: p.tile, step: step_idx, buf: *b });
+                }
+            }
+        }
+    }
+
+    // Communication matching, per superstep and tag.
+    let max_steps = dep.supersteps();
+    for step in 0..max_steps {
+        validate_comm_step(arch, dep, &by_tile, step)?;
+    }
+    Ok(())
+}
+
+fn check_sizes(p: &Program, step: usize, op: &Op) -> Result<(), IrError> {
+    let have = |b: &BufId| p.bufs[b.0 as usize].bytes;
+    let need_check = |b: &BufId, need: u64| -> Result<(), IrError> {
+        if have(b) < need {
+            Err(IrError::BufTooSmall { tile: p.tile, buf: *b, need, have: have(b) })
+        } else {
+            Ok(())
+        }
+    };
+    match op {
+        Op::DmaIn { runs, dst } => {
+            let total: u64 = runs.iter().map(|r| r.bytes).sum();
+            if total == 0 {
+                return Err(IrError::Malformed {
+                    tile: p.tile,
+                    step,
+                    detail: "zero-byte DmaIn".into(),
+                });
+            }
+            need_check(dst, total)
+        }
+        Op::DmaOut { src, runs } => {
+            let total: u64 = runs.iter().map(|r| r.bytes).sum();
+            need_check(src, total)
+        }
+        Op::Multicast { src, dst, bytes, .. } => {
+            need_check(src, *bytes)?;
+            need_check(dst, *bytes)
+        }
+        Op::RecvMulticast { dst, bytes, .. } | Op::Recv { dst, bytes, .. } => {
+            need_check(dst, *bytes)
+        }
+        Op::Send { src, bytes, .. } => need_check(src, *bytes),
+        Op::Reduce { src, dst, bytes, root, .. } => {
+            need_check(src, *bytes)?;
+            if *root == p.tile {
+                need_check(dst, *bytes)
+            } else {
+                Ok(())
+            }
+        }
+        Op::Mmad { .. } => Ok(()), // element-size dependent; executors check
+    }
+}
+
+fn validate_comm_step(
+    arch: &ArchConfig,
+    dep: &Deployment,
+    by_tile: &HashMap<TileCoord, &Program>,
+    step: usize,
+) -> Result<(), IrError> {
+    let mut mc_roots: HashMap<u32, (TileCoord, Mask, u64)> = HashMap::new();
+    let mut mc_recvs: HashMap<u32, Vec<(TileCoord, TileCoord, u64)>> = HashMap::new();
+    let mut sends: HashMap<(u32, TileCoord, TileCoord), u64> = HashMap::new();
+    let mut recvs: HashMap<(u32, TileCoord, TileCoord), u64> = HashMap::new();
+    let mut reduces: HashMap<u32, Vec<(TileCoord, Mask, TileCoord, u64)>> = HashMap::new();
+
+    for p in &dep.programs {
+        let Some(s) = p.steps.get(step) else { continue };
+        for op in &s.ops {
+            match op {
+                Op::Multicast { group, bytes, tag, .. } => {
+                    if mc_roots.insert(*tag, (p.tile, *group, *bytes)).is_some() {
+                        return Err(IrError::UnmatchedComm {
+                            step,
+                            tag: *tag,
+                            detail: "two multicast roots share a tag".into(),
+                        });
+                    }
+                }
+                Op::RecvMulticast { from, bytes, tag, .. } => {
+                    mc_recvs.entry(*tag).or_default().push((p.tile, *from, *bytes));
+                }
+                Op::Send { to, bytes, tag, .. } => {
+                    sends.insert((*tag, p.tile, *to), *bytes);
+                }
+                Op::Recv { from, bytes, tag, .. } => {
+                    recvs.insert((*tag, *from, p.tile), *bytes);
+                }
+                Op::Reduce { group, root, bytes, tag, .. } => {
+                    reduces.entry(*tag).or_default().push((p.tile, *group, *root, *bytes));
+                }
+                _ => {}
+            }
+        }
+    }
+
+    for (tag, (root, group, bytes)) in &mc_roots {
+        let members = group.members(arch.rows, arch.cols);
+        if members.is_empty() {
+            return Err(IrError::UnmatchedComm {
+                step,
+                tag: *tag,
+                detail: format!("multicast from {root} to empty group"),
+            });
+        }
+        for m in &members {
+            if *m == *root {
+                continue; // self-delivery is local
+            }
+            if by_tile.contains_key(m) {
+                let got = mc_recvs
+                    .get(tag)
+                    .map(|v| v.iter().any(|(t, f, b)| t == m && f == root && b == bytes));
+                if got != Some(true) {
+                    return Err(IrError::UnmatchedComm {
+                        step,
+                        tag: *tag,
+                        detail: format!("member {m} missing RecvMulticast from {root}"),
+                    });
+                }
+            }
+        }
+    }
+    for (tag, rs) in &mc_recvs {
+        for (tile, from, bytes) in rs {
+            match mc_roots.get(tag) {
+                Some((root, group, b)) if root == from && b == bytes && group.contains(*tile) => {}
+                _ => {
+                    return Err(IrError::UnmatchedComm {
+                        step,
+                        tag: *tag,
+                        detail: format!("{tile} RecvMulticast without matching root {from}"),
+                    })
+                }
+            }
+        }
+    }
+    for ((tag, from, to), bytes) in &sends {
+        match recvs.get(&(*tag, *from, *to)) {
+            Some(b) if b == bytes => {}
+            _ => {
+                return Err(IrError::UnmatchedComm {
+                    step,
+                    tag: *tag,
+                    detail: format!("send {from}->{to} has no matching recv"),
+                })
+            }
+        }
+    }
+    for ((tag, from, to), bytes) in &recvs {
+        match sends.get(&(*tag, *from, *to)) {
+            Some(b) if b == bytes => {}
+            _ => {
+                return Err(IrError::UnmatchedComm {
+                    step,
+                    tag: *tag,
+                    detail: format!("recv {to}<-{from} has no matching send"),
+                })
+            }
+        }
+    }
+    for (tag, contribs) in &reduces {
+        let (_, group, root, bytes) = contribs[0];
+        let members = group.members(arch.rows, arch.cols);
+        for (tile, g, r, b) in contribs {
+            if *g != group || *r != root || *b != bytes {
+                return Err(IrError::UnmatchedComm {
+                    step,
+                    tag: *tag,
+                    detail: "reduce members disagree on group/root/bytes".into(),
+                });
+            }
+            if !group.contains(*tile) {
+                return Err(IrError::UnmatchedComm {
+                    step,
+                    tag: *tag,
+                    detail: format!("{tile} reduces but is not in the group"),
+                });
+            }
+        }
+        let contributing: Vec<TileCoord> = contribs.iter().map(|c| c.0).collect();
+        for m in &members {
+            if by_tile.contains_key(m) && !contributing.contains(m) {
+                return Err(IrError::UnmatchedComm {
+                    step,
+                    tag: *tag,
+                    detail: format!("group member {m} missing Reduce contribution"),
+                });
+            }
+        }
+        if !group.contains(root) {
+            return Err(IrError::UnmatchedComm {
+                step,
+                tag: *tag,
+                detail: format!("reduce root {root} outside its group"),
+            });
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ArchConfig;
+    use crate::layout::{GemmLayouts, MatrixLayout};
+
+    fn tiny_layouts() -> GemmLayouts {
+        GemmLayouts {
+            a: MatrixLayout::base(16, 16, 4, 0),
+            b: MatrixLayout::base(16, 16, 4, 1),
+            c: MatrixLayout::base(16, 16, 4, 2),
+        }
+    }
+
+    fn dep_of(programs: Vec<Program>) -> Deployment {
+        Deployment {
+            rows: 2,
+            cols: 2,
+            programs,
+            layouts: tiny_layouts(),
+            shape: GemmShape::new(16, 16, 16),
+            padded: GemmShape::new(16, 16, 16),
+            descr: "test".into(),
+        }
+    }
+
+    fn arch() -> ArchConfig {
+        ArchConfig::tiny(2, 2)
+    }
+
+    #[test]
+    fn minimal_valid_program() {
+        let l = tiny_layouts();
+        let mut p = Program::new(TileCoord::new(0, 0));
+        let a = p.buf("a", 1024);
+        let b = p.buf("b", 1024);
+        let c = p.buf("c", 1024);
+        p.push(0, Op::DmaIn { runs: l.a.rect_runs(0, 16, 0, 16), dst: a });
+        p.push(0, Op::DmaIn { runs: l.b.rect_runs(0, 16, 0, 16), dst: b });
+        p.push(1, Op::Mmad { a, b, c, m: 16, n: 16, k: 16, init: true });
+        p.push(2, Op::DmaOut { src: c, runs: l.c.rect_runs(0, 16, 0, 16) });
+        validate(&arch(), &dep_of(vec![p])).unwrap();
+    }
+
+    #[test]
+    fn l1_over_budget_rejected() {
+        let mut p = Program::new(TileCoord::new(0, 0));
+        p.buf("huge", 10 << 20);
+        let err = validate(&arch(), &dep_of(vec![p])).unwrap_err();
+        assert!(matches!(err, IrError::L1OverBudget { .. }), "{err}");
+    }
+
+    #[test]
+    fn buffer_race_rejected() {
+        let l = tiny_layouts();
+        let mut p = Program::new(TileCoord::new(0, 0));
+        let a = p.buf("a", 1024);
+        let b = p.buf("b", 1024);
+        let c = p.buf("c", 1024);
+        // DmaIn writes `a` while Mmad reads `a` in the same superstep:
+        // a double-buffering violation.
+        p.push(0, Op::DmaIn { runs: l.a.rect_runs(0, 16, 0, 16), dst: a });
+        p.push(0, Op::Mmad { a, b, c, m: 16, n: 16, k: 16, init: true });
+        let err = validate(&arch(), &dep_of(vec![p])).unwrap_err();
+        assert!(matches!(err, IrError::BufferRace { .. }), "{err}");
+    }
+
+    #[test]
+    fn small_buffer_rejected() {
+        let l = tiny_layouts();
+        let mut p = Program::new(TileCoord::new(0, 0));
+        let a = p.buf("a", 16); // too small for 16x16 f32
+        p.push(0, Op::DmaIn { runs: l.a.rect_runs(0, 16, 0, 16), dst: a });
+        let err = validate(&arch(), &dep_of(vec![p])).unwrap_err();
+        assert!(matches!(err, IrError::BufTooSmall { .. }), "{err}");
+    }
+
+    #[test]
+    fn multicast_requires_matching_recvs() {
+        let mut root = Program::new(TileCoord::new(0, 0));
+        let src = root.buf("src", 64);
+        let dst = root.buf("dst", 64);
+        root.push(
+            0,
+            Op::Multicast { src, group: Mask::row(0, 2), dst, bytes: 64, tag: 7 },
+        );
+        // (0,1) is in row 0 but posts no RecvMulticast.
+        let mut other = Program::new(TileCoord::new(0, 1));
+        other.buf("x", 64);
+        other.reserve_steps(1);
+        let err = validate(&arch(), &dep_of(vec![root, other])).unwrap_err();
+        assert!(matches!(err, IrError::UnmatchedComm { .. }), "{err}");
+    }
+
+    #[test]
+    fn multicast_with_recvs_ok() {
+        let mut root = Program::new(TileCoord::new(0, 0));
+        let src = root.buf("src", 64);
+        let dst = root.buf("dst", 64);
+        root.push(
+            0,
+            Op::Multicast { src, group: Mask::row(0, 2), dst, bytes: 64, tag: 7 },
+        );
+        let mut other = Program::new(TileCoord::new(0, 1));
+        let d2 = other.buf("dst", 64);
+        other.push(
+            0,
+            Op::RecvMulticast { from: TileCoord::new(0, 0), dst: d2, bytes: 64, tag: 7 },
+        );
+        validate(&arch(), &dep_of(vec![root, other])).unwrap();
+    }
+
+    #[test]
+    fn send_without_recv_rejected() {
+        let mut s = Program::new(TileCoord::new(0, 0));
+        let b = s.buf("b", 64);
+        s.push(0, Op::Send { to: TileCoord::new(0, 1), src: b, bytes: 64, tag: 1 });
+        let mut r = Program::new(TileCoord::new(0, 1));
+        r.buf("x", 64);
+        let err = validate(&arch(), &dep_of(vec![s, r])).unwrap_err();
+        assert!(matches!(err, IrError::UnmatchedComm { .. }), "{err}");
+    }
+
+    #[test]
+    fn reduce_all_members_must_contribute() {
+        let root_t = TileCoord::new(0, 0);
+        let group = Mask::col(0, 2); // (0,0) and (1,0)
+        let mk = |t: TileCoord| {
+            let mut p = Program::new(t);
+            let src = p.buf("src", 64);
+            let dst = p.buf("dst", 64);
+            p.push(0, Op::Reduce { group, root: root_t, src, dst, bytes: 64, tag: 3 });
+            p
+        };
+        validate(&arch(), &dep_of(vec![mk(TileCoord::new(0, 0)), mk(TileCoord::new(1, 0))]))
+            .unwrap();
+        // One member silent: rejected.
+        let mut silent = Program::new(TileCoord::new(1, 0));
+        silent.buf("x", 64);
+        silent.reserve_steps(1);
+        let err =
+            validate(&arch(), &dep_of(vec![mk(TileCoord::new(0, 0)), silent])).unwrap_err();
+        assert!(matches!(err, IrError::UnmatchedComm { .. }), "{err}");
+    }
+
+    #[test]
+    fn duplicate_programs_rejected() {
+        let p1 = Program::new(TileCoord::new(0, 0));
+        let p2 = Program::new(TileCoord::new(0, 0));
+        let err = validate(&arch(), &dep_of(vec![p1, p2])).unwrap_err();
+        assert!(matches!(err, IrError::DuplicateProgram(_)));
+    }
+
+    #[test]
+    fn flops_accounting() {
+        let mut p = Program::new(TileCoord::new(0, 0));
+        let a = p.buf("a", 4096);
+        let b = p.buf("b", 4096);
+        let c = p.buf("c", 4096);
+        p.push(0, Op::Mmad { a, b, c, m: 8, n: 8, k: 8, init: true });
+        p.push(1, Op::Mmad { a, b, c, m: 8, n: 8, k: 8, init: false });
+        assert_eq!(p.flops(), 2.0 * 2.0 * 512.0);
+    }
+}

@@ -1,0 +1,418 @@
+//! Distributed HBM data layouts (paper §3.2) and preload images.
+//!
+//! SoftHier's HBM is software-managed, distributed, multi-channel; every
+//! channel has a distinct address space. A [`MatrixLayout`] describes how an
+//! `R × C` matrix is physically placed:
+//!
+//! * **Split scheme** — the matrix is partitioned into an `sr × sc` grid of
+//!   *blocks* (the coarsest distribution unit); blocks go to channels
+//!   round-robin (§3.2.1).
+//! * **Placement scheme** — each block is decomposed into `tm × tn` *tiles*
+//!   stored contiguously (row- or column-major tile order) in its channel's
+//!   1-D address space (§3.2.2); `tm/tn` come from the workload tiling so a
+//!   compute tile's DMA fetch is a single contiguous burst.
+//!
+//! The *base* layout the paper benchmarks against ("row-major fashion
+//! without distribution across HBM channels") is the degenerate case:
+//! one block, one channel, 1-row tiles.
+
+pub mod preload;
+
+use crate::collective::TileCoord;
+
+/// Tile ordering inside a block's channel range.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// Tiles laid out row-major within the block (Fig. 5 default).
+    RowMajor,
+    /// Tiles laid out column-major within the block.
+    ColMajor,
+}
+
+/// How blocks map to HBM channels.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ChannelAssign {
+    /// Round-robin over `count` channels starting at `first` (§3.2.1
+    /// default).
+    RoundRobin { first: usize, count: usize },
+    /// Everything in one channel (the paper's unoptimized base layout).
+    Single(usize),
+}
+
+/// One contiguous byte range in one HBM channel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Run {
+    pub channel: usize,
+    pub offset: u64,
+    pub bytes: u64,
+}
+
+/// A physical layout of an `rows × cols` element matrix over HBM channels.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MatrixLayout {
+    /// Byte offset added to every address in every channel this layout
+    /// touches — how multiple matrices (A, B, C) share the same channels
+    /// without overlapping. Assigned by the layout builder.
+    pub base_offset: u64,
+    /// Matrix rows (elements). May include tiling padding.
+    pub rows: usize,
+    /// Matrix cols (elements).
+    pub cols: usize,
+    pub elem_bytes: usize,
+    /// Split scheme `(sr, sc)`: block grid dimensions.
+    pub split: (usize, usize),
+    /// Placement tile `(tm, tn)` in elements.
+    pub tile: (usize, usize),
+    pub placement: Placement,
+    pub channels: ChannelAssign,
+}
+
+impl MatrixLayout {
+    /// The paper's base layout: whole matrix row-major in a single channel.
+    pub fn base(rows: usize, cols: usize, elem_bytes: usize, channel: usize) -> MatrixLayout {
+        MatrixLayout {
+            base_offset: 0,
+            rows,
+            cols,
+            elem_bytes,
+            split: (1, 1),
+            tile: (1, cols),
+            placement: Placement::RowMajor,
+            channels: ChannelAssign::Single(channel),
+        }
+    }
+
+    /// An optimized layout: split into `sr × sc` blocks round-robined over
+    /// all `num_channels`, with the workload tile `(tm, tn)` as the
+    /// placement unit so each fetch is one burst.
+    pub fn optimized(
+        rows: usize,
+        cols: usize,
+        elem_bytes: usize,
+        split: (usize, usize),
+        tile: (usize, usize),
+        num_channels: usize,
+    ) -> MatrixLayout {
+        MatrixLayout {
+            base_offset: 0,
+            rows,
+            cols,
+            elem_bytes,
+            split,
+            tile,
+            placement: Placement::RowMajor,
+            channels: ChannelAssign::RoundRobin { first: 0, count: num_channels },
+        }
+    }
+
+    /// Block height/width in elements.
+    pub fn block_dims(&self) -> (usize, usize) {
+        (self.rows / self.split.0, self.cols / self.split.1)
+    }
+
+    /// Structural validation: splits and tiles must divide evenly (callers
+    /// pad the matrix to tile multiples first — same as SoftHier's DMA
+    /// padding of ragged edges).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.rows > 0 && self.cols > 0, "empty matrix");
+        anyhow::ensure!(self.elem_bytes > 0, "zero element size");
+        let (sr, sc) = self.split;
+        anyhow::ensure!(sr > 0 && sc > 0, "empty split");
+        anyhow::ensure!(
+            self.rows % sr == 0 && self.cols % sc == 0,
+            "split {:?} does not divide matrix {}x{}",
+            self.split,
+            self.rows,
+            self.cols
+        );
+        let (bm, bn) = self.block_dims();
+        let (tm, tn) = self.tile;
+        anyhow::ensure!(tm > 0 && tn > 0, "empty tile");
+        anyhow::ensure!(
+            bm % tm == 0 && bn % tn == 0,
+            "tile {:?} does not divide block {}x{}",
+            self.tile,
+            bm,
+            bn
+        );
+        if let ChannelAssign::RoundRobin { count, .. } = self.channels {
+            anyhow::ensure!(count > 0, "round-robin over zero channels");
+        }
+        Ok(())
+    }
+
+    /// Channel that stores block `(bi, bj)`.
+    pub fn channel_of_block(&self, bi: usize, bj: usize) -> usize {
+        let lin = bi * self.split.1 + bj;
+        match self.channels {
+            ChannelAssign::Single(ch) => ch,
+            ChannelAssign::RoundRobin { first, count } => first + lin % count,
+        }
+    }
+
+    /// Byte offset of a block's slot within its channel. Round-robin stores
+    /// each channel's blocks back-to-back in block-linear order.
+    fn block_base(&self, bi: usize, bj: usize) -> u64 {
+        let lin = bi * self.split.1 + bj;
+        let (bm, bn) = self.block_dims();
+        let block_bytes = (bm * bn * self.elem_bytes) as u64;
+        let slot = match self.channels {
+            ChannelAssign::Single(_) => lin,
+            ChannelAssign::RoundRobin { count, .. } => lin / count,
+        };
+        self.base_offset + slot as u64 * block_bytes
+    }
+
+    /// Physical address of element `(r, c)`: `(channel, byte offset)`.
+    pub fn addr_of(&self, r: usize, c: usize) -> (usize, u64) {
+        debug_assert!(r < self.rows && c < self.cols, "({r},{c}) out of bounds");
+        let (bm, bn) = self.block_dims();
+        let (bi, bj) = (r / bm, c / bn);
+        let (rr, cc) = (r % bm, c % bn);
+        let (tm, tn) = self.tile;
+        let (ti, tj) = (rr / tm, cc / tn);
+        let tiles_per_row = bn / tn;
+        let tiles_per_col = bm / tm;
+        let ordinal = match self.placement {
+            Placement::RowMajor => ti * tiles_per_row + tj,
+            Placement::ColMajor => tj * tiles_per_col + ti,
+        };
+        let within = (rr % tm) * tn + (cc % tn);
+        let off = self.block_base(bi, bj)
+            + (ordinal * tm * tn + within) as u64 * self.elem_bytes as u64;
+        (self.channel_of_block(bi, bj), off)
+    }
+
+    /// Contiguous runs covering the rectangle `rows [r0, r1) × cols
+    /// [c0, c1)`, coalesced. This is what a tile's DMA engine issues; the
+    /// run count is the burst count, which the HBM model charges
+    /// per-request overhead for — strided (bad-layout) access patterns are
+    /// therefore naturally slower, reproducing Fig. 7a's baseline gap.
+    pub fn rect_runs(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Vec<Run> {
+        assert!(r0 < r1 && c0 < c1 && r1 <= self.rows && c1 <= self.cols,
+            "bad rect [{r0},{r1})x[{c0},{c1}) on {}x{}", self.rows, self.cols);
+        let (_, bn) = self.block_dims();
+        let (_, tn) = self.tile;
+        let mut runs: Vec<Run> = Vec::new();
+        for r in r0..r1 {
+            let mut c = c0;
+            while c < c1 {
+                // A contiguous span cannot cross a placement-tile column
+                // boundary or a block column boundary.
+                let tile_end = (c / tn + 1) * tn;
+                let block_end = (c / bn + 1) * bn;
+                let end = c1.min(tile_end).min(block_end);
+                let (ch, off) = self.addr_of(r, c);
+                let bytes = ((end - c) * self.elem_bytes) as u64;
+                match runs.last_mut() {
+                    Some(last) if last.channel == ch && last.offset + last.bytes == off => {
+                        last.bytes += bytes;
+                    }
+                    _ => runs.push(Run { channel: ch, offset: off, bytes }),
+                }
+                c = end;
+            }
+        }
+        runs
+    }
+
+    /// Total bytes this layout occupies in each channel (map: channel →
+    /// bytes). Used to size preload images.
+    pub fn channel_extents(&self) -> std::collections::BTreeMap<usize, u64> {
+        let (bm, bn) = self.block_dims();
+        let block_bytes = (bm * bn * self.elem_bytes) as u64;
+        let mut map = std::collections::BTreeMap::new();
+        for bi in 0..self.split.0 {
+            for bj in 0..self.split.1 {
+                let ch = self.channel_of_block(bi, bj);
+                let end = self.block_base(bi, bj) + block_bytes;
+                let e = map.entry(ch).or_insert(0u64);
+                *e = (*e).max(end);
+            }
+        }
+        map
+    }
+
+    /// Largest end-of-extent over all channels (used to stack matrices
+    /// back-to-back in shared channels).
+    pub fn max_extent(&self) -> u64 {
+        self.channel_extents().values().copied().max().unwrap_or(0)
+    }
+
+    /// The set of channels this layout touches.
+    pub fn channels_used(&self) -> Vec<usize> {
+        self.channel_extents().keys().copied().collect()
+    }
+}
+
+/// Layouts for one GEMM deployment (A, B, C matrices).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GemmLayouts {
+    pub a: MatrixLayout,
+    pub b: MatrixLayout,
+    pub c: MatrixLayout,
+}
+
+impl GemmLayouts {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        self.a.validate()?;
+        self.b.validate()?;
+        self.c.validate()
+    }
+}
+
+/// Where an HBM channel's controller sits on the mesh — re-exported helper
+/// so layout-aware code doesn't need the arch module for tests.
+pub fn nearest_edge_router(rows: usize, cols: usize, channel: usize, per_edge: usize) -> TileCoord {
+    if channel < per_edge {
+        TileCoord::new(channel % rows, 0)
+    } else {
+        TileCoord::new(rows - 1, (channel - per_edge) % cols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickprop::check;
+    use crate::util::rng::Rng;
+
+    fn opt_4x4() -> MatrixLayout {
+        // 64x64 matrix, 4x4 blocks of 16x16, tiles of 8x8, 4 channels.
+        MatrixLayout::optimized(64, 64, 4, (4, 4), (8, 8), 4)
+    }
+
+    #[test]
+    fn validate_catches_bad_divisibility() {
+        let mut l = opt_4x4();
+        l.validate().unwrap();
+        l.split = (3, 4);
+        assert!(l.validate().is_err());
+        let mut l2 = opt_4x4();
+        l2.tile = (5, 8);
+        assert!(l2.validate().is_err());
+    }
+
+    #[test]
+    fn base_layout_is_row_major_single_channel() {
+        let l = MatrixLayout::base(8, 8, 4, 2);
+        l.validate().unwrap();
+        for r in 0..8 {
+            for c in 0..8 {
+                let (ch, off) = l.addr_of(r, c);
+                assert_eq!(ch, 2);
+                assert_eq!(off, ((r * 8 + c) * 4) as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn round_robin_block_assignment() {
+        let l = opt_4x4();
+        // Fig. 5: blocks round-robin over channels in block-linear order.
+        assert_eq!(l.channel_of_block(0, 0), 0);
+        assert_eq!(l.channel_of_block(0, 1), 1);
+        assert_eq!(l.channel_of_block(0, 3), 3);
+        assert_eq!(l.channel_of_block(1, 0), 0);
+    }
+
+    #[test]
+    fn addresses_within_channel_never_collide() {
+        let l = opt_4x4();
+        let mut seen = std::collections::HashSet::new();
+        for r in 0..64 {
+            for c in 0..64 {
+                let key = l.addr_of(r, c);
+                assert!(seen.insert(key), "collision at ({r},{c}) -> {key:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn placement_tile_fetch_is_one_run() {
+        let l = opt_4x4();
+        // A rect equal to one placement tile must coalesce to 1 burst.
+        let runs = l.rect_runs(8, 16, 8, 16);
+        assert_eq!(runs.len(), 1, "{runs:?}");
+        assert_eq!(runs[0].bytes, 8 * 8 * 4);
+    }
+
+    #[test]
+    fn base_layout_fetch_is_strided() {
+        let l = MatrixLayout::base(64, 64, 4, 0);
+        // A 8x8 rect from a row-major matrix = 8 separate bursts.
+        let runs = l.rect_runs(0, 8, 8, 16);
+        assert_eq!(runs.len(), 8, "{runs:?}");
+        assert!(runs.iter().all(|r| r.bytes == 32));
+    }
+
+    #[test]
+    fn side_by_side_tiles_do_not_coalesce() {
+        let l = opt_4x4();
+        // Two tiles side by side: element rows interleave between the two
+        // tiles' address ranges, so every (row × tile) span is its own
+        // burst — 8 rows × 2 tiles = 16 runs. (This is why the placement
+        // tile should equal the fetch unit, §3.2.2.)
+        let runs = l.rect_runs(0, 8, 0, 16);
+        assert_eq!(runs.len(), 16, "{runs:?}");
+    }
+
+    #[test]
+    fn stacked_tiles_coalesce_col_major() {
+        let mut l = opt_4x4();
+        l.placement = Placement::ColMajor;
+        // Two vertically stacked tiles in column-major tile order are
+        // back-to-back in the channel: one 512-byte burst.
+        let runs = l.rect_runs(0, 16, 0, 8);
+        assert_eq!(runs.len(), 1, "{runs:?}");
+        assert_eq!(runs[0].bytes, 16 * 8 * 4);
+    }
+
+    #[test]
+    fn rect_runs_cover_exactly_prop() {
+        check("rect runs cover the rect bytes exactly", 100, |rng: &mut Rng| {
+            let l = MatrixLayout::optimized(
+                32,
+                32,
+                4,
+                (*rng.choose(&[1usize, 2, 4]), *rng.choose(&[1usize, 2, 4])),
+                (*rng.choose(&[4usize, 8]), *rng.choose(&[4usize, 8])),
+                rng.range(1, 6),
+            );
+            l.validate().unwrap();
+            let r0 = rng.range(0, 31);
+            let r1 = rng.range(r0 + 1, 32);
+            let c0 = rng.range(0, 31);
+            let c1 = rng.range(c0 + 1, 32);
+            let runs = l.rect_runs(r0, r1, c0, c1);
+            let total: u64 = runs.iter().map(|r| r.bytes).sum();
+            assert_eq!(total, ((r1 - r0) * (c1 - c0) * 4) as u64);
+            // Runs must stay inside the channel extents.
+            let extents = l.channel_extents();
+            for run in &runs {
+                assert!(run.offset + run.bytes <= extents[&run.channel]);
+            }
+        });
+    }
+
+    #[test]
+    fn channel_extents_sum_to_matrix_bytes() {
+        let l = opt_4x4();
+        let total: u64 = l.channel_extents().values().sum();
+        assert_eq!(total, 64 * 64 * 4);
+
+        // Uneven round-robin still covers all bytes (6 channels, 16 blocks).
+        let l = MatrixLayout::optimized(64, 64, 4, (4, 4), (8, 8), 6);
+        let total: u64 = l.channel_extents().values().sum();
+        assert!(total >= 64 * 64 * 4);
+    }
+
+    #[test]
+    fn col_major_placement_differs() {
+        let mut l = opt_4x4();
+        let rm = l.addr_of(0, 8); // tile (0,1) row-major => ordinal 1
+        l.placement = Placement::ColMajor;
+        let cm = l.addr_of(0, 8); // col-major => ordinal 2 (tiles_per_col=2)
+        assert_ne!(rm, cm);
+    }
+}

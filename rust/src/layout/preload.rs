@@ -1,0 +1,201 @@
+//! Preload images: the DiT workflow's first stage (paper Fig. 4).
+//!
+//! "Raw data and the data layout description are processed into a preload
+//! file. The preload file defines the initial input tensors and their
+//! distribution across HBM channels." A [`Preload`] is exactly that: one
+//! byte image per HBM channel, built by pushing matrices through their
+//! [`MatrixLayout`](super::MatrixLayout) address functions. The functional
+//! executor uses it as the initial HBM state; a binary file format
+//! round-trips it to disk for inspection and replay.
+
+use std::io::{Read, Write};
+
+use anyhow::{ensure, Context};
+
+use super::MatrixLayout;
+
+const MAGIC: &[u8; 8] = b"DITPRELD";
+
+/// Per-channel HBM byte images.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Preload {
+    /// `images[ch]` = contents of channel `ch` from offset 0.
+    pub images: Vec<Vec<u8>>,
+}
+
+impl Preload {
+    /// Create with `channels` empty images.
+    pub fn new(channels: usize) -> Preload {
+        Preload { images: vec![Vec::new(); channels] }
+    }
+
+    fn ensure_len(&mut self, ch: usize, len: u64) {
+        assert!(ch < self.images.len(), "channel {ch} out of range");
+        if (self.images[ch].len() as u64) < len {
+            self.images[ch].resize(len as usize, 0);
+        }
+    }
+
+    /// Scatter an f32 matrix (row-major `rows × cols`) into the images
+    /// according to `layout`. `layout.elem_bytes` must be 4 (functional
+    /// verification is f32; perf-only layouts never build preloads).
+    pub fn scatter_f32(&mut self, layout: &MatrixLayout, data: &[f32]) {
+        assert_eq!(layout.elem_bytes, 4, "functional preloads are f32");
+        assert_eq!(data.len(), layout.rows * layout.cols, "data/layout shape mismatch");
+        for ext in layout.channel_extents() {
+            self.ensure_len(ext.0, ext.1);
+        }
+        for r in 0..layout.rows {
+            // Scatter row-by-row using coalesced runs (fast path: few runs).
+            let runs = layout.rect_runs(r, r + 1, 0, layout.cols);
+            let mut c = 0usize;
+            for run in runs {
+                let n = (run.bytes / 4) as usize;
+                let dst = &mut self.images[run.channel]
+                    [run.offset as usize..run.offset as usize + run.bytes as usize];
+                for (i, chunk) in dst.chunks_exact_mut(4).enumerate() {
+                    chunk.copy_from_slice(&data[r * layout.cols + c + i].to_le_bytes());
+                }
+                c += n;
+            }
+        }
+    }
+
+    /// Gather an f32 matrix back out of the images (inverse of
+    /// [`Preload::scatter_f32`]); used to read C after functional runs.
+    pub fn gather_f32(&self, layout: &MatrixLayout) -> Vec<f32> {
+        assert_eq!(layout.elem_bytes, 4);
+        let mut out = vec![0f32; layout.rows * layout.cols];
+        for r in 0..layout.rows {
+            let runs = layout.rect_runs(r, r + 1, 0, layout.cols);
+            let mut c = 0usize;
+            for run in runs {
+                let src = &self.images[run.channel]
+                    [run.offset as usize..(run.offset + run.bytes) as usize];
+                for (i, chunk) in src.chunks_exact(4).enumerate() {
+                    out[r * layout.cols + c + i] =
+                        f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+                }
+                c += (run.bytes / 4) as usize;
+            }
+        }
+        out
+    }
+
+    /// Serialize to the binary preload-file format.
+    pub fn write_to(&self, w: &mut impl Write) -> anyhow::Result<()> {
+        w.write_all(MAGIC)?;
+        w.write_all(&(self.images.len() as u32).to_le_bytes())?;
+        for img in &self.images {
+            w.write_all(&(img.len() as u64).to_le_bytes())?;
+            w.write_all(img)?;
+        }
+        Ok(())
+    }
+
+    /// Parse from the binary preload-file format.
+    pub fn read_from(r: &mut impl Read) -> anyhow::Result<Preload> {
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic).context("preload header")?;
+        ensure!(&magic == MAGIC, "bad preload magic {magic:?}");
+        let mut n4 = [0u8; 4];
+        r.read_exact(&mut n4)?;
+        let channels = u32::from_le_bytes(n4) as usize;
+        ensure!(channels <= 4096, "implausible channel count {channels}");
+        let mut images = Vec::with_capacity(channels);
+        for _ in 0..channels {
+            let mut n8 = [0u8; 8];
+            r.read_exact(&mut n8)?;
+            let len = u64::from_le_bytes(n8) as usize;
+            let mut img = vec![0u8; len];
+            r.read_exact(&mut img)?;
+            images.push(img);
+        }
+        Ok(Preload { images })
+    }
+
+    /// Save to a file path.
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        let mut f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+        self.write_to(&mut f)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Preload> {
+        let mut f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+        Preload::read_from(&mut f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layout::MatrixLayout;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn scatter_gather_roundtrip_base() {
+        let l = MatrixLayout::base(16, 16, 4, 0);
+        let data = Rng::new(1).f32_vec(256);
+        let mut p = Preload::new(1);
+        p.scatter_f32(&l, &data);
+        assert_eq!(p.gather_f32(&l), data);
+    }
+
+    #[test]
+    fn scatter_gather_roundtrip_distributed() {
+        let l = MatrixLayout::optimized(32, 32, 4, (4, 4), (8, 8), 5);
+        let data = Rng::new(2).f32_vec(32 * 32);
+        let mut p = Preload::new(5);
+        p.scatter_f32(&l, &data);
+        assert_eq!(p.gather_f32(&l), data);
+    }
+
+    #[test]
+    fn two_matrices_share_channels_without_overlap_when_offset() {
+        // A in channels 0..2, B in channels 2..4 (disjoint Single/RR sets).
+        let la = MatrixLayout {
+            channels: crate::layout::ChannelAssign::RoundRobin { first: 0, count: 2 },
+            ..MatrixLayout::optimized(16, 16, 4, (2, 2), (8, 8), 2)
+        };
+        let lb = MatrixLayout {
+            channels: crate::layout::ChannelAssign::RoundRobin { first: 2, count: 2 },
+            ..MatrixLayout::optimized(16, 16, 4, (2, 2), (8, 8), 2)
+        };
+        let da = Rng::new(3).f32_vec(256);
+        let db = Rng::new(4).f32_vec(256);
+        let mut p = Preload::new(4);
+        p.scatter_f32(&la, &da);
+        p.scatter_f32(&lb, &db);
+        assert_eq!(p.gather_f32(&la), da);
+        assert_eq!(p.gather_f32(&lb), db);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let l = MatrixLayout::optimized(16, 16, 4, (2, 2), (4, 4), 3);
+        let mut p = Preload::new(3);
+        p.scatter_f32(&l, &Rng::new(5).f32_vec(256));
+        let mut buf = Vec::new();
+        p.write_to(&mut buf).unwrap();
+        let q = Preload::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let buf = b"NOTMAGIC\x00\x00\x00\x00".to_vec();
+        assert!(Preload::read_from(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn truncated_file_rejected() {
+        let l = MatrixLayout::base(8, 8, 4, 0);
+        let mut p = Preload::new(1);
+        p.scatter_f32(&l, &vec![1.0; 64]);
+        let mut buf = Vec::new();
+        p.write_to(&mut buf).unwrap();
+        buf.truncate(buf.len() - 10);
+        assert!(Preload::read_from(&mut buf.as_slice()).is_err());
+    }
+}

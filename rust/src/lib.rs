@@ -1,0 +1,57 @@
+//! # DiT — Design in Tiles
+//!
+//! Automated GEMM deployment on tile-based many-PE accelerators: a full
+//! reproduction of *"Design in Tiles: Automating GEMM Deployment on
+//! Tile-Based Many-PE Accelerators"* (CS.DC 2025).
+//!
+//! The crate contains everything the paper's system needs (see
+//! `DESIGN.md` for the inventory and substitution notes):
+//!
+//! * [`arch`] — parametric SoftHier architecture descriptions (GH200-like,
+//!   A100-like, arbitrary grids) + config-file parsing.
+//! * [`collective`] — the mask-based NoC collective group calculus
+//!   (`(i & M_row) = S_row ∧ (j & M_col) = S_col`) and mask synthesis.
+//! * [`layout`] — distributed multi-channel HBM data layouts (split scheme,
+//!   placement scheme) and preload images.
+//! * [`ir`] — the per-PE BSP-superstep program IR (explicit data movement,
+//!   workload mapping, inter-tile communication) + validation.
+//! * [`schedule`] — the deployment-schedule abstraction: tiling/mapping,
+//!   cluster-index remap, dataflow patterns, candidate enumeration.
+//! * [`codegen`] — schedule → IR lowering for SUMMA / systolic /
+//!   hierarchical / split-K / baseline dataflows.
+//! * [`sim`] — the event-driven SoftHier performance model: mesh NoC with
+//!   multicast/reduction trees and link contention, HBM channel queues,
+//!   matrix-engine timing, BSP barriers.
+//! * [`functional`] — functional (f32) execution of the same IR over a
+//!   preloaded HBM image, for numerical verification.
+//! * [`runtime`] — PJRT loader/executor for the JAX/Pallas golden GEMM
+//!   artifacts (`artifacts/*.hlo.txt`); the correctness oracle.
+//! * [`perfmodel`] — rooflines + analytical GPU baselines (CUTLASS /
+//!   DeepGEMM calibrated) used by the paper-figure benches.
+//! * [`coordinator`] — the end-to-end deployment driver and the
+//!   insight-guided schedule autotuner.
+//! * [`report`] — tables, CSV, and ASCII plots for the bench harness.
+//! * [`util`] — zero-dependency substrates: config text parser, JSON
+//!   writer, PRNG, mini property-test harness.
+
+pub mod arch;
+pub mod cli;
+pub mod codegen;
+pub mod collective;
+pub mod coordinator;
+pub mod functional;
+pub mod ir;
+pub mod layout;
+pub mod perfmodel;
+pub mod report;
+pub mod runtime;
+pub mod schedule;
+pub mod sim;
+pub mod util;
+
+/// Convenience re-exports for examples and benches.
+pub mod prelude {
+    pub use crate::arch::{ArchConfig, GemmShape};
+    pub use crate::collective::{Mask, TileCoord};
+    pub use crate::layout::{MatrixLayout, Placement};
+}

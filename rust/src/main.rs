@@ -1,0 +1,9 @@
+//! `dit` binary entry point. All logic lives in [`dit::cli`].
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dit::cli::run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

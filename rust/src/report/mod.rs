@@ -1,0 +1,219 @@
+//! Reporting: markdown/CSV tables and ASCII plots for the bench harness.
+//!
+//! Every paper figure/table bench renders through these helpers so the
+//! regenerated rows/series are uniform and diffable (`bench_output.txt`,
+//! EXPERIMENTS.md).
+
+use std::fmt::Write as _;
+
+use crate::util::json::Json;
+
+/// A simple column-aligned table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Table {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render as a column-aligned markdown table.
+    pub fn markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            let _ = writeln!(out, "### {}", self.title);
+        }
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let padded: Vec<String> = cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect();
+            format!("| {} |", padded.join(" | "))
+        };
+        let _ = writeln!(out, "{}", fmt_row(&self.headers, &widths));
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        let _ = writeln!(out, "{}", fmt_row(&sep, &widths));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", fmt_row(row, &widths));
+        }
+        out
+    }
+
+    /// Render as CSV.
+    pub fn csv(&self) -> String {
+        let esc = |s: &String| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.clone()
+            }
+        };
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.headers.iter().map(esc).collect::<Vec<_>>().join(","));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.iter().map(esc).collect::<Vec<_>>().join(","));
+        }
+        out
+    }
+
+    /// Render as a JSON array of objects.
+    pub fn json(&self) -> Json {
+        let mut arr = Json::arr();
+        for row in &self.rows {
+            let mut obj = Json::obj();
+            for (h, c) in self.headers.iter().zip(row) {
+                obj = match c.parse::<f64>() {
+                    Ok(v) => obj.field(h, v),
+                    Err(_) => obj.field(h, c.as_str()),
+                };
+            }
+            arr = arr.push(obj);
+        }
+        arr
+    }
+}
+
+/// An ASCII scatter/line plot on log-log axes — enough to eyeball a
+/// roofline (Fig. 7a) in terminal output.
+pub struct AsciiPlot {
+    pub title: String,
+    pub width: usize,
+    pub height: usize,
+    pub x_label: String,
+    pub y_label: String,
+    series: Vec<(char, Vec<(f64, f64)>)>,
+}
+
+impl AsciiPlot {
+    pub fn new(title: impl Into<String>, x_label: impl Into<String>, y_label: impl Into<String>) -> AsciiPlot {
+        AsciiPlot {
+            title: title.into(),
+            width: 72,
+            height: 20,
+            x_label: x_label.into(),
+            y_label: y_label.into(),
+            series: Vec::new(),
+        }
+    }
+
+    pub fn series(&mut self, marker: char, points: Vec<(f64, f64)>) -> &mut Self {
+        self.series.push((marker, points));
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let all: Vec<(f64, f64)> = self
+            .series
+            .iter()
+            .flat_map(|(_, pts)| pts.iter().copied())
+            .filter(|(x, y)| *x > 0.0 && *y > 0.0)
+            .collect();
+        if all.is_empty() {
+            return format!("{}\n(no data)\n", self.title);
+        }
+        let (mut x0, mut x1, mut y0, mut y1) = (f64::MAX, f64::MIN, f64::MAX, f64::MIN);
+        for (x, y) in &all {
+            x0 = x0.min(*x);
+            x1 = x1.max(*x);
+            y0 = y0.min(*y);
+            y1 = y1.max(*y);
+        }
+        // Pad the log range slightly.
+        let (lx0, lx1) = (x0.ln() - 0.1, x1.ln() + 0.1);
+        let (ly0, ly1) = (y0.ln() - 0.1, y1.ln() + 0.1);
+        let mut grid = vec![vec![' '; self.width]; self.height];
+        for (marker, pts) in &self.series {
+            for (x, y) in pts {
+                if *x <= 0.0 || *y <= 0.0 {
+                    continue;
+                }
+                let px = ((x.ln() - lx0) / (lx1 - lx0) * (self.width - 1) as f64).round() as usize;
+                let py = ((y.ln() - ly0) / (ly1 - ly0) * (self.height - 1) as f64).round() as usize;
+                let row = self.height - 1 - py.min(self.height - 1);
+                grid[row][px.min(self.width - 1)] = *marker;
+            }
+        }
+        let mut out = format!("{} (log-log; y: {}, x: {})\n", self.title, self.y_label, self.x_label);
+        let _ = writeln!(out, "  ^ {:.3e} .. {:.3e}", y0, y1);
+        for row in grid {
+            let _ = writeln!(out, "  |{}", row.into_iter().collect::<String>());
+        }
+        let _ = writeln!(out, "  +{}", "-".repeat(self.width));
+        let _ = writeln!(out, "   {:.3e} .. {:.3e}", x0, x1);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_markdown_alignment() {
+        let mut t = Table::new("demo", &["name", "tflops"]);
+        t.row(vec!["summa".into(), "1234.5".into()]);
+        t.row(vec!["x".into(), "9".into()]);
+        let md = t.markdown();
+        assert!(md.contains("### demo"));
+        assert!(md.contains("| summa | 1234.5 |"));
+        assert!(md.contains("| x     | 9      |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn csv_escapes_commas() {
+        let mut t = Table::new("t", &["a"]);
+        t.row(vec!["x,y".into()]);
+        assert!(t.csv().contains("\"x,y\""));
+    }
+
+    #[test]
+    fn json_rows_parse_numbers() {
+        let mut t = Table::new("t", &["name", "v"]);
+        t.row(vec!["s".into(), "2.5".into()]);
+        assert_eq!(t.json().render(), r#"[{"name":"s","v":2.5}]"#);
+    }
+
+    #[test]
+    fn plot_renders_markers() {
+        let mut p = AsciiPlot::new("roofline", "intensity", "tflops");
+        p.series('o', vec![(1.0, 10.0), (100.0, 1000.0)]);
+        p.series('x', vec![(10.0, 50.0)]);
+        let s = p.render();
+        assert!(s.contains('o'));
+        assert!(s.contains('x'));
+    }
+
+    #[test]
+    fn plot_handles_empty() {
+        let p = AsciiPlot::new("empty", "x", "y");
+        assert!(p.render().contains("no data"));
+    }
+}

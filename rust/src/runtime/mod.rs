@@ -1,0 +1,163 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas golden GEMMs and runs
+//! them from Rust — Python is never on this path.
+//!
+//! `make artifacts` lowers `python/compile/model.py` (whose inner tile
+//! product is the Layer-1 Pallas MMAD kernel) to HLO **text** files plus a
+//! `manifest.txt`; this module compiles them on the PJRT CPU client
+//! (`xla` crate) and exposes [`Oracle::gemm`] as the golden-number source
+//! the functional executor is checked against.
+//!
+//! HLO text — not serialized protos — is the interchange format: jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// A loadable artifact as listed in `manifest.txt`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ArtifactKey {
+    /// Entry point name (`gemm`, `gemm_bias_relu`, …).
+    pub entry: String,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+}
+
+/// The PJRT-backed correctness oracle.
+pub struct Oracle {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    files: HashMap<ArtifactKey, String>,
+    compiled: HashMap<ArtifactKey, xla::PjRtLoadedExecutable>,
+}
+
+impl Oracle {
+    /// Open an artifacts directory (parses `manifest.txt`; compiles
+    /// executables lazily on first use).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Oracle> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("read {manifest:?} — run `make artifacts` first"))?;
+        let mut files = HashMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() != 5 {
+                bail!("bad manifest line: {line:?}");
+            }
+            let key = ArtifactKey {
+                entry: parts[0].to_string(),
+                m: parts[1].parse().context("manifest M")?,
+                n: parts[2].parse().context("manifest N")?,
+                k: parts[3].parse().context("manifest K")?,
+            };
+            files.insert(key, parts[4].to_string());
+        }
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Oracle { client, dir, files, compiled: HashMap::new() })
+    }
+
+    /// Default artifacts location (`$DIT_ARTIFACTS` or `./artifacts`).
+    pub fn open_default() -> Result<Oracle> {
+        let dir =
+            std::env::var("DIT_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Oracle::open(dir)
+    }
+
+    /// Shapes available for an entry point.
+    pub fn shapes(&self, entry: &str) -> Vec<(usize, usize, usize)> {
+        let mut v: Vec<_> = self
+            .files
+            .keys()
+            .filter(|k| k.entry == entry)
+            .map(|k| (k.m, k.n, k.k))
+            .collect();
+        v.sort();
+        v
+    }
+
+    pub fn has(&self, entry: &str, m: usize, n: usize, k: usize) -> bool {
+        self.files.contains_key(&ArtifactKey { entry: entry.into(), m, n, k })
+    }
+
+    fn executable(&mut self, key: &ArtifactKey) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.compiled.contains_key(key) {
+            let file = self
+                .files
+                .get(key)
+                .with_context(|| format!("no artifact for {key:?}"))?;
+            let path = self.dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parse HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).with_context(|| format!("compile {path:?}"))?;
+            self.compiled.insert(key.clone(), exe);
+        }
+        Ok(self.compiled.get(key).unwrap())
+    }
+
+    fn run(&mut self, key: &ArtifactKey, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
+        let exe = self.executable(key)?;
+        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Golden `C = A @ B` through the Pallas-kerneled XLA executable.
+    pub fn gemm(&mut self, m: usize, n: usize, k: usize, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(a.len() == m * k, "A must be {m}x{k}");
+        anyhow::ensure!(b.len() == k * n, "B must be {k}x{n}");
+        let key = ArtifactKey { entry: "gemm".into(), m, n, k };
+        let la = xla::Literal::vec1(a).reshape(&[m as i64, k as i64])?;
+        let lb = xla::Literal::vec1(b).reshape(&[k as i64, n as i64])?;
+        self.run(&key, &[la, lb])
+    }
+
+    /// Golden fused epilogue `relu(A @ B + bias)`.
+    pub fn gemm_bias_relu(
+        &mut self,
+        m: usize,
+        n: usize,
+        k: usize,
+        a: &[f32],
+        b: &[f32],
+        bias: &[f32],
+    ) -> Result<Vec<f32>> {
+        anyhow::ensure!(bias.len() == n, "bias must be length {n}");
+        let key = ArtifactKey { entry: "gemm_bias_relu".into(), m, n, k };
+        let la = xla::Literal::vec1(a).reshape(&[m as i64, k as i64])?;
+        let lb = xla::Literal::vec1(b).reshape(&[k as i64, n as i64])?;
+        let lbias = xla::Literal::vec1(bias);
+        self.run(&key, &[la, lb, lbias])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // PJRT-dependent tests live in rust/tests/integration.rs (they need
+    // `make artifacts`); here we only test the manifest parser paths that
+    // don't require a client... but Oracle::open creates one eagerly, which
+    // is cheap on CPU. Missing-artifacts is the one error path that's
+    // environment-independent.
+    #[test]
+    fn open_missing_dir_fails_cleanly() {
+        let err = match Oracle::open("/nonexistent/path/xyz") {
+            Ok(_) => panic!("open should fail"),
+            Err(e) => e,
+        };
+        let msg = format!("{err:#}");
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+}

@@ -1,0 +1,517 @@
+//! The deployment-schedule abstraction (paper §3).
+//!
+//! A [`Schedule`] is the parameterizable, high-level description DiT lowers
+//! to per-PE IR: how the GEMM is tiled and mapped onto (logical) compute
+//! tiles (§3.1), whether the HBM layout is optimized (§3.2), and which
+//! dataflow pattern moves the operands (§3.3). [`candidates`] enumerates
+//! the schedule space the autotuner searches, pruned by the paper's
+//! insights (L1 feasibility, collective-friendliness, 3D tiling for
+//! irregular shapes, cluster remapping for flat GEMM).
+
+pub mod remap;
+
+use crate::arch::{ArchConfig, GemmShape};
+use crate::util::{ceil_div, is_pow2};
+use remap::Remap;
+
+/// Dataflow pattern primitives (paper §3.3.2, Fig. 6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dataflow {
+    /// No on-chip sharing: every tile DMAs its own operands from HBM.
+    Baseline,
+    /// SUMMA: per-K-panel row broadcast of A, column broadcast of B.
+    Summa,
+    /// Systolic wavefront: A propagates east, B propagates south.
+    Systolic,
+    /// Hierarchical (Fig. 6c): outer systolic over `group × group` tile
+    /// groups, inner SUMMA within each group.
+    SystolicOverSumma { group: usize },
+    /// Hierarchical (Fig. 6d): outer SUMMA across groups (strided
+    /// multicast), inner Cannon-style systolic rotation within each group.
+    SummaOverSystolic { group: usize },
+    /// 3D tiling (Fig. 6e): `splits` disjoint K-slices, each running SUMMA
+    /// on its own logical sub-grid, followed by a NoC reduction.
+    SplitKSumma { splits: usize },
+}
+
+impl Dataflow {
+    pub fn name(&self) -> String {
+        match self {
+            Dataflow::Baseline => "baseline".into(),
+            Dataflow::Summa => "summa".into(),
+            Dataflow::Systolic => "systolic".into(),
+            Dataflow::SystolicOverSumma { group } => format!("systolic-over-summa/g{group}"),
+            Dataflow::SummaOverSystolic { group } => format!("summa-over-systolic/g{group}"),
+            Dataflow::SplitKSumma { splits } => format!("splitk-summa/s{splits}"),
+        }
+    }
+
+    /// Does this pattern use NoC collectives? (Insight 2: prefer these.)
+    pub fn uses_collectives(&self) -> bool {
+        !matches!(self, Dataflow::Baseline | Dataflow::Systolic)
+    }
+}
+
+/// Who reduces and commits split-K partial results (§3.1.1: "configurable
+/// policies to determine which compute tiles are responsible for
+/// performing the final reduction").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReducePolicy {
+    /// K-group 0's tile always reduces + stores.
+    FirstGroup,
+    /// Rotate the root across K-groups by output index, spreading HBM
+    /// store traffic over more NoC paths and channels.
+    RoundRobin,
+}
+
+/// A complete deployment schedule: the tuple DiT's "Generate and Optimize"
+/// stage consumes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Schedule {
+    pub dataflow: Dataflow,
+    /// Logical grid `(P, Q)` the *compute* mapping uses. For split-K this
+    /// is the per-K-group grid; `P·Q·splits` must equal the tile count.
+    pub logical: (usize, usize),
+    /// K-panel depth per superstep (elements).
+    pub tk: usize,
+    /// Pipeline staging (§4.1.3 / Fig. 8): the grid's logical rows are
+    /// divided into this many stage groups whose execution is offset by
+    /// one superstep each. 1 = everyone starts together.
+    pub pipeline_stages: usize,
+    /// Double buffering / communication-computation overlap (§3.3.1).
+    pub double_buffer: bool,
+    /// Optimized HBM data layout (§3.2) vs the row-major base layout.
+    pub opt_layout: bool,
+    pub reduce_policy: ReducePolicy,
+}
+
+impl Schedule {
+    /// Default SUMMA schedule on the physical grid.
+    pub fn summa(arch: &ArchConfig, shape: GemmShape) -> Schedule {
+        let s = Schedule {
+            dataflow: Dataflow::Summa,
+            logical: (arch.rows, arch.cols),
+            tk: 0,
+            pipeline_stages: 1,
+            double_buffer: true,
+            opt_layout: true,
+            reduce_policy: ReducePolicy::RoundRobin,
+        };
+        Schedule { tk: default_tk(arch, shape, &s), ..s }
+    }
+
+    /// The paper's reference baseline (no collectives, base layout).
+    pub fn baseline(arch: &ArchConfig, shape: GemmShape) -> Schedule {
+        let s = Schedule {
+            dataflow: Dataflow::Baseline,
+            logical: (arch.rows, arch.cols),
+            tk: 0,
+            pipeline_stages: 1,
+            double_buffer: true,
+            opt_layout: false,
+            reduce_policy: ReducePolicy::RoundRobin,
+        };
+        Schedule { tk: default_tk(arch, shape, &s), ..s }
+    }
+
+    /// Systolic wavefront schedule on the physical grid.
+    pub fn systolic(arch: &ArchConfig, shape: GemmShape) -> Schedule {
+        Schedule { dataflow: Dataflow::Systolic, ..Schedule::summa(arch, shape) }
+    }
+
+    /// 3D split-K SUMMA: the grid is carved into `splits` K-groups, each a
+    /// `rows × cols/splits` logical grid — per-tile output tiles get
+    /// *wider* along N (Insight 3: TN = (2112/32)·8 = 528 in the paper's
+    /// example), while each group reduces over a K-slice.
+    pub fn splitk(arch: &ArchConfig, shape: GemmShape, splits: usize) -> Schedule {
+        let s = Schedule {
+            dataflow: Dataflow::SplitKSumma { splits },
+            logical: (arch.rows, arch.cols / splits.min(arch.cols)),
+            tk: 0,
+            pipeline_stages: 1,
+            double_buffer: true,
+            opt_layout: true,
+            reduce_policy: ReducePolicy::RoundRobin,
+        };
+        Schedule { tk: default_tk(arch, shape, &s), ..s }
+    }
+
+    /// Flat-GEMM schedule (§4.1.3 "Cluster Dimension Remap"): remap to a
+    /// `1 × (tiles/splits)` logical grid with split-K.
+    pub fn flat_remap(arch: &ArchConfig, shape: GemmShape, splits: usize) -> Schedule {
+        let tiles = arch.num_tiles();
+        let s = Schedule {
+            dataflow: Dataflow::SplitKSumma { splits },
+            logical: (1, tiles / splits),
+            tk: 0,
+            pipeline_stages: 1,
+            double_buffer: true,
+            opt_layout: true,
+            reduce_policy: ReducePolicy::RoundRobin,
+        };
+        Schedule { tk: default_tk(arch, shape, &s), ..s }
+    }
+
+    /// K-groups in this schedule (1 unless split-K).
+    pub fn splits(&self) -> usize {
+        match self.dataflow {
+            Dataflow::SplitKSumma { splits } => splits,
+            _ => 1,
+        }
+    }
+
+    /// Tiles used by the compute mapping.
+    pub fn tiles_used(&self) -> usize {
+        self.logical.0 * self.logical.1 * self.splits()
+    }
+
+    /// Human-readable name for reports/benches.
+    pub fn name(&self) -> String {
+        format!(
+            "{}[{}x{}]tk{}{}{}{}",
+            self.dataflow.name(),
+            self.logical.0,
+            self.logical.1,
+            self.tk,
+            if self.pipeline_stages > 1 {
+                format!("/ps{}", self.pipeline_stages)
+            } else {
+                String::new()
+            },
+            if self.double_buffer { "" } else { "/nodb" },
+            if self.opt_layout { "" } else { "/baselayout" },
+        )
+    }
+
+    /// Structural validation against an architecture.
+    pub fn validate(&self, arch: &ArchConfig) -> anyhow::Result<()> {
+        anyhow::ensure!(self.tk > 0, "tk must be positive");
+        anyhow::ensure!(self.logical.0 > 0 && self.logical.1 > 0, "empty logical grid");
+        anyhow::ensure!(
+            self.tiles_used() <= arch.num_tiles(),
+            "schedule needs {} tiles, arch has {}",
+            self.tiles_used(),
+            arch.num_tiles()
+        );
+        anyhow::ensure!(self.pipeline_stages >= 1, "pipeline_stages >= 1");
+        anyhow::ensure!(
+            self.pipeline_stages <= self.logical.0.max(1),
+            "more pipeline stages than logical rows"
+        );
+        match self.dataflow {
+            Dataflow::Systolic => {
+                anyhow::ensure!(
+                    self.logical == (arch.rows, arch.cols),
+                    "systolic runs on the physical grid"
+                );
+            }
+            Dataflow::SystolicOverSumma { group } | Dataflow::SummaOverSystolic { group } => {
+                anyhow::ensure!(is_pow2(group) && group >= 2, "group must be pow2 >= 2");
+                anyhow::ensure!(
+                    self.logical.0 % group == 0 && self.logical.1 % group == 0,
+                    "group {} does not divide logical grid {}x{}",
+                    group,
+                    self.logical.0,
+                    self.logical.1
+                );
+            }
+            Dataflow::SplitKSumma { splits } => {
+                anyhow::ensure!(splits >= 1, "splits >= 1");
+                anyhow::ensure!(
+                    self.tiles_used() == arch.num_tiles(),
+                    "split-K mapping must cover the grid: {} != {}",
+                    self.tiles_used(),
+                    arch.num_tiles()
+                );
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+
+    /// The tiling plan this schedule induces for a problem.
+    pub fn plan(&self, arch: &ArchConfig, shape: GemmShape) -> Plan {
+        let (p, q) = self.logical;
+        let splits = self.splits();
+        let tm = ceil_div(shape.m, p);
+        let tn = ceil_div(shape.n, q);
+        let k_slice = ceil_div(shape.k, splits);
+        let kp = ceil_div(k_slice, self.tk);
+        let padded = GemmShape::new(p * tm, q * tn, splits * kp * self.tk);
+        Plan {
+            tm,
+            tn,
+            tk: self.tk,
+            kp,
+            splits,
+            padded,
+            remap: Remap {
+                phys_rows: arch.rows,
+                phys_cols: arch.cols,
+                // Logical grid flattened over the physical tiles: K-groups
+                // are consecutive bands of logical rows.
+                log_rows: p * splits,
+                log_cols: q,
+            },
+        }
+    }
+}
+
+/// Concrete tiling plan derived from a schedule + problem.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Plan {
+    /// Output-tile height per logical tile.
+    pub tm: usize,
+    /// Output-tile width per logical tile.
+    pub tn: usize,
+    /// K-panel depth per superstep.
+    pub tk: usize,
+    /// K panels per K-slice.
+    pub kp: usize,
+    /// K-groups (split-K).
+    pub splits: usize,
+    /// Padded problem dimensions.
+    pub padded: GemmShape,
+    pub remap: Remap,
+}
+
+/// Estimated per-tile L1 requirement in bytes for a schedule (A/B panels
+/// and the C accumulator at `arch.elem_bytes`, double-buffer factor, plus
+/// the fetch staging buffer on owner tiles).
+pub fn l1_estimate(arch: &ArchConfig, shape: GemmShape, s: &Schedule) -> u64 {
+    let plan = s.plan(arch, shape);
+    let e = arch.elem_bytes as u64;
+    let db = if s.double_buffer { 2 } else { 1 };
+    let a_panel = (plan.tm * plan.tk) as u64 * e;
+    let b_panel = (plan.tk * plan.tn) as u64 * e;
+    let c_acc = (plan.tm * plan.tn) as u64 * e;
+    // Owner tiles stage the panel they fetch before multicasting it.
+    // SUMMA/split-K single-buffer the staging (ownership rotates, see
+    // codegen::summa); the hierarchical generators double-buffer it.
+    let staging = match s.dataflow {
+        Dataflow::SystolicOverSumma { .. } | Dataflow::SummaOverSystolic { .. } => {
+            (a_panel + b_panel) * 2
+        }
+        d if d.uses_collectives() => a_panel + b_panel,
+        _ => 0,
+    };
+    db * (a_panel + b_panel) + c_acc + staging
+}
+
+/// Pick the largest `tk` from a preferred ladder that fits L1, preferring
+/// depths that leave at least 3 K-panels per slice so the fetch/broadcast/
+/// compute software pipeline can actually overlap (§3.3.1) — with a single
+/// panel the phases serialize and memory-bound shapes lose badly.
+fn default_tk(arch: &ArchConfig, shape: GemmShape, s: &Schedule) -> usize {
+    let fits = |tk: usize| {
+        let cand = Schedule { tk, ..s.clone() };
+        tk <= shape.k.max(32) && l1_estimate(arch, shape, &cand) <= arch.tile.l1_bytes as u64
+    };
+    let k_slice = shape.k.div_ceil(s.splits().max(1));
+    let pipelined = |tk: usize| k_slice.div_ceil(tk) >= 3;
+    for tk in [512, 256, 128, 64, 32] {
+        if fits(tk) && pipelined(tk) {
+            return tk;
+        }
+    }
+    for tk in [512, 256, 128, 64, 32] {
+        if fits(tk) {
+            return tk;
+        }
+    }
+    16
+}
+
+/// Re-derive `tk` after changing a schedule's dataflow (different
+/// dataflows have different L1 footprints).
+pub fn retune_tk(arch: &ArchConfig, shape: GemmShape, s: &Schedule) -> Schedule {
+    Schedule { tk: default_tk(arch, shape, s), ..s.clone() }
+}
+
+/// Enumerate the candidate schedules the autotuner scores for a problem —
+/// the paper's "predefined schedule candidates, guided by the insights".
+pub fn candidates(arch: &ArchConfig, shape: GemmShape) -> Vec<Schedule> {
+    let mut out = Vec::new();
+    let (rows, cols) = (arch.rows, arch.cols);
+
+    // 2D patterns on the physical grid.
+    out.push(Schedule::baseline(arch, shape));
+    out.push(Schedule { opt_layout: true, ..Schedule::baseline(arch, shape) });
+    out.push(Schedule::summa(arch, shape));
+    out.push(Schedule { opt_layout: false, ..Schedule::summa(arch, shape) });
+    out.push(Schedule::systolic(arch, shape));
+    for stages in [2, 4] {
+        if stages <= rows {
+            out.push(Schedule { pipeline_stages: stages, ..Schedule::summa(arch, shape) });
+        }
+    }
+
+    // Hierarchical patterns (tk re-derived: they stage more in L1).
+    for group in [2, 4] {
+        if rows % group == 0 && cols % group == 0 && rows >= group * 2 {
+            out.push(retune_tk(arch, shape, &Schedule {
+                dataflow: Dataflow::SystolicOverSumma { group },
+                ..Schedule::summa(arch, shape)
+            }));
+            out.push(retune_tk(arch, shape, &Schedule {
+                dataflow: Dataflow::SummaOverSystolic { group },
+                ..Schedule::summa(arch, shape)
+            }));
+        }
+    }
+
+    // 3D tiling (Insight 3): worthwhile when N or M tiles poorly.
+    for splits in [2, 4, 8] {
+        if cols % splits == 0 && shape.k >= splits * 64 {
+            out.push(Schedule::splitk(arch, shape, splits));
+        }
+    }
+    let _ = rows;
+
+    // Cluster remap for flat GEMM (Insight 4).
+    if shape.is_flat() {
+        for splits in [4, 8, 16, 32] {
+            let tiles = arch.num_tiles();
+            if tiles % splits == 0 && shape.k >= splits * 64 {
+                out.push(Schedule::flat_remap(arch, shape, splits));
+            }
+        }
+    }
+
+    out.retain(|s| s.validate(arch).is_ok());
+    // Keep schedules that fit L1 directly, or that fit after the
+    // coordinator's output chunking (deploy_chunked splits N by up to 64).
+    out.retain(|s| {
+        let l1 = arch.tile.l1_bytes as u64;
+        if l1_estimate(arch, shape, s) <= l1 {
+            return true;
+        }
+        let chunk = GemmShape::new(shape.m, shape.n.div_ceil(64), shape.k);
+        l1_estimate(arch, chunk, s) <= l1
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gh200() -> ArchConfig {
+        ArchConfig::gh200_like()
+    }
+
+    #[test]
+    fn summa_defaults_fit_l1() {
+        let arch = gh200();
+        let shape = GemmShape::new(4096, 2112, 7168);
+        let s = Schedule::summa(&arch, shape);
+        s.validate(&arch).unwrap();
+        assert!(l1_estimate(&arch, shape, &s) <= arch.tile.l1_bytes as u64);
+        assert!(s.tk >= 64, "tk = {}", s.tk);
+    }
+
+    #[test]
+    fn plan_pads_ragged_dimensions() {
+        let arch = gh200();
+        // N = 2112 over 32 columns -> TN = 66 (the paper's ragged case).
+        let s = Schedule::summa(&arch, GemmShape::new(4096, 2112, 7168));
+        let plan = s.plan(&arch, GemmShape::new(4096, 2112, 7168));
+        assert_eq!(plan.tm, 128);
+        assert_eq!(plan.tn, 66);
+        assert_eq!(plan.padded.m, 4096);
+        assert_eq!(plan.padded.n, 2112);
+        assert_eq!(plan.padded.k % plan.tk, 0);
+    }
+
+    #[test]
+    fn splitk_tiles_cover_grid() {
+        let arch = gh200();
+        let shape = GemmShape::new(4096, 2112, 7168);
+        let s = Schedule::splitk(&arch, shape, 8);
+        s.validate(&arch).unwrap();
+        assert_eq!(s.logical, (32, 4));
+        assert_eq!(s.tiles_used(), 1024);
+        // Split-K widens per-tile N: Insight 3's TN = (2112/32)*8 = 528.
+        let plan = s.plan(&arch, shape);
+        assert_eq!(plan.tn, 528);
+        assert_eq!(plan.tm, 128);
+        assert_eq!(plan.splits, 8);
+    }
+
+    #[test]
+    fn flat_remap_produces_wide_logical_grid() {
+        let arch = gh200();
+        let shape = GemmShape::new(64, 2112, 7168);
+        let s = Schedule::flat_remap(&arch, shape, 8);
+        s.validate(&arch).unwrap();
+        assert_eq!(s.logical, (1, 128));
+        let plan = s.plan(&arch, shape);
+        assert_eq!(plan.tm, 64);
+        // 2112 / 128 = 16.5 -> padded.
+        assert!(plan.tn >= 16);
+        assert_eq!(plan.remap.log_rows, 8);
+        assert_eq!(plan.remap.log_cols, 128);
+    }
+
+    #[test]
+    fn validation_rejects_oversubscription() {
+        let arch = ArchConfig::tiny(2, 2);
+        let mut s = Schedule::summa(&arch, GemmShape::new(64, 64, 64));
+        s.logical = (4, 4);
+        assert!(s.validate(&arch).is_err());
+    }
+
+    #[test]
+    fn validation_rejects_bad_group() {
+        let arch = gh200();
+        let shape = GemmShape::new(1024, 1024, 1024);
+        let mut s = Schedule::summa(&arch, shape);
+        s.dataflow = Dataflow::SystolicOverSumma { group: 3 };
+        assert!(s.validate(&arch).is_err());
+        s.dataflow = Dataflow::SystolicOverSumma { group: 2 };
+        s.validate(&arch).unwrap();
+    }
+
+    #[test]
+    fn candidates_cover_all_primitive_families() {
+        let arch = gh200();
+        let shape = GemmShape::new(4096, 2112, 7168);
+        let cands = candidates(&arch, shape);
+        assert!(cands.len() >= 8, "{}", cands.len());
+        assert!(cands.iter().any(|s| s.dataflow == Dataflow::Baseline));
+        assert!(cands.iter().any(|s| s.dataflow == Dataflow::Summa));
+        assert!(cands.iter().any(|s| s.dataflow == Dataflow::Systolic));
+        assert!(cands.iter().any(|s| matches!(s.dataflow, Dataflow::SplitKSumma { .. })));
+        assert!(cands
+            .iter()
+            .any(|s| matches!(s.dataflow, Dataflow::SystolicOverSumma { .. })));
+        // All enumerated candidates are feasible.
+        for s in &cands {
+            s.validate(&arch).unwrap();
+            assert!(l1_estimate(&arch, shape, s) <= arch.tile.l1_bytes as u64, "{}", s.name());
+        }
+    }
+
+    #[test]
+    fn flat_shapes_get_remap_candidates() {
+        let arch = gh200();
+        let shape = GemmShape::new(64, 2112, 7168);
+        let cands = candidates(&arch, shape);
+        assert!(
+            cands.iter().any(|s| s.logical.0 == 1 && s.logical.1 >= 32),
+            "no flat remap candidate in {:?}",
+            cands.iter().map(|s| s.name()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn names_are_distinct() {
+        let arch = gh200();
+        let shape = GemmShape::new(4096, 2112, 7168);
+        let names: Vec<String> = candidates(&arch, shape).iter().map(|s| s.name()).collect();
+        let mut dedup = names.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(names.len(), dedup.len(), "{names:?}");
+    }
+}

@@ -1,0 +1,191 @@
+//! Cluster-index remapping (paper §3.1.2).
+//!
+//! The physical tile grid is fixed (e.g. 32×32) but optimal mappings want
+//! other logical shapes (1×1024, 2×8, 4×256 …). A [`Remap`] reinterprets
+//! the physical grid as a logical grid through the shared row-major linear
+//! index, and — the part that "integrates seamlessly with our mask-based
+//! collectives" — synthesizes physical `(S, M)` masks for logical-topology
+//! groups whenever the AND-mask hardware can express them (always true for
+//! power-of-two grids, which is what the hardware template uses).
+
+use crate::collective::{synthesize, Mask, TileCoord};
+
+/// A logical view `log_rows × log_cols` of a physical `phys_rows ×
+/// phys_cols` grid with the same tile count.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Remap {
+    pub phys_rows: usize,
+    pub phys_cols: usize,
+    pub log_rows: usize,
+    pub log_cols: usize,
+}
+
+impl Remap {
+    /// Identity remap (logical == physical).
+    pub fn identity(rows: usize, cols: usize) -> Remap {
+        Remap { phys_rows: rows, phys_cols: cols, log_rows: rows, log_cols: cols }
+    }
+
+    /// Reinterpret as `log_rows × log_cols`; tile counts must match.
+    pub fn new(
+        phys_rows: usize,
+        phys_cols: usize,
+        log_rows: usize,
+        log_cols: usize,
+    ) -> anyhow::Result<Remap> {
+        anyhow::ensure!(
+            phys_rows * phys_cols == log_rows * log_cols,
+            "remap must preserve tile count: {}x{} vs {}x{}",
+            phys_rows,
+            phys_cols,
+            log_rows,
+            log_cols
+        );
+        Ok(Remap { phys_rows, phys_cols, log_rows, log_cols })
+    }
+
+    pub fn num_tiles(&self) -> usize {
+        self.phys_rows * self.phys_cols
+    }
+
+    /// Physical tile of logical coordinate `(lr, lc)`.
+    pub fn to_phys(&self, lr: usize, lc: usize) -> TileCoord {
+        debug_assert!(lr < self.log_rows && lc < self.log_cols);
+        TileCoord::from_linear(lr * self.log_cols + lc, self.phys_cols)
+    }
+
+    /// Logical coordinate of a physical tile.
+    pub fn to_logical(&self, t: TileCoord) -> (usize, usize) {
+        let lin = t.linear(self.phys_cols);
+        (lin / self.log_cols, lin % self.log_cols)
+    }
+
+    /// Physical members of logical row `lr`.
+    pub fn logical_row(&self, lr: usize) -> Vec<TileCoord> {
+        (0..self.log_cols).map(|lc| self.to_phys(lr, lc)).collect()
+    }
+
+    /// Physical members of logical column `lc`.
+    pub fn logical_col(&self, lc: usize) -> Vec<TileCoord> {
+        (0..self.log_rows).map(|lr| self.to_phys(lr, lc)).collect()
+    }
+
+    /// Synthesized physical mask for logical row `lr`, if expressible.
+    pub fn logical_row_mask(&self, lr: usize) -> Option<Mask> {
+        synthesize(&self.logical_row(lr), self.phys_rows, self.phys_cols)
+    }
+
+    /// Synthesized physical mask for logical column `lc`, if expressible.
+    pub fn logical_col_mask(&self, lc: usize) -> Option<Mask> {
+        synthesize(&self.logical_col(lc), self.phys_rows, self.phys_cols)
+    }
+
+    /// Synthesized physical mask for a contiguous logical-linear range
+    /// `[start, start + len)` (used by split-K reduction groups).
+    pub fn linear_range_mask(&self, start: usize, len: usize) -> Option<Mask> {
+        let tiles: Vec<TileCoord> = (start..start + len)
+            .map(|lin| TileCoord::from_linear(lin, self.phys_cols))
+            .collect();
+        synthesize(&tiles, self.phys_rows, self.phys_cols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickprop::check;
+
+    #[test]
+    fn identity_roundtrip() {
+        let r = Remap::identity(4, 4);
+        for i in 0..4 {
+            for j in 0..4 {
+                let t = TileCoord::new(i, j);
+                assert_eq!(r.to_phys(i, j), t);
+                assert_eq!(r.to_logical(t), (i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn remap_preserves_count() {
+        assert!(Remap::new(4, 4, 2, 8).is_ok());
+        assert!(Remap::new(4, 4, 1, 16).is_ok());
+        assert!(Remap::new(4, 4, 3, 5).is_err());
+    }
+
+    #[test]
+    fn flat_remap_1xall() {
+        // The paper's flat-GEMM case: 32x32 physical -> 1x1024 logical.
+        let r = Remap::new(32, 32, 1, 1024).unwrap();
+        assert_eq!(r.to_phys(0, 0), TileCoord::new(0, 0));
+        assert_eq!(r.to_phys(0, 33), TileCoord::new(1, 1));
+        assert_eq!(r.to_logical(TileCoord::new(31, 31)), (0, 1023));
+        // Logical row 0 = everything: mask must be the all-group.
+        let m = r.logical_row_mask(0).unwrap();
+        assert_eq!(m.count(32, 32), 1024);
+    }
+
+    #[test]
+    fn pow2_logical_rows_are_mask_expressible() {
+        // 4x4 physical viewed as 2x8: logical row 0 = physical rows 0-1.
+        let r = Remap::new(4, 4, 2, 8).unwrap();
+        let m = r.logical_row_mask(0).unwrap();
+        let members = m.members(4, 4);
+        assert_eq!(members.len(), 8);
+        assert!(members.iter().all(|t| t.row < 2));
+
+        let m1 = r.logical_row_mask(1).unwrap();
+        assert!(m1.members(4, 4).iter().all(|t| t.row >= 2));
+    }
+
+    #[test]
+    fn pow2_logical_cols_are_mask_expressible() {
+        // 4x4 as 8x2: logical col 0 = even physical linear indices.
+        let r = Remap::new(4, 4, 8, 2).unwrap();
+        let m = r.logical_col_mask(0).unwrap();
+        let members = m.members(4, 4);
+        assert_eq!(members.len(), 8);
+        assert!(members.iter().all(|t| t.col % 2 == 0));
+    }
+
+    #[test]
+    fn linear_range_masks() {
+        let r = Remap::identity(4, 4);
+        // Aligned pow2 range = half a physical row.
+        let m = r.linear_range_mask(4, 4).unwrap(); // row 1
+        assert_eq!(m.members(4, 4), r.logical_row(1));
+        // A misaligned range crossing a row boundary is not expressible.
+        assert!(r.linear_range_mask(2, 4).is_none());
+    }
+
+    #[test]
+    fn prop_roundtrip_and_mask_consistency() {
+        check("remap roundtrip + mask member sets", 100, |rng| {
+            let shapes: [(usize, usize, usize, usize); 6] = [
+                (4, 4, 2, 8),
+                (4, 4, 1, 16),
+                (8, 8, 4, 16),
+                (8, 8, 2, 32),
+                (8, 8, 64, 1),
+                (32, 32, 8, 128),
+            ];
+            let &(pr, pc, lr, lc) = rng.choose(&shapes);
+            let r = Remap::new(pr, pc, lr, lc).unwrap();
+            // Roundtrip.
+            let t = TileCoord::new(rng.range(0, pr - 1), rng.range(0, pc - 1));
+            let (a, b) = r.to_logical(t);
+            assert_eq!(r.to_phys(a, b), t);
+            // Every logical row/col mask, when expressible, covers exactly
+            // the enumerated members.
+            let row = rng.range(0, lr - 1);
+            if let Some(m) = r.logical_row_mask(row) {
+                assert!(m.covers_exactly(&r.logical_row(row), pr, pc));
+            }
+            let col = rng.range(0, lc - 1);
+            if let Some(m) = r.logical_col_mask(col) {
+                assert!(m.covers_exactly(&r.logical_col(col), pr, pc));
+            }
+        });
+    }
+}

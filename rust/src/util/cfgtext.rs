@@ -1,0 +1,258 @@
+//! Minimal config-text parser (TOML subset) for architecture files.
+//!
+//! Grammar (one statement per line):
+//!
+//! ```text
+//! # comment
+//! [section]
+//! key = 42            # integer
+//! key2 = 1.5          # float
+//! key3 = "string"     # string
+//! key4 = true         # bool
+//! key5 = [1, 2, 3]    # integer list
+//! ```
+//!
+//! Just enough for `configs/*.dit` architecture descriptions; no nesting, no
+//! dotted keys, no dates. Unknown keys are preserved so callers can reject
+//! or ignore them explicitly.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed scalar/list value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Str(String),
+    Bool(bool),
+    IntList(Vec<i64>),
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Int(v) => write!(f, "{v}"),
+            Value::Float(v) => write!(f, "{v}"),
+            Value::Str(v) => write!(f, "\"{v}\""),
+            Value::Bool(v) => write!(f, "{v}"),
+            Value::IntList(v) => {
+                write!(f, "[")?;
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+/// Parse error with line information.
+#[derive(Debug, thiserror::Error)]
+#[error("config parse error at line {line}: {msg}")]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// A parsed document: `section -> key -> value`. Keys before any `[section]`
+/// land in the `""` section.
+#[derive(Debug, Default, Clone)]
+pub struct Doc {
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Doc {
+    /// Parse a document from text.
+    pub fn parse(text: &str) -> Result<Doc, ParseError> {
+        let mut doc = Doc::default();
+        let mut section = String::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let line_no = idx + 1;
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name.strip_suffix(']').ok_or_else(|| ParseError {
+                    line: line_no,
+                    msg: format!("unterminated section header: {raw:?}"),
+                })?;
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, value) = line.split_once('=').ok_or_else(|| ParseError {
+                line: line_no,
+                msg: format!("expected `key = value`, got {raw:?}"),
+            })?;
+            let value = parse_value(value.trim()).map_err(|msg| ParseError { line: line_no, msg })?;
+            doc.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.trim().to_string(), value);
+        }
+        Ok(doc)
+    }
+
+    /// Fetch a value.
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    /// Fetch an integer (accepting `Int` only).
+    pub fn get_int(&self, section: &str, key: &str) -> Option<i64> {
+        match self.get(section, key)? {
+            Value::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// Fetch a float (accepting `Float` or `Int`).
+    pub fn get_f64(&self, section: &str, key: &str) -> Option<f64> {
+        match self.get(section, key)? {
+            Value::Float(v) => Some(*v),
+            Value::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    /// Fetch a string.
+    pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
+        match self.get(section, key)? {
+            Value::Str(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Serialize back to config text (stable ordering).
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        for (name, entries) in &self.sections {
+            if !name.is_empty() {
+                out.push_str(&format!("[{name}]\n"));
+            }
+            for (k, v) in entries {
+                out.push_str(&format!("{k} = {v}\n"));
+            }
+        }
+        out
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` inside quoted strings must survive.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| format!("unterminated string: {s:?}"))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| format!("unterminated list: {s:?}"))?;
+        let mut items = Vec::new();
+        for part in inner.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            items.push(
+                part.parse::<i64>()
+                    .map_err(|_| format!("bad list item: {part:?}"))?,
+            );
+        }
+        return Ok(Value::IntList(items));
+    }
+    if let Ok(v) = s.parse::<i64>() {
+        return Ok(Value::Int(v));
+    }
+    if let Ok(v) = s.parse::<f64>() {
+        return Ok(Value::Float(v));
+    }
+    Err(format!("cannot parse value: {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# SoftHier-ish sample
+top_key = 3
+[grid]
+rows = 32
+cols = 32            # trailing comment
+[tile]
+tflops = 1.93
+name = "matrix # engine"
+enabled = true
+dims = [64, 16]
+"#;
+
+    #[test]
+    fn parse_all_types() {
+        let doc = Doc::parse(SAMPLE).unwrap();
+        assert_eq!(doc.get_int("", "top_key"), Some(3));
+        assert_eq!(doc.get_int("grid", "rows"), Some(32));
+        assert_eq!(doc.get_f64("tile", "tflops"), Some(1.93));
+        assert_eq!(doc.get_str("tile", "name"), Some("matrix # engine"));
+        assert_eq!(doc.get("tile", "enabled"), Some(&Value::Bool(true)));
+        assert_eq!(
+            doc.get("tile", "dims"),
+            Some(&Value::IntList(vec![64, 16]))
+        );
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let doc = Doc::parse("x = 4").unwrap();
+        assert_eq!(doc.get_f64("", "x"), Some(4.0));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = Doc::parse("a = 1\nbogus line\n").unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn unterminated_constructs_rejected() {
+        assert!(Doc::parse("[grid").is_err());
+        assert!(Doc::parse("s = \"abc").is_err());
+        assert!(Doc::parse("l = [1, 2").is_err());
+        assert!(Doc::parse("l = [1, x]").is_err());
+    }
+
+    #[test]
+    fn roundtrip() {
+        let doc = Doc::parse(SAMPLE).unwrap();
+        let doc2 = Doc::parse(&doc.to_text()).unwrap();
+        assert_eq!(doc.sections, doc2.sections);
+    }
+}

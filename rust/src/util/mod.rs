@@ -1,0 +1,103 @@
+//! Zero-dependency substrates.
+//!
+//! The build environment is fully offline (vendored crates only), so the
+//! conventional helpers — a config parser, a JSON writer, a deterministic
+//! PRNG, a property-test harness — are implemented here from scratch.
+
+pub mod cfgtext;
+pub mod json;
+pub mod quickprop;
+pub mod rng;
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// Round `a` up to the next multiple of `q`.
+#[inline]
+pub fn round_up(a: usize, q: usize) -> usize {
+    ceil_div(a, q) * q
+}
+
+/// `true` if `x` is a power of two (and nonzero).
+#[inline]
+pub fn is_pow2(x: usize) -> bool {
+    x != 0 && x & (x - 1) == 0
+}
+
+/// log2 of a power of two.
+#[inline]
+pub fn log2(x: usize) -> u32 {
+    debug_assert!(is_pow2(x));
+    x.trailing_zeros()
+}
+
+/// Pretty-print a byte count (`1.5 MiB` style).
+pub fn human_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Pretty-print a nanosecond duration.
+pub fn human_time_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(ceil_div(0, 3), 0);
+        assert_eq!(ceil_div(1, 1), 1);
+    }
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(10, 8), 16);
+        assert_eq!(round_up(16, 8), 16);
+        assert_eq!(round_up(0, 8), 0);
+    }
+
+    #[test]
+    fn pow2_and_log2() {
+        assert!(is_pow2(1));
+        assert!(is_pow2(1024));
+        assert!(!is_pow2(0));
+        assert!(!is_pow2(66));
+        assert_eq!(log2(1), 0);
+        assert_eq!(log2(32), 5);
+    }
+
+    #[test]
+    fn humanize() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(1536), "1.50 KiB");
+        assert_eq!(human_time_ns(500.0), "500 ns");
+        assert_eq!(human_time_ns(2.5e6), "2.50 ms");
+    }
+}

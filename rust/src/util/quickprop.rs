@@ -1,0 +1,99 @@
+//! Minimal property-based testing harness (proptest is unavailable offline).
+//!
+//! A property is a closure over a seeded [`Rng`](crate::util::rng::Rng); the
+//! harness runs it for `cases` seeds derived from a base seed and, on panic,
+//! reports the failing case seed so the case can be replayed exactly with
+//! [`check_one`]. No shrinking — generators should be written so a single
+//! failing seed is already small enough to debug (keep dimensions modest).
+//!
+//! ```no_run
+//! // (no_run: doctest binaries miss the xla rpath link-args in this
+//! // offline environment; the same property runs in unit tests below.)
+//! use dit::util::quickprop::check;
+//! check("addition commutes", 64, |rng| {
+//!     let (a, b) = (rng.below(1000) as i64, rng.below(1000) as i64);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use crate::util::rng::Rng;
+
+/// Base seed; override with the `DIT_PROP_SEED` environment variable to
+/// replay a CI failure locally.
+fn base_seed() -> u64 {
+    std::env::var("DIT_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xD17_5EED)
+}
+
+/// Derive the per-case seed. Public so failures can be replayed.
+pub fn case_seed(base: u64, case: u64) -> u64 {
+    // splitmix64 step keeps case streams decorrelated.
+    let mut z = base.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Run `prop` for `cases` random cases; panic with the failing seed on error.
+pub fn check(name: &str, cases: u64, prop: impl Fn(&mut Rng)) {
+    let base = base_seed();
+    for case in 0..cases {
+        let seed = case_seed(base, case);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let mut rng = Rng::new(seed);
+            prop(&mut rng);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(String::as_str)
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}): {msg}\n\
+                 replay: DIT_PROP_SEED={base} or quickprop::check_one({seed:#x}, ..)"
+            );
+        }
+    }
+}
+
+/// Replay a single case by exact seed.
+pub fn check_one(seed: u64, prop: impl Fn(&mut Rng)) {
+    let mut rng = Rng::new(seed);
+    prop(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("xor involution", 32, |rng| {
+            let x = rng.next_u64();
+            let k = rng.next_u64();
+            assert_eq!((x ^ k) ^ k, x);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let result = std::panic::catch_unwind(|| {
+            check("always fails", 4, |_| panic!("boom"));
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("always fails"), "{msg}");
+        assert!(msg.contains("seed"), "{msg}");
+    }
+
+    #[test]
+    fn case_seeds_are_distinct() {
+        let s: std::collections::HashSet<u64> = (0..1000).map(|c| case_seed(1, c)).collect();
+        assert_eq!(s.len(), 1000);
+    }
+}

@@ -1,0 +1,152 @@
+//! Integration tests: the full three-layer stack.
+//!
+//! These tests require `make artifacts` (the JAX/Pallas → HLO-text AOT
+//! step) to have run: they load the golden GEMM executables through the
+//! PJRT CPU client and check the Rust functional executor — i.e. the
+//! *deployment's* data movement over the simulated HBM/NoC — against the
+//! XLA numbers. This is the paper's "Benchmark" stage ("compares results
+//! against reference outputs to validate correctness") end-to-end.
+
+use dit::arch::{ArchConfig, GemmShape};
+use dit::coordinator;
+use dit::runtime::Oracle;
+use dit::schedule::{retune_tk, Dataflow, Schedule};
+use dit::util::rng::Rng;
+
+fn oracle() -> Oracle {
+    Oracle::open("artifacts").expect("run `make artifacts` before `cargo test`")
+}
+
+#[test]
+fn oracle_matches_cpu_reference() {
+    let mut o = oracle();
+    let (m, n, k) = (64, 64, 64);
+    let mut rng = Rng::new(11);
+    let a = rng.f32_vec(m * k);
+    let b = rng.f32_vec(k * n);
+    let got = o.gemm(m, n, k, &a, &b).unwrap();
+    // Plain CPU reference.
+    let mut want = vec![0f32; m * n];
+    dit::functional::mmad_f32(&a, &b, &mut want, m, n, k);
+    let diff = dit::functional::max_abs_diff(&got, &want);
+    assert!(diff < 1e-3, "PJRT vs CPU reference diff {diff}");
+}
+
+#[test]
+fn oracle_epilogue_matches_reference() {
+    let mut o = oracle();
+    let (m, n, k) = (64, 64, 64);
+    let mut rng = Rng::new(13);
+    let a = rng.f32_vec(m * k);
+    let b = rng.f32_vec(k * n);
+    let bias = rng.f32_vec(n);
+    let got = o.gemm_bias_relu(m, n, k, &a, &b, &bias).unwrap();
+    let mut c = vec![0f32; m * n];
+    dit::functional::mmad_f32(&a, &b, &mut c, m, n, k);
+    for i in 0..m {
+        for j in 0..n {
+            c[i * n + j] = (c[i * n + j] + bias[j]).max(0.0);
+        }
+    }
+    let diff = dit::functional::max_abs_diff(&got, &c);
+    assert!(diff < 1e-3, "epilogue diff {diff}");
+}
+
+#[test]
+fn manifest_covers_required_shape_families() {
+    let o = oracle();
+    let shapes = o.shapes("gemm");
+    assert!(shapes.len() >= 5, "{shapes:?}");
+    // The ragged §4.1.3 analogue and a flat-decode analogue must exist.
+    assert!(shapes.iter().any(|&(_, n, _)| n == 66));
+    assert!(shapes.iter().any(|&(m, n, _)| m <= 64 && n >= 8 * m));
+}
+
+/// Every artifact shape × a representative schedule set, verified
+/// functionally against the PJRT golden GEMM on a 4×4 SoftHier.
+#[test]
+fn functional_deployments_match_pjrt_oracle() {
+    let mut o = oracle();
+    let arch = ArchConfig::tiny(4, 4);
+    for (m, n, k) in o.shapes("gemm") {
+        let shape = GemmShape::new(m, n, k);
+        let mut scheds: Vec<Schedule> = vec![
+            Schedule::summa(&arch, shape),
+            Schedule::baseline(&arch, shape),
+            Schedule::systolic(&arch, shape),
+        ];
+        if k >= 128 {
+            scheds.push(Schedule::splitk(&arch, shape, 2));
+        }
+        // Hierarchical variants re-derive tk (they stage more in L1).
+        scheds.push(retune_tk(&arch, shape, &Schedule {
+            dataflow: Dataflow::SystolicOverSumma { group: 2 },
+            ..Schedule::summa(&arch, shape)
+        }));
+        scheds.push(retune_tk(&arch, shape, &Schedule {
+            dataflow: Dataflow::SummaOverSystolic { group: 2 },
+            ..Schedule::summa(&arch, shape)
+        }));
+        for sched in scheds {
+            let report = coordinator::verify(&arch, shape, &sched, &mut o, 0xA5)
+                .unwrap_or_else(|e| panic!("{} on {shape}: {e}", sched.name()));
+            assert!(
+                report.passed(),
+                "{} on {shape}: diff {} > tol {}",
+                report.schedule,
+                report.max_abs_diff,
+                report.tolerance
+            );
+        }
+    }
+}
+
+/// The flat-GEMM cluster-remap path (Insight 4) against the oracle.
+#[test]
+fn flat_remap_verifies_against_oracle() {
+    let mut o = oracle();
+    let arch = ArchConfig::tiny(4, 4);
+    let shape = GemmShape::new(64, 528, 512);
+    for splits in [4, 8] {
+        let sched = Schedule::flat_remap(&arch, shape, splits);
+        let report = coordinator::verify(&arch, shape, &sched, &mut o, 0x5A).unwrap();
+        assert!(report.passed(), "{}: diff {}", report.schedule, report.max_abs_diff);
+    }
+}
+
+/// Autotuning end-to-end: the selected best schedule must also be
+/// numerically correct.
+#[test]
+fn autotuned_best_schedule_is_correct() {
+    let mut o = oracle();
+    let arch = ArchConfig::tiny(4, 4);
+    let shape = GemmShape::new(128, 128, 128);
+    let result = coordinator::autotune(&arch, shape).unwrap();
+    let best = result.best().schedule.clone();
+    let report = coordinator::verify(&arch, shape, &best, &mut o, 0x77).unwrap();
+    assert!(report.passed(), "best={} diff {}", report.schedule, report.max_abs_diff);
+}
+
+/// Preload files round-trip through disk (the workflow's Preload stage).
+#[test]
+fn preload_file_roundtrip_on_disk() {
+    use dit::layout::{preload::Preload, MatrixLayout};
+    let l = MatrixLayout::optimized(32, 32, 4, (2, 2), (16, 16), 4);
+    let mut p = Preload::new(4);
+    p.scatter_f32(&l, &Rng::new(3).f32_vec(1024));
+    let path = std::env::temp_dir().join(format!("dit_preload_{}.bin", std::process::id()));
+    p.save(&path).unwrap();
+    let q = Preload::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(p, q);
+}
+
+/// The CLI verify command wires everything together.
+#[test]
+fn cli_verify_command() {
+    let argv: Vec<String> = "verify --shape 128x128x128 --grid 4 --schedule summa"
+        .split_whitespace()
+        .map(String::from)
+        .collect();
+    dit::cli::run(&argv).unwrap();
+}

@@ -1,0 +1,200 @@
+//! Cross-module property tests and failure injection.
+//!
+//! These complement the per-module `#[cfg(test)]` properties: here whole
+//! pipelines (schedule → codegen → functional / simulation) are exercised
+//! under randomized inputs via the in-tree quickprop harness, plus
+//! deliberate corruption of deployments to prove validation catches it.
+
+use dit::arch::{ArchConfig, GemmShape};
+use dit::codegen::generate;
+use dit::coordinator;
+use dit::functional::{max_abs_diff, mmad_f32, run_gemm};
+use dit::ir::{validate, IrError, Op};
+use dit::schedule::{candidates, Schedule};
+use dit::util::quickprop::check;
+use dit::util::rng::Rng;
+
+/// Any random (shape, schedule-candidate) pair on a small grid computes
+/// the same GEMM as the plain CPU reference.
+#[test]
+fn prop_random_shapes_all_candidates_correct() {
+    check("random shape x candidate numerics", 6, |rng| {
+        let arch = ArchConfig::tiny(4, 4);
+        let m = rng.range(1, 12) * 8;
+        let n = rng.range(1, 12) * 8;
+        let k = rng.range(1, 8) * 16;
+        let shape = GemmShape::new(m, n, k);
+        let mut a_rng = Rng::new(rng.next_u64());
+        let a = a_rng.f32_vec(m * k);
+        let b = a_rng.f32_vec(k * n);
+        let mut want = vec![0f32; m * n];
+        mmad_f32(&a, &b, &mut want, m, n, k);
+        let cands = candidates(&arch, shape);
+        // Pick one candidate per case (full cross-product lives in the
+        // lib tests); random selection over many runs covers the space.
+        let sched = rng.choose(&cands).clone();
+        let dep = generate(&arch, shape, &sched, 4)
+            .unwrap_or_else(|e| panic!("{}: {e}", sched.name()));
+        let got = run_gemm(&arch, &dep, &a, &b).unwrap();
+        let diff = max_abs_diff(&got, &want);
+        assert!(diff < 1e-3, "{} on {shape}: {diff}", sched.name());
+    });
+}
+
+/// Simulated makespans are strictly positive, finite, and deterministic;
+/// utilization is bounded for every candidate.
+#[test]
+fn prop_simulation_invariants() {
+    check("simulation invariants", 10, |rng| {
+        let arch = ArchConfig::tiny(4, 4);
+        let shape = GemmShape::new(rng.range(4, 40) * 8, rng.range(4, 40) * 8, rng.range(2, 16) * 32);
+        let cands = candidates(&arch, shape);
+        let sched = rng.choose(&cands).clone();
+        let s1 = coordinator::simulate_schedule(&arch, shape, &sched).unwrap();
+        let s2 = coordinator::simulate_schedule(&arch, shape, &sched).unwrap();
+        assert!(s1.makespan_ns.is_finite() && s1.makespan_ns > 0.0);
+        assert_eq!(s1.makespan_ns, s2.makespan_ns, "nondeterministic sim");
+        assert!(s1.utilization() > 0.0 && s1.utilization() <= 1.0);
+        assert!(s1.hbm_utilization() <= 1.0 + 1e-9);
+        assert!(s1.total_flops >= s1.useful_flops);
+    });
+}
+
+/// The autotuner's chosen schedule is never dominated by a candidate it
+/// itself ranked (ranking is internally consistent).
+#[test]
+fn prop_autotune_ranking_consistent() {
+    check("autotune ranking consistency", 4, |rng| {
+        let arch = ArchConfig::tiny(4, 4);
+        let shape = GemmShape::new(rng.range(8, 24) * 8, rng.range(8, 24) * 8, 256);
+        let result = coordinator::autotune(&arch, shape).unwrap();
+        let best = &result.ranking[0];
+        for s in &result.ranking {
+            assert!(best.stats.makespan_ns <= s.stats.makespan_ns + 1e-9);
+        }
+    });
+}
+
+// ---------------- failure injection ----------------
+
+fn valid_dep(arch: &ArchConfig) -> dit::ir::Deployment {
+    let shape = GemmShape::new(64, 64, 128);
+    generate(arch, shape, &Schedule::summa(arch, shape), 4).unwrap()
+}
+
+/// Dropping any single receive op from a SUMMA deployment must be caught
+/// by communication-matching validation.
+#[test]
+fn inject_dropped_recv_is_caught() {
+    let arch = ArchConfig::tiny(4, 4);
+    let mut dep = valid_dep(&arch);
+    'outer: for p in &mut dep.programs {
+        for s in &mut p.steps {
+            if let Some(pos) =
+                s.ops.iter().position(|o| matches!(o, Op::RecvMulticast { .. }))
+            {
+                s.ops.remove(pos);
+                break 'outer;
+            }
+        }
+    }
+    let err = validate(&arch, &dep).unwrap_err();
+    assert!(matches!(err, IrError::UnmatchedComm { .. }), "{err}");
+}
+
+/// Shrinking any buffer below its traffic must be caught.
+#[test]
+fn inject_shrunken_buffer_is_caught() {
+    let arch = ArchConfig::tiny(4, 4);
+    let mut dep = valid_dep(&arch);
+    dep.programs[0].bufs[0].bytes = 4;
+    let err = validate(&arch, &dep).unwrap_err();
+    assert!(
+        matches!(err, IrError::BufTooSmall { .. } | IrError::BufferRace { .. }),
+        "{err}"
+    );
+}
+
+/// Duplicating a tile's program must be caught.
+#[test]
+fn inject_duplicate_tile_is_caught() {
+    let arch = ArchConfig::tiny(4, 4);
+    let mut dep = valid_dep(&arch);
+    let clone = dep.programs[0].clone();
+    dep.programs.push(clone);
+    let err = validate(&arch, &dep).unwrap_err();
+    assert!(matches!(err, IrError::DuplicateProgram(_)), "{err}");
+}
+
+/// Moving a compute op into the superstep whose comm writes its operand
+/// must be caught as a double-buffer race.
+#[test]
+fn inject_buffer_race_is_caught() {
+    let arch = ArchConfig::tiny(4, 4);
+    let mut dep = valid_dep(&arch);
+    // Find a program with a Mmad and a comm-write of the same buffer in an
+    // earlier step; move the Mmad there.
+    'outer: for p in &mut dep.programs {
+        for si in 1..p.steps.len() {
+            let mmads: Vec<Op> = p.steps[si]
+                .ops
+                .iter()
+                .filter(|o| matches!(o, Op::Mmad { .. }))
+                .cloned()
+                .collect();
+            if mmads.is_empty() {
+                continue;
+            }
+            let op = mmads[0].clone();
+            if let Op::Mmad { a, .. } = op {
+                let prev_writes: Vec<_> = p.steps[si - 1]
+                    .ops
+                    .iter()
+                    .filter(|o| !o.is_compute())
+                    .flat_map(|o| o.writes())
+                    .collect();
+                if prev_writes.contains(&a) {
+                    let pos = p.steps[si]
+                        .ops
+                        .iter()
+                        .position(|o| matches!(o, Op::Mmad { .. }))
+                        .unwrap();
+                    let op = p.steps[si].ops.remove(pos);
+                    p.steps[si - 1].ops.push(op);
+                    break 'outer;
+                }
+            }
+        }
+    }
+    let err = validate(&arch, &dep).unwrap_err();
+    assert!(matches!(err, IrError::BufferRace { .. }), "{err}");
+}
+
+/// An architecture too small for a schedule must be rejected before
+/// anything is generated.
+#[test]
+fn inject_oversubscribed_schedule_rejected() {
+    let big = ArchConfig::tiny(8, 8);
+    let small = ArchConfig::tiny(2, 2);
+    let shape = GemmShape::new(64, 64, 64);
+    let sched = Schedule::summa(&big, shape); // logical 8x8
+    assert!(generate(&small, shape, &sched, 4).is_err());
+}
+
+/// Zero-sized problems are rejected cleanly, not panicking.
+#[test]
+fn degenerate_problems_do_not_panic() {
+    let arch = ArchConfig::tiny(2, 2);
+    for (m, n, k) in [(1, 1, 1), (1, 64, 1), (7, 3, 5)] {
+        let shape = GemmShape::new(m, n, k);
+        let sched = Schedule::summa(&arch, shape);
+        let dep = generate(&arch, shape, &sched, 4).unwrap();
+        let mut rng = Rng::new(1);
+        let a = rng.f32_vec(m * k);
+        let b = rng.f32_vec(k * n);
+        let got = run_gemm(&arch, &dep, &a, &b).unwrap();
+        let mut want = vec![0f32; m * n];
+        mmad_f32(&a, &b, &mut want, m, n, k);
+        assert!(max_abs_diff(&got, &want) < 1e-4, "{shape}");
+    }
+}
