@@ -1,0 +1,48 @@
+//! Workload-level autotuning: tune a whole transformer serving mix —
+//! prefill QKV / attention-out / FFN projections plus two flat decode
+//! steps — in one parallel, memoized engine pass (§4.1.4 scaled from one
+//! GEMM to the realistic traffic shape).
+//!
+//! ```sh
+//! cargo run --release --example tune_workload
+//! ```
+
+use dit::arch::workload::Workload;
+use dit::arch::ArchConfig;
+use dit::coordinator::engine::Engine;
+use dit::report::workload_summary;
+
+fn main() -> anyhow::Result<()> {
+    let arch = ArchConfig::gh200_like();
+    let engine = Engine::new(&arch);
+    let suite = Workload::builtin("transformer").expect("builtin suite");
+    println!(
+        "tuning workload '{}' ({} GEMMs) on {} with {} workers\n",
+        suite.name,
+        suite.items.len(),
+        arch.name,
+        engine.workers()
+    );
+
+    let rep = engine.tune_workload(&suite)?;
+    print!("{}", workload_summary(&rep).markdown());
+    println!(
+        "\ntotal   : {} per forward pass ({:.0} TFLOP/s weighted over {} GEMM executions)",
+        dit::util::human_time_ns(rep.total_time_ns()),
+        rep.aggregate_tflops(),
+        rep.total_count(),
+    );
+    println!(
+        "engine  : {} simulations, {} cache hits (decode steps repeat shapes), {:.0} ms wall",
+        rep.sim_calls, rep.cache_hits, rep.elapsed_ms
+    );
+
+    // Tuning the same suite again is free — everything is memoized.
+    let rep2 = engine.tune_workload(&suite)?;
+    println!(
+        "re-tune : {} new simulations, {} cache hits (fully memoized)",
+        rep2.sim_calls, rep2.cache_hits
+    );
+    anyhow::ensure!(rep2.sim_calls == 0, "second tuning pass should be free");
+    Ok(())
+}

@@ -14,6 +14,7 @@
 //! | fig10  | flat GEMM TFLOPS vs GH200                                  |
 //! | fig11  | flat GEMM HBM bandwidth utilization                        |
 //! | fig12  | portability: SoftHier-A100/GH200 vs the matching GPUs      |
+//! | workload | transformer serving-suite batched autotuning (engine)    |
 //!
 //! Absolute numbers come from the analytical-contention SoftHier model and
 //! the calibrated GPU baselines (see DESIGN.md §Substitutions); the point
@@ -23,7 +24,9 @@
 
 use std::time::Instant;
 
+use dit::arch::workload::Workload;
 use dit::arch::{ArchConfig, GemmShape};
+use dit::coordinator::engine::Engine;
 use dit::coordinator::{autotune, simulate_schedule};
 use dit::perfmodel::{ridge_intensity, roofline_tflops, workloads, GpuSpec};
 use dit::report::{AsciiPlot, Table};
@@ -69,6 +72,9 @@ fn main() {
     }
     if want("fig12") {
         fig12();
+    }
+    if want("workload") {
+        workload_bench();
     }
     eprintln!("\n[bench harness completed in {:.1?}]", t0.elapsed());
 }
@@ -391,6 +397,26 @@ fn fig11() {
     }
     print!("\n{}", t.markdown());
     println!("(paper: DiT achieves higher HBM bandwidth utilization in this regime)");
+}
+
+// --------------------------------------------------------------------
+fn workload_bench() {
+    let arch = ArchConfig::gh200_like();
+    let engine = Engine::new(&arch);
+    let suite = Workload::builtin("transformer").expect("builtin suite");
+    let rep = engine.tune_workload(&suite).expect("tune_workload");
+    print!("\n{}", dit::report::workload_summary(&rep).markdown());
+    println!(
+        "aggregate: {:.0} TFLOP/s weighted over {} GEMM executions ({} per pass)",
+        rep.aggregate_tflops(),
+        rep.total_count(),
+        dit::util::human_time_ns(rep.total_time_ns()),
+    );
+    println!(
+        "engine: {} simulations, {} cache hits, {} workers, {:.0} ms wall",
+        rep.sim_calls, rep.cache_hits, rep.workers, rep.elapsed_ms
+    );
+    println!("(repeated decode-step GEMMs are memoized — a serving mix tunes mostly from cache)");
 }
 
 // --------------------------------------------------------------------

@@ -12,6 +12,8 @@
 //! 4 TB/s) and [`ArchConfig::a100_like`] (312 TFLOPS, 1.56 TB/s), plus
 //! [`ArchConfig::tiny`] grids for functional verification.
 
+pub mod workload;
+
 use crate::collective::TileCoord;
 use crate::util::cfgtext::Doc;
 

@@ -1,0 +1,211 @@
+//! Named GEMM workload suites — the traffic shapes a deployment engine
+//! tunes as a batch instead of one shape at a time.
+//!
+//! The realistic unit of work for an LLM accelerator is not a single GEMM
+//! but a transformer layer's worth of them: prefill QKV / attention-output
+//! / FFN projections (compute-bound) and the flat decode GEMMs of token
+//! generation (memory-bound, §4.1.4's regime). A [`Workload`] names such a
+//! suite; `coordinator::engine` tunes every shape in it concurrently and
+//! memoizes repeated shapes (decode traffic repeats the *same* GEMMs every
+//! step, so a serving mix is mostly cache hits).
+
+use super::GemmShape;
+
+/// One GEMM instance in a workload.
+#[derive(Debug, Clone)]
+pub struct WorkloadItem {
+    /// Human-readable role, e.g. `prefill/qkv`.
+    pub label: String,
+    pub shape: GemmShape,
+    /// How many times this GEMM executes per workload pass (e.g. once per
+    /// transformer layer). Weights the aggregate report; tuning cost is
+    /// per unique shape, not per count.
+    pub count: usize,
+}
+
+/// A named suite of GEMM shapes.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub name: String,
+    pub items: Vec<WorkloadItem>,
+}
+
+impl Workload {
+    pub fn new(name: impl Into<String>) -> Workload {
+        Workload { name: name.into(), items: Vec::new() }
+    }
+
+    /// A single-shape workload (what `Engine::tune` wraps).
+    pub fn single(name: impl Into<String>, shape: GemmShape) -> Workload {
+        let mut w = Workload::new(name);
+        w.push("gemm", shape, 1);
+        w
+    }
+
+    pub fn push(&mut self, label: impl Into<String>, shape: GemmShape, count: usize) -> &mut Self {
+        self.items.push(WorkloadItem { label: label.into(), shape, count });
+        self
+    }
+
+    /// Append another workload's items (serving mixes compose suites).
+    pub fn extend(&mut self, other: Workload) -> &mut Self {
+        self.items.extend(other.items);
+        self
+    }
+
+    /// Item shapes in order (repeats included).
+    pub fn shapes(&self) -> Vec<GemmShape> {
+        self.items.iter().map(|i| i.shape).collect()
+    }
+
+    /// Total FLOPs of one workload pass (counts applied).
+    pub fn total_flops(&self) -> f64 {
+        self.items.iter().map(|i| i.count as f64 * i.shape.flops()).sum()
+    }
+
+    /// Total GEMM executions per pass (counts applied).
+    pub fn total_count(&self) -> usize {
+        self.items.iter().map(|i| i.count).sum()
+    }
+
+    /// One transformer layer's prefill GEMMs for `tokens` tokens
+    /// (batch × sequence), repeated `layers` times per pass: QKV
+    /// projection, attention output projection, FFN up and FFN down.
+    pub fn transformer_prefill(
+        tag: &str,
+        tokens: usize,
+        d_model: usize,
+        d_ff: usize,
+        layers: usize,
+    ) -> Workload {
+        let mut w = Workload::new(tag.to_string());
+        w.push(format!("{tag}/qkv"), GemmShape::new(tokens, 3 * d_model, d_model), layers);
+        w.push(format!("{tag}/attn-out"), GemmShape::new(tokens, d_model, d_model), layers);
+        w.push(format!("{tag}/ffn-up"), GemmShape::new(tokens, d_ff, d_model), layers);
+        w.push(format!("{tag}/ffn-down"), GemmShape::new(tokens, d_model, d_ff), layers);
+        w
+    }
+
+    /// The decode step: same four projections at M = `batch` tokens — the
+    /// flat, memory-bound GEMMs of autoregressive generation.
+    pub fn transformer_decode(
+        tag: &str,
+        batch: usize,
+        d_model: usize,
+        d_ff: usize,
+        layers: usize,
+    ) -> Workload {
+        Workload::transformer_prefill(tag, batch, d_model, d_ff, layers)
+    }
+
+    /// A serving mix: one prefill pass plus `decode_steps` decode steps.
+    /// Every decode step issues the *same* GEMM shapes, so all steps after
+    /// the first are pure cache hits in the tuning engine — the realistic
+    /// traffic profile batched autotuning exists for.
+    pub fn transformer_serving(
+        prefill_tokens: usize,
+        decode_batch: usize,
+        decode_steps: usize,
+        d_model: usize,
+        d_ff: usize,
+        layers: usize,
+    ) -> Workload {
+        let mut w = Workload::new("transformer-serving");
+        w.extend(Workload::transformer_prefill(
+            "prefill",
+            prefill_tokens,
+            d_model,
+            d_ff,
+            layers,
+        ));
+        for step in 0..decode_steps {
+            w.extend(Workload::transformer_decode(
+                &format!("decode[t+{step}]"),
+                decode_batch,
+                d_model,
+                d_ff,
+                layers,
+            ));
+        }
+        w
+    }
+
+    /// Built-in suites for the CLI / benches. Model dimensions follow the
+    /// paper's DeepSeek-V3-flavoured evaluation set (d_model = 7168, MoE
+    /// expert FFN d_ff = 2048, 61 layers; `4096x7168x2048` is literally a
+    /// Fig. 9 shape).
+    pub fn builtin(name: &str) -> Option<Workload> {
+        match name {
+            "prefill" => Some(Workload::transformer_prefill("prefill", 4096, 7168, 2048, 61)),
+            "decode" => Some(Workload::transformer_decode("decode", 64, 7168, 2048, 61)),
+            "transformer" => Some(Workload::transformer_serving(4096, 64, 2, 7168, 2048, 61)),
+            "tiny" => {
+                // Small suite that fits tiny test grids (smoke runs).
+                let mut w = Workload::new("tiny");
+                w.push("square", GemmShape::new(128, 128, 256), 1);
+                w.push("ragged", GemmShape::new(96, 66, 128), 1);
+                w.push("flat", GemmShape::new(16, 512, 512), 1);
+                w.push("square-again", GemmShape::new(128, 128, 256), 1);
+                Some(w)
+            }
+            _ => None,
+        }
+    }
+
+    /// Names accepted by [`Workload::builtin`].
+    pub fn builtin_names() -> &'static [&'static str] {
+        &["prefill", "decode", "transformer", "tiny"]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transformer_prefill_shapes() {
+        let w = Workload::transformer_prefill("p", 4096, 7168, 2048, 61);
+        assert_eq!(w.items.len(), 4);
+        assert_eq!(w.items[0].shape, GemmShape::new(4096, 3 * 7168, 7168));
+        assert_eq!(w.items[3].shape, GemmShape::new(4096, 7168, 2048)); // Fig. 9 shape
+        assert!(w.items.iter().all(|i| i.count == 61));
+        assert_eq!(w.total_count(), 4 * 61);
+        assert!(w.total_flops() > 0.0);
+    }
+
+    #[test]
+    fn decode_shapes_are_flat() {
+        let w = Workload::transformer_decode("d", 64, 7168, 2048, 61);
+        for item in &w.items {
+            assert!(item.shape.is_flat(), "{}: {}", item.label, item.shape);
+        }
+    }
+
+    #[test]
+    fn serving_mix_repeats_decode_shapes() {
+        let w = Workload::transformer_serving(4096, 64, 2, 7168, 2048, 61);
+        assert_eq!(w.items.len(), 12); // 4 prefill + 2 × 4 decode
+        let shapes = w.shapes();
+        let mut uniq = shapes.clone();
+        uniq.sort_by_key(|s| (s.m, s.n, s.k));
+        uniq.dedup();
+        assert!(uniq.len() < shapes.len(), "serving mix must repeat shapes");
+        assert_eq!(uniq.len(), 8);
+    }
+
+    #[test]
+    fn builtins_resolve() {
+        for name in Workload::builtin_names() {
+            let w = Workload::builtin(name).unwrap();
+            assert!(!w.items.is_empty(), "{name}");
+        }
+        assert!(Workload::builtin("nope").is_none());
+    }
+
+    #[test]
+    fn single_wraps_one_shape() {
+        let w = Workload::single("s", GemmShape::new(1, 2, 3));
+        assert_eq!(w.items.len(), 1);
+        assert_eq!(w.total_count(), 1);
+    }
+}

@@ -5,7 +5,8 @@
 //! dit candidates --preset P --shape MxNxK            # list schedules
 //! dit simulate  --preset P --shape MxNxK [--schedule NAME] [--tk N] ...
 //! dit autotune  --preset P --shape MxNxK             # rank all candidates
-//! dit verify    --shape MxNxK [--grid RxC] [--schedule NAME]   # vs PJRT
+//! dit tune-workload --preset P --suite transformer   # batch-tune a suite
+//! dit verify    --shape MxNxK [--grid RxC] [--schedule NAME]   # vs oracle
 //! dit fig       --id 7a|7b|7c|7d|8|9|10|11|12|1|table1  # regen a figure
 //! ```
 
@@ -13,8 +14,10 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Context, Result};
 
+use crate::arch::workload::Workload;
 use crate::arch::{ArchConfig, GemmShape};
 use crate::coordinator;
+use crate::coordinator::engine::Engine;
 use crate::report::Table;
 use crate::schedule::{candidates, Dataflow, Schedule};
 
@@ -134,13 +137,17 @@ COMMANDS:
               [--tk N] [--stages N] [--double-buffer b] [--opt-layout b]
               [--splits N] [--group N]
   autotune    --preset P --shape MxNxK                  rank all candidates
-  verify      --shape MxNxK [--grid N] [--schedule S]   functional vs PJRT oracle
-              [--artifacts DIR] [--seed N]
+  tune-workload --preset P [--suite NAME]               batch-tune a GEMM suite
+              [--shapes MxNxK,MxNxK,...] [--workers N]  (suites: prefill, decode,
+              [--csv true]                               transformer, tiny)
+  verify      --shape MxNxK [--grid N] [--schedule S]   functional vs golden oracle
+              [--artifacts DIR] [--seed N]               (CPU reference if no PJRT)
   help                                                  this text
 
 EXAMPLES:
   dit simulate --preset gh200 --shape 4096x2112x7168 --schedule summa
   dit autotune --preset gh200 --shape 64x2112x7168
+  dit tune-workload --preset gh200 --suite transformer
   dit verify   --shape 128x128x128 --grid 4 --schedule splitk --splits 2
 ";
 
@@ -156,6 +163,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "candidates" => cmd_candidates(&args),
         "simulate" => cmd_simulate(&args),
         "autotune" => cmd_autotune(&args),
+        "tune-workload" => cmd_tune_workload(&args),
         "verify" => cmd_verify(&args),
         other => bail!("unknown command {other:?}; try `dit help`"),
     }
@@ -246,6 +254,53 @@ fn cmd_autotune(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Batch-tune a named (or ad-hoc `--shapes`) GEMM suite on the parallel
+/// memoizing engine and print the per-shape + aggregate report.
+fn cmd_tune_workload(args: &Args) -> Result<()> {
+    let arch = parse_arch(args.get_or("preset", "gh200"))?;
+    let workload = match args.get("shapes") {
+        Some(list) => {
+            let mut w = Workload::new("custom");
+            for (i, spec) in list.split(',').enumerate() {
+                w.push(format!("gemm{i}"), parse_shape(spec.trim())?, 1);
+            }
+            w
+        }
+        None => {
+            let name = args.get_or("suite", "transformer");
+            Workload::builtin(name).with_context(|| {
+                format!("unknown suite {name:?}; available: {:?}", Workload::builtin_names())
+            })?
+        }
+    };
+    let mut engine = Engine::new(&arch);
+    if let Some(n) = args.get("workers") {
+        engine = engine.with_workers(n.parse().context("--workers")?);
+    }
+    let csv: bool = match args.get("csv") {
+        Some(v) => v.parse().context("--csv")?,
+        None => false,
+    };
+    let rep = engine.tune_workload(&workload)?;
+    let table = crate::report::workload_summary(&rep);
+    if csv {
+        print!("{}", table.csv());
+    } else {
+        print!("{}", table.markdown());
+    }
+    println!(
+        "aggregate  : {} per pass, {:.1} TFLOP/s weighted over {} GEMM executions",
+        crate::util::human_time_ns(rep.total_time_ns()),
+        rep.aggregate_tflops(),
+        rep.total_count(),
+    );
+    println!(
+        "engine     : {} simulations, {} cache hits, {} workers, {:.0} ms wall",
+        rep.sim_calls, rep.cache_hits, rep.workers, rep.elapsed_ms
+    );
+    Ok(())
+}
+
 fn cmd_verify(args: &Args) -> Result<()> {
     let grid: usize = args.get_or("grid", "4").parse().context("--grid")?;
     let arch = ArchConfig::tiny(grid, grid);
@@ -253,7 +308,14 @@ fn cmd_verify(args: &Args) -> Result<()> {
     let sched = parse_schedule(args, &arch, shape)?;
     let mut oracle = match args.get("artifacts") {
         Some(dir) => crate::runtime::Oracle::open(dir)?,
-        None => crate::runtime::Oracle::open_default()?,
+        None => match crate::runtime::Oracle::open_default() {
+            Ok(o) => o,
+            Err(e) => {
+                println!("note: PJRT oracle unavailable ({e:#})");
+                println!("      falling back to the f64-accumulation CPU reference oracle");
+                crate::runtime::Oracle::cpu_reference()
+            }
+        },
     };
     anyhow::ensure!(
         oracle.has("gemm", shape.m, shape.n, shape.k),
@@ -327,5 +389,17 @@ mod tests {
         run(&argv("candidates --preset tiny4 --shape 64x64x64")).unwrap();
         run(&argv("arch --preset a100")).unwrap();
         assert!(run(&argv("bogus")).is_err());
+    }
+
+    #[test]
+    fn run_tune_workload_smoke() {
+        // Ad-hoc shape list with a repeat (exercises the memo-cache), on a
+        // tiny grid so the test is fast.
+        run(&argv("tune-workload --preset tiny4 --shapes 64x64x64,96x96x96,64x64x64 --workers 2"))
+            .unwrap();
+        run(&argv("tune-workload --preset tiny4 --shapes 64x64x64 --csv true")).unwrap();
+        assert!(run(&argv("tune-workload --preset tiny4 --suite nope")).is_err());
+        assert!(run(&argv("tune-workload --preset tiny4 --shapes 12x34")).is_err());
+        assert!(run(&argv("tune-workload --preset tiny4 --shapes 8x8x8 --csv maybe")).is_err());
     }
 }

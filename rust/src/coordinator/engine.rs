@@ -1,0 +1,348 @@
+//! The parallel, batched autotuning engine.
+//!
+//! `coordinator::autotune` evaluates one shape's candidates serially; this
+//! module is the production-scale substrate on top of the same primitives:
+//!
+//! * **parallel** — candidate simulations run concurrently on a
+//!   `std::thread` worker pool (everything on the hot path is plain data,
+//!   so `ArchConfig`/`GemmShape`/`Schedule`/`Deployment`/`RunStats` are
+//!   all `Send + Sync` — asserted at compile time below);
+//! * **memoized** — results are cached under
+//!   `(architecture fingerprint, shape, schedule)`, so repeated shapes in
+//!   a workload (decode traffic repeats the same GEMMs every step) and
+//!   repeated tuning runs cost zero new simulations;
+//! * **batched** — [`Engine::tune_workload`] tunes a whole named suite
+//!   ([`Workload`], e.g. a transformer layer's prefill + decode GEMMs)
+//!   and returns per-shape best schedules plus an aggregate report.
+//!
+//! Results are **bit-identical** to the serial path: jobs are planned and
+//! merged in candidate-enumeration order (worker completion order never
+//! influences output), the simulator itself is deterministic, and the
+//! final ranking uses the same stable sort as `autotune`.
+
+use std::collections::{HashMap, HashSet};
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use super::{simulate_schedule, AutotuneResult, Scored};
+use crate::arch::workload::Workload;
+use crate::arch::{ArchConfig, GemmShape};
+use crate::ir::Deployment;
+use crate::schedule::{candidates, Schedule};
+use crate::sim::RunStats;
+
+// The worker pool shares these across threads by reference; if a future
+// refactor makes any of them thread-unsafe this fails to compile.
+#[allow(dead_code)]
+fn _assert_send_sync() {
+    fn check<T: Send + Sync>() {}
+    check::<ArchConfig>();
+    check::<GemmShape>();
+    check::<Schedule>();
+    check::<Deployment>();
+    check::<RunStats>();
+}
+
+/// Stable fingerprint of an architecture (hash of its canonical config
+/// text) — the cache-key component that keeps results from different
+/// SoftHier instances apart.
+pub fn arch_fingerprint(arch: &ArchConfig) -> u64 {
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    arch.to_text().hash(&mut h);
+    h.finish()
+}
+
+/// Simulation memo-cache key.
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct CacheKey {
+    arch_fp: u64,
+    shape: GemmShape,
+    sched: Schedule,
+}
+
+/// Per-shape tuning outcome inside a workload report.
+#[derive(Debug, Clone)]
+pub struct ShapeResult {
+    pub label: String,
+    pub shape: GemmShape,
+    pub count: usize,
+    pub result: AutotuneResult,
+}
+
+/// Aggregate outcome of one [`Engine::tune_workload`] call.
+#[derive(Debug, Clone)]
+pub struct WorkloadReport {
+    pub workload: String,
+    pub arch: String,
+    pub shapes: Vec<ShapeResult>,
+    /// Simulations actually executed during this call.
+    pub sim_calls: usize,
+    /// Candidate evaluations served from the memo-cache (or deduplicated
+    /// against an identical in-flight candidate) during this call.
+    pub cache_hits: usize,
+    /// Worker threads used for this call.
+    pub workers: usize,
+    /// Wall-clock tuning time, milliseconds.
+    pub elapsed_ms: f64,
+}
+
+impl WorkloadReport {
+    /// Simulated time for one workload pass: Σ count × best makespan.
+    pub fn total_time_ns(&self) -> f64 {
+        self.shapes
+            .iter()
+            .map(|s| s.count as f64 * s.result.best().stats.makespan_ns)
+            .sum()
+    }
+
+    /// Useful FLOPs for one workload pass (counts applied).
+    pub fn total_flops(&self) -> f64 {
+        self.shapes.iter().map(|s| s.count as f64 * s.shape.flops()).sum()
+    }
+
+    /// Count-weighted aggregate throughput, TFLOP/s.
+    pub fn aggregate_tflops(&self) -> f64 {
+        let t = self.total_time_ns();
+        if t <= 0.0 {
+            return 0.0;
+        }
+        self.total_flops() / t / 1e3
+    }
+
+    /// Total GEMM executions per pass (counts applied).
+    pub fn total_count(&self) -> usize {
+        self.shapes.iter().map(|s| s.count).sum()
+    }
+}
+
+/// The tuning engine: one architecture, a worker pool, a memo-cache.
+pub struct Engine {
+    arch: ArchConfig,
+    arch_fp: u64,
+    workers: usize,
+    cache: Mutex<HashMap<CacheKey, Option<RunStats>>>,
+    sim_calls: AtomicUsize,
+    cache_hits: AtomicUsize,
+}
+
+impl Engine {
+    /// Engine for an architecture with a default worker pool: one worker
+    /// per available core, clamped to [2, 16] so tuning is parallel even
+    /// on constrained CI machines.
+    pub fn new(arch: &ArchConfig) -> Engine {
+        let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        Engine {
+            arch: arch.clone(),
+            arch_fp: arch_fingerprint(arch),
+            workers: workers.clamp(2, 16),
+            cache: Mutex::new(HashMap::new()),
+            sim_calls: AtomicUsize::new(0),
+            cache_hits: AtomicUsize::new(0),
+        }
+    }
+
+    /// Override the worker-pool size (minimum 1).
+    pub fn with_workers(mut self, n: usize) -> Engine {
+        self.workers = n.max(1);
+        self
+    }
+
+    /// Configured worker-pool size.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Total simulations executed over the engine's lifetime.
+    pub fn sim_calls(&self) -> usize {
+        self.sim_calls.load(Ordering::Relaxed)
+    }
+
+    /// Total cache hits over the engine's lifetime.
+    pub fn cache_hits(&self) -> usize {
+        self.cache_hits.load(Ordering::Relaxed)
+    }
+
+    /// Cached simulation entries currently held.
+    pub fn cache_len(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Parallel, memoized autotune of a single shape. Bit-identical to
+    /// `coordinator::autotune` on the same architecture and shape.
+    pub fn tune(&self, shape: GemmShape) -> Result<AutotuneResult> {
+        let w = Workload::single("adhoc", shape);
+        let mut rep = self.tune_workload(&w)?;
+        Ok(rep.shapes.remove(0).result)
+    }
+
+    /// Tune every GEMM in a workload: enumerate candidates per item,
+    /// simulate all not-yet-cached candidates on the worker pool, and
+    /// assemble a per-item ranking plus aggregate statistics.
+    pub fn tune_workload(&self, w: &Workload) -> Result<WorkloadReport> {
+        let t0 = std::time::Instant::now();
+
+        struct Job {
+            key: CacheKey,
+            shape: GemmShape,
+            sched: Schedule,
+        }
+
+        // Phase 1 — plan (serial, deterministic): one job per candidate
+        // not already cached, deduplicated across repeated shapes.
+        let mut jobs: Vec<Job> = Vec::new();
+        let mut hits_this_call = 0usize;
+        {
+            let cache = self.cache.lock().unwrap();
+            let mut pending: HashSet<CacheKey> = HashSet::new();
+            for item in &w.items {
+                for sched in candidates(&self.arch, item.shape) {
+                    let key =
+                        CacheKey { arch_fp: self.arch_fp, shape: item.shape, sched: sched.clone() };
+                    if cache.contains_key(&key) || pending.contains(&key) {
+                        hits_this_call += 1;
+                    } else {
+                        pending.insert(key.clone());
+                        jobs.push(Job { key, shape: item.shape, sched });
+                    }
+                }
+            }
+        }
+        self.cache_hits.fetch_add(hits_this_call, Ordering::Relaxed);
+
+        // Phase 2 — evaluate: workers pull jobs off a shared index; each
+        // result lands in its job's own slot, so completion order is
+        // irrelevant to the merged output. Candidates that fail to lower
+        // are recorded as None (the serial path skips them identically).
+        let workers = self.workers.min(jobs.len()).max(1);
+        let results: Vec<Mutex<Option<Option<RunStats>>>> =
+            (0..jobs.len()).map(|_| Mutex::new(None)).collect();
+        let next = AtomicUsize::new(0);
+        let arch = &self.arch;
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= jobs.len() {
+                        break;
+                    }
+                    let job = &jobs[i];
+                    let stats = simulate_schedule(arch, job.shape, &job.sched).ok();
+                    self.sim_calls.fetch_add(1, Ordering::Relaxed);
+                    *results[i].lock().unwrap() = Some(stats);
+                });
+            }
+        });
+
+        // Phase 3 — commit results to the cache in job (= enumeration)
+        // order.
+        {
+            let mut cache = self.cache.lock().unwrap();
+            for (job, cell) in jobs.iter().zip(&results) {
+                let stats = cell.lock().unwrap().take().expect("worker completed every job");
+                cache.insert(job.key.clone(), stats);
+            }
+        }
+
+        // Phase 4 — assemble per-item rankings entirely from the cache,
+        // in candidate-enumeration order + the same stable sort the serial
+        // autotuner uses. This is what makes parallel == serial, bit for
+        // bit.
+        let cache = self.cache.lock().unwrap();
+        let mut shapes = Vec::with_capacity(w.items.len());
+        for item in &w.items {
+            let mut ranking = Vec::new();
+            for sched in candidates(&self.arch, item.shape) {
+                let key = CacheKey { arch_fp: self.arch_fp, shape: item.shape, sched };
+                if let Some(Some(stats)) = cache.get(&key) {
+                    ranking.push(Scored { schedule: key.sched, stats: stats.clone() });
+                }
+            }
+            anyhow::ensure!(
+                !ranking.is_empty(),
+                "no deployable schedule candidate for {} ({})",
+                item.shape,
+                item.label
+            );
+            ranking.sort_by(|a, b| a.stats.makespan_ns.total_cmp(&b.stats.makespan_ns));
+            shapes.push(ShapeResult {
+                label: item.label.clone(),
+                shape: item.shape,
+                count: item.count,
+                result: AutotuneResult { ranking },
+            });
+        }
+
+        Ok(WorkloadReport {
+            workload: w.name.clone(),
+            arch: self.arch.name.clone(),
+            shapes,
+            sim_calls: jobs.len(),
+            cache_hits: hits_this_call,
+            workers,
+            elapsed_ms: t0.elapsed().as_secs_f64() * 1e3,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::autotune;
+
+    #[test]
+    fn engine_tune_matches_serial_autotune() {
+        let arch = ArchConfig::tiny(4, 4);
+        let shape = GemmShape::new(128, 128, 256);
+        let engine = Engine::new(&arch).with_workers(3);
+        let par = engine.tune(shape).unwrap();
+        let ser = autotune(&arch, shape).unwrap();
+        assert_eq!(par.ranking.len(), ser.ranking.len());
+        for (p, s) in par.ranking.iter().zip(&ser.ranking) {
+            assert_eq!(p.schedule, s.schedule);
+            assert_eq!(p.stats.makespan_ns.to_bits(), s.stats.makespan_ns.to_bits());
+        }
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_architectures() {
+        assert_ne!(
+            arch_fingerprint(&ArchConfig::tiny(4, 4)),
+            arch_fingerprint(&ArchConfig::tiny(2, 2))
+        );
+        assert_eq!(
+            arch_fingerprint(&ArchConfig::tiny(4, 4)),
+            arch_fingerprint(&ArchConfig::tiny(4, 4))
+        );
+    }
+
+    #[test]
+    fn empty_workload_is_ok() {
+        let arch = ArchConfig::tiny(2, 2);
+        let engine = Engine::new(&arch);
+        let rep = engine.tune_workload(&Workload::new("empty")).unwrap();
+        assert!(rep.shapes.is_empty());
+        assert_eq!(rep.sim_calls, 0);
+        assert_eq!(rep.total_count(), 0);
+        assert_eq!(rep.aggregate_tflops(), 0.0);
+    }
+
+    #[test]
+    fn undeployable_item_reports_cleanly() {
+        let arch = ArchConfig::tiny(2, 2);
+        // Absurd K with tiny L1: every candidate overflows even chunked.
+        let mut w = Workload::new("bad");
+        w.push("huge", GemmShape::new(1 << 20, 1 << 20, 64), 1);
+        let err = engine_err(&arch, &w);
+        assert!(err.contains("no deployable schedule candidate"), "{err}");
+    }
+
+    fn engine_err(arch: &ArchConfig, w: &Workload) -> String {
+        match Engine::new(arch).tune_workload(w) {
+            Ok(_) => panic!("expected failure"),
+            Err(e) => format!("{e:#}"),
+        }
+    }
+}

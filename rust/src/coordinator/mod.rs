@@ -9,7 +9,12 @@
 //!   "Benchmark … compares results against reference outputs" stage);
 //! * [`autotune`] — "we iterate through our predefined schedule
 //!   candidates, guided by the insights above, to automatically select
-//!   the kernel achieving the best performance" (§4.1.4).
+//!   the kernel achieving the best performance" (§4.1.4);
+//! * [`engine`] — the parallel, batched, memoizing autotuner built on the
+//!   same primitives ([`engine::Engine::tune_workload`] tunes a whole
+//!   named GEMM suite, bit-identical to the serial path).
+
+pub mod engine;
 
 use anyhow::Result;
 

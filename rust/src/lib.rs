@@ -8,7 +8,9 @@
 //! `DESIGN.md` for the inventory and substitution notes):
 //!
 //! * [`arch`] — parametric SoftHier architecture descriptions (GH200-like,
-//!   A100-like, arbitrary grids) + config-file parsing.
+//!   A100-like, arbitrary grids) + config-file parsing, plus named GEMM
+//!   workload suites ([`arch::workload`]: transformer prefill/decode
+//!   traffic).
 //! * [`collective`] — the mask-based NoC collective group calculus
 //!   (`(i & M_row) = S_row ∧ (j & M_col) = S_col`) and mask synthesis.
 //! * [`layout`] — distributed multi-channel HBM data layouts (split scheme,
@@ -28,8 +30,9 @@
 //!   artifacts (`artifacts/*.hlo.txt`); the correctness oracle.
 //! * [`perfmodel`] — rooflines + analytical GPU baselines (CUTLASS /
 //!   DeepGEMM calibrated) used by the paper-figure benches.
-//! * [`coordinator`] — the end-to-end deployment driver and the
-//!   insight-guided schedule autotuner.
+//! * [`coordinator`] — the end-to-end deployment driver, the
+//!   insight-guided schedule autotuner, and the parallel batched
+//!   workload-tuning engine ([`coordinator::engine`]).
 //! * [`report`] — tables, CSV, and ASCII plots for the bench harness.
 //! * [`util`] — zero-dependency substrates: config text parser, JSON
 //!   writer, PRNG, mini property-test harness.
@@ -51,7 +54,9 @@ pub mod util;
 
 /// Convenience re-exports for examples and benches.
 pub mod prelude {
+    pub use crate::arch::workload::Workload;
     pub use crate::arch::{ArchConfig, GemmShape};
     pub use crate::collective::{Mask, TileCoord};
+    pub use crate::coordinator::engine::Engine;
     pub use crate::layout::{MatrixLayout, Placement};
 }

@@ -94,6 +94,29 @@ impl Table {
     }
 }
 
+/// Render a workload-tuning report (one row per GEMM in the suite, best
+/// schedule and throughput each) — the `tune-workload` CLI/bench table.
+pub fn workload_summary(rep: &crate::coordinator::engine::WorkloadReport) -> Table {
+    let mut t = Table::new(
+        format!("workload '{}' on {}", rep.workload, rep.arch),
+        &["gemm", "shape", "count", "best schedule", "TFLOP/s", "util %", "time/op", "total"],
+    );
+    for s in &rep.shapes {
+        let best = s.result.best();
+        t.row(vec![
+            s.label.clone(),
+            s.shape.to_string(),
+            s.count.to_string(),
+            best.schedule.name(),
+            format!("{:.1}", best.stats.tflops()),
+            format!("{:.1}", 100.0 * best.stats.utilization()),
+            crate::util::human_time_ns(best.stats.makespan_ns),
+            crate::util::human_time_ns(best.stats.makespan_ns * s.count as f64),
+        ]);
+    }
+    t
+}
+
 /// An ASCII scatter/line plot on log-log axes — enough to eyeball a
 /// roofline (Fig. 7a) in terminal output.
 pub struct AsciiPlot {
@@ -215,5 +238,55 @@ mod tests {
     fn plot_handles_empty() {
         let p = AsciiPlot::new("empty", "x", "y");
         assert!(p.render().contains("no data"));
+    }
+
+    #[test]
+    fn workload_summary_renders_rows_and_aggregates() {
+        use crate::arch::{ArchConfig, GemmShape};
+        use crate::coordinator::engine::{ShapeResult, WorkloadReport};
+        use crate::coordinator::{AutotuneResult, Scored};
+        use crate::schedule::Schedule;
+        use crate::sim::RunStats;
+
+        let arch = ArchConfig::tiny(2, 2);
+        let shape = GemmShape::new(64, 64, 64);
+        let stats = RunStats {
+            makespan_ns: 1000.0,
+            useful_flops: 2e6,
+            total_flops: 2e6,
+            hbm_read_bytes: 100,
+            hbm_write_bytes: 50,
+            noc_link_bytes: 10,
+            peak_tflops: 10.0,
+            hbm_peak_gbps: 100.0,
+            supersteps: 4,
+            compute_busy_ns: 500.0,
+            num_tiles: 4,
+            step_end_ns: vec![],
+        };
+        let sched = Schedule::summa(&arch, shape);
+        let rep = WorkloadReport {
+            workload: "demo".into(),
+            arch: arch.name.clone(),
+            shapes: vec![ShapeResult {
+                label: "qkv".into(),
+                shape,
+                count: 2,
+                result: AutotuneResult {
+                    ranking: vec![Scored { schedule: sched.clone(), stats }],
+                },
+            }],
+            sim_calls: 1,
+            cache_hits: 0,
+            workers: 2,
+            elapsed_ms: 1.0,
+        };
+        let md = workload_summary(&rep).markdown();
+        assert!(md.contains("workload 'demo'"), "{md}");
+        assert!(md.contains("qkv"), "{md}");
+        assert!(md.contains(&sched.name()), "{md}");
+        // aggregate: 2 × (2·64³) flops over 2 × 1000 ns = 0.524288 TFLOP/s.
+        assert!((rep.aggregate_tflops() - 0.524288).abs() < 1e-9, "{}", rep.aggregate_tflops());
+        assert_eq!(rep.total_count(), 2);
     }
 }

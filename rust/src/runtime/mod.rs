@@ -1,15 +1,23 @@
-//! PJRT runtime: loads the AOT-compiled JAX/Pallas golden GEMMs and runs
-//! them from Rust — Python is never on this path.
+//! Correctness oracles: the golden-number sources the functional executor
+//! is checked against.
 //!
-//! `make artifacts` lowers `python/compile/model.py` (whose inner tile
-//! product is the Layer-1 Pallas MMAD kernel) to HLO **text** files plus a
-//! `manifest.txt`; this module compiles them on the PJRT CPU client
-//! (`xla` crate) and exposes [`Oracle::gemm`] as the golden-number source
-//! the functional executor is checked against.
+//! Two backends sit behind the same [`Oracle`] API:
 //!
-//! HLO text — not serialized protos — is the interchange format: jax ≥ 0.5
-//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids (see /opt/xla-example/README.md).
+//! * **PJRT** (cargo feature `pjrt`): loads the AOT-compiled JAX/Pallas
+//!   golden GEMMs (`artifacts/*.hlo.txt` + `manifest.txt`, produced by
+//!   `make artifacts`) and runs them on the PJRT CPU client via the `xla`
+//!   crate — Python is never on this path. HLO text, not serialized
+//!   protos, is the interchange format: jax ≥ 0.5 emits 64-bit
+//!   instruction ids that xla_extension 0.5.1 rejects; the text parser
+//!   reassigns ids (see /opt/xla-example/README.md). The feature is off
+//!   by default because the `xla` crate is not available everywhere; see
+//!   `Cargo.toml`.
+//! * **CPU reference** ([`Oracle::cpu_reference`]): an always-available
+//!   double-precision-accumulation GEMM over the same artifact shape
+//!   families. Accumulating in f64 makes it numerically independent of
+//!   the f32 accumulation order used by both the functional executor and
+//!   the Pallas kernel, so it still exposes data-movement bugs (wrong
+//!   element, wrong tile, dropped K-panel) even without PJRT.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -26,49 +34,108 @@ pub struct ArtifactKey {
     pub k: usize,
 }
 
-/// The PJRT-backed correctness oracle.
+/// The verification shape families baked into the CPU reference oracle —
+/// mirrors `python/compile/aot.py::GEMM_SHAPES` so the no-artifacts test
+/// path covers the same geometry (square, ragged TN=66, flat decode).
+const CPU_GEMM_SHAPES: &[(usize, usize, usize)] = &[
+    (64, 64, 64),
+    (128, 128, 128),
+    (256, 256, 256),
+    (128, 384, 256),
+    (64, 528, 512), // flat-GEMM analogue (LLM decode, Fig. 7d geometry)
+    (96, 66, 128),  // ragged: 66 = 2112/32, the paper's §4.1.3 example
+    (256, 192, 512),
+];
+
+/// Mirrors `python/compile/aot.py::EPILOGUE_SHAPES`.
+const CPU_EPILOGUE_SHAPES: &[(usize, usize, usize)] = &[(64, 64, 64), (128, 96, 64)];
+
+enum Backend {
+    /// f64-accumulation CPU reference; always available.
+    Cpu,
+    #[cfg(feature = "pjrt")]
+    Pjrt(pjrt::Pjrt),
+}
+
+/// A correctness oracle (PJRT-backed or CPU reference).
 pub struct Oracle {
-    client: xla::PjRtClient,
+    #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
     dir: PathBuf,
     files: HashMap<ArtifactKey, String>,
-    compiled: HashMap<ArtifactKey, xla::PjRtLoadedExecutable>,
+    backend: Backend,
+}
+
+/// Parse `manifest.txt` into artifact-key → file-name entries.
+fn parse_manifest(text: &str) -> Result<HashMap<ArtifactKey, String>> {
+    let mut files = HashMap::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let parts: Vec<&str> = line.split_whitespace().collect();
+        if parts.len() != 5 {
+            bail!("bad manifest line: {line:?}");
+        }
+        let key = ArtifactKey {
+            entry: parts[0].to_string(),
+            m: parts[1].parse().context("manifest M")?,
+            n: parts[2].parse().context("manifest N")?,
+            k: parts[3].parse().context("manifest K")?,
+        };
+        files.insert(key, parts[4].to_string());
+    }
+    Ok(files)
 }
 
 impl Oracle {
     /// Open an artifacts directory (parses `manifest.txt`; compiles
-    /// executables lazily on first use).
+    /// executables lazily on first use). Requires the `pjrt` feature —
+    /// without it this returns an error explaining the fallback.
     pub fn open(dir: impl AsRef<Path>) -> Result<Oracle> {
         let dir = dir.as_ref().to_path_buf();
         let manifest = dir.join("manifest.txt");
         let text = std::fs::read_to_string(&manifest)
             .with_context(|| format!("read {manifest:?} — run `make artifacts` first"))?;
-        let mut files = HashMap::new();
-        for line in text.lines() {
-            let line = line.trim();
-            if line.is_empty() || line.starts_with('#') {
-                continue;
-            }
-            let parts: Vec<&str> = line.split_whitespace().collect();
-            if parts.len() != 5 {
-                bail!("bad manifest line: {line:?}");
-            }
-            let key = ArtifactKey {
-                entry: parts[0].to_string(),
-                m: parts[1].parse().context("manifest M")?,
-                n: parts[2].parse().context("manifest N")?,
-                k: parts[3].parse().context("manifest K")?,
-            };
-            files.insert(key, parts[4].to_string());
+        let files = parse_manifest(&text)?;
+        #[cfg(feature = "pjrt")]
+        {
+            Ok(Oracle { dir, files, backend: Backend::Pjrt(pjrt::Pjrt::new()?) })
         }
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        Ok(Oracle { client, dir, files, compiled: HashMap::new() })
+        #[cfg(not(feature = "pjrt"))]
+        {
+            let _ = files;
+            bail!(
+                "artifacts present at {dir:?} but dit was built without the `pjrt` \
+                 feature; add the `xla` dependency to rust/Cargo.toml and rebuild \
+                 with `--features pjrt`, or use Oracle::cpu_reference()"
+            )
+        }
     }
 
     /// Default artifacts location (`$DIT_ARTIFACTS` or `./artifacts`).
     pub fn open_default() -> Result<Oracle> {
-        let dir =
-            std::env::var("DIT_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        let dir = std::env::var("DIT_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
         Oracle::open(dir)
+    }
+
+    /// The pure-CPU reference oracle: computes golden numbers with f64
+    /// accumulation over the builtin verification shape families. Always
+    /// available — no artifacts, no PJRT, no Python.
+    pub fn cpu_reference() -> Oracle {
+        let mut files = HashMap::new();
+        for &(m, n, k) in CPU_GEMM_SHAPES {
+            files.insert(ArtifactKey { entry: "gemm".into(), m, n, k }, String::new());
+        }
+        for &(m, n, k) in CPU_EPILOGUE_SHAPES {
+            files.insert(ArtifactKey { entry: "gemm_bias_relu".into(), m, n, k }, String::new());
+        }
+        Oracle { dir: PathBuf::new(), files, backend: Backend::Cpu }
+    }
+
+    /// Is this the CPU reference backend (vs PJRT-backed)?
+    pub fn is_cpu_reference(&self) -> bool {
+        matches!(self.backend, Backend::Cpu)
     }
 
     /// Shapes available for an entry point.
@@ -83,44 +150,24 @@ impl Oracle {
         v
     }
 
+    /// Can this oracle produce golden numbers for a shape? The CPU
+    /// reference can compute anything; PJRT needs a compiled artifact.
     pub fn has(&self, entry: &str, m: usize, n: usize, k: usize) -> bool {
+        if self.is_cpu_reference() {
+            return true;
+        }
         self.files.contains_key(&ArtifactKey { entry: entry.into(), m, n, k })
     }
 
-    fn executable(&mut self, key: &ArtifactKey) -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.compiled.contains_key(key) {
-            let file = self
-                .files
-                .get(key)
-                .with_context(|| format!("no artifact for {key:?}"))?;
-            let path = self.dir.join(file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("artifact path not utf-8")?,
-            )
-            .with_context(|| format!("parse HLO text {path:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self.client.compile(&comp).with_context(|| format!("compile {path:?}"))?;
-            self.compiled.insert(key.clone(), exe);
-        }
-        Ok(self.compiled.get(key).unwrap())
-    }
-
-    fn run(&mut self, key: &ArtifactKey, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
-        let exe = self.executable(key)?;
-        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
-    }
-
-    /// Golden `C = A @ B` through the Pallas-kerneled XLA executable.
+    /// Golden `C = A @ B`.
     pub fn gemm(&mut self, m: usize, n: usize, k: usize, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
         anyhow::ensure!(a.len() == m * k, "A must be {m}x{k}");
         anyhow::ensure!(b.len() == k * n, "B must be {k}x{n}");
-        let key = ArtifactKey { entry: "gemm".into(), m, n, k };
-        let la = xla::Literal::vec1(a).reshape(&[m as i64, k as i64])?;
-        let lb = xla::Literal::vec1(b).reshape(&[k as i64, n as i64])?;
-        self.run(&key, &[la, lb])
+        match &mut self.backend {
+            Backend::Cpu => Ok(cpu_gemm(m, n, k, a, b, None)),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => p.gemm(&self.dir, &self.files, m, n, k, a, b),
+        }
     }
 
     /// Golden fused epilogue `relu(A @ B + bias)`.
@@ -133,12 +180,133 @@ impl Oracle {
         b: &[f32],
         bias: &[f32],
     ) -> Result<Vec<f32>> {
+        anyhow::ensure!(a.len() == m * k, "A must be {m}x{k}");
+        anyhow::ensure!(b.len() == k * n, "B must be {k}x{n}");
         anyhow::ensure!(bias.len() == n, "bias must be length {n}");
-        let key = ArtifactKey { entry: "gemm_bias_relu".into(), m, n, k };
-        let la = xla::Literal::vec1(a).reshape(&[m as i64, k as i64])?;
-        let lb = xla::Literal::vec1(b).reshape(&[k as i64, n as i64])?;
-        let lbias = xla::Literal::vec1(bias);
-        self.run(&key, &[la, lb, lbias])
+        match &mut self.backend {
+            Backend::Cpu => Ok(cpu_gemm(m, n, k, a, b, Some(bias))),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => p.gemm_bias_relu(&self.dir, &self.files, m, n, k, a, b, bias),
+        }
+    }
+}
+
+/// f64-accumulation reference GEMM (with optional bias+ReLU epilogue).
+fn cpu_gemm(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    b: &[f32],
+    bias_relu: Option<&[f32]>,
+) -> Vec<f32> {
+    let mut c = vec![0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0f64;
+            for p in 0..k {
+                acc += a[i * k + p] as f64 * b[p * n + j] as f64;
+            }
+            if let Some(bias) = bias_relu {
+                acc = (acc + bias[j] as f64).max(0.0);
+            }
+            c[i * n + j] = acc as f32;
+        }
+    }
+    c
+}
+
+/// The PJRT-backed executor (requires the `xla` crate; see Cargo.toml).
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use std::collections::HashMap;
+    use std::path::Path;
+
+    use anyhow::{Context, Result};
+
+    use super::ArtifactKey;
+
+    pub struct Pjrt {
+        client: xla::PjRtClient,
+        compiled: HashMap<ArtifactKey, xla::PjRtLoadedExecutable>,
+    }
+
+    impl Pjrt {
+        pub fn new() -> Result<Pjrt> {
+            let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+            Ok(Pjrt { client, compiled: HashMap::new() })
+        }
+
+        fn executable(
+            &mut self,
+            dir: &Path,
+            files: &HashMap<ArtifactKey, String>,
+            key: &ArtifactKey,
+        ) -> Result<&xla::PjRtLoadedExecutable> {
+            if !self.compiled.contains_key(key) {
+                let file = files.get(key).with_context(|| format!("no artifact for {key:?}"))?;
+                let path = dir.join(file);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().context("artifact path not utf-8")?,
+                )
+                .with_context(|| format!("parse HLO text {path:?}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe =
+                    self.client.compile(&comp).with_context(|| format!("compile {path:?}"))?;
+                self.compiled.insert(key.clone(), exe);
+            }
+            Ok(self.compiled.get(key).unwrap())
+        }
+
+        fn run(
+            &mut self,
+            dir: &Path,
+            files: &HashMap<ArtifactKey, String>,
+            key: &ArtifactKey,
+            inputs: &[xla::Literal],
+        ) -> Result<Vec<f32>> {
+            let exe = self.executable(dir, files, key)?;
+            let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+            // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+            let out = result.to_tuple1()?;
+            Ok(out.to_vec::<f32>()?)
+        }
+
+        #[allow(clippy::too_many_arguments)]
+        pub fn gemm(
+            &mut self,
+            dir: &Path,
+            files: &HashMap<ArtifactKey, String>,
+            m: usize,
+            n: usize,
+            k: usize,
+            a: &[f32],
+            b: &[f32],
+        ) -> Result<Vec<f32>> {
+            let key = ArtifactKey { entry: "gemm".into(), m, n, k };
+            let la = xla::Literal::vec1(a).reshape(&[m as i64, k as i64])?;
+            let lb = xla::Literal::vec1(b).reshape(&[k as i64, n as i64])?;
+            self.run(dir, files, &key, &[la, lb])
+        }
+
+        #[allow(clippy::too_many_arguments)]
+        pub fn gemm_bias_relu(
+            &mut self,
+            dir: &Path,
+            files: &HashMap<ArtifactKey, String>,
+            m: usize,
+            n: usize,
+            k: usize,
+            a: &[f32],
+            b: &[f32],
+            bias: &[f32],
+        ) -> Result<Vec<f32>> {
+            let key = ArtifactKey { entry: "gemm_bias_relu".into(), m, n, k };
+            let la = xla::Literal::vec1(a).reshape(&[m as i64, k as i64])?;
+            let lb = xla::Literal::vec1(b).reshape(&[k as i64, n as i64])?;
+            let lbias = xla::Literal::vec1(bias);
+            self.run(dir, files, &key, &[la, lb, lbias])
+        }
     }
 }
 
@@ -146,11 +314,6 @@ impl Oracle {
 mod tests {
     use super::*;
 
-    // PJRT-dependent tests live in rust/tests/integration.rs (they need
-    // `make artifacts`); here we only test the manifest parser paths that
-    // don't require a client... but Oracle::open creates one eagerly, which
-    // is cheap on CPU. Missing-artifacts is the one error path that's
-    // environment-independent.
     #[test]
     fn open_missing_dir_fails_cleanly() {
         let err = match Oracle::open("/nonexistent/path/xyz") {
@@ -159,5 +322,69 @@ mod tests {
         };
         let msg = format!("{err:#}");
         assert!(msg.contains("make artifacts"), "{msg}");
+    }
+
+    #[test]
+    fn manifest_parses_and_rejects_garbage() {
+        let files = parse_manifest(
+            "# comment\n\ngemm 64 64 64 gemm_64.hlo.txt\ngemm_bias_relu 128 96 64 e.hlo.txt\n",
+        )
+        .unwrap();
+        assert_eq!(files.len(), 2);
+        assert_eq!(
+            files[&ArtifactKey { entry: "gemm".into(), m: 64, n: 64, k: 64 }],
+            "gemm_64.hlo.txt"
+        );
+        assert!(parse_manifest("gemm 64 64\n").is_err());
+        assert!(parse_manifest("gemm a b c d\n").is_err());
+    }
+
+    #[test]
+    fn cpu_reference_covers_required_families() {
+        let o = Oracle::cpu_reference();
+        assert!(o.is_cpu_reference());
+        let shapes = o.shapes("gemm");
+        assert!(shapes.len() >= 5, "{shapes:?}");
+        // The ragged §4.1.3 analogue and a flat-decode analogue must exist.
+        assert!(shapes.iter().any(|&(_, n, _)| n == 66));
+        assert!(shapes.iter().any(|&(m, n, _)| m <= 64 && n >= 8 * m));
+        // The CPU backend can compute any shape, listed or not.
+        assert!(o.has("gemm", 13, 7, 5));
+    }
+
+    #[test]
+    fn cpu_reference_gemm_matches_f32_reference() {
+        let mut o = Oracle::cpu_reference();
+        let (m, n, k) = (16, 8, 32);
+        let mut rng = crate::util::rng::Rng::new(5);
+        let a = rng.f32_vec(m * k);
+        let b = rng.f32_vec(k * n);
+        let got = o.gemm(m, n, k, &a, &b).unwrap();
+        let mut want = vec![0f32; m * n];
+        crate::functional::mmad_f32(&a, &b, &mut want, m, n, k);
+        let diff = crate::functional::max_abs_diff(&got, &want);
+        assert!(diff < 1e-4, "f64-accum vs f32-accum diff {diff}");
+    }
+
+    #[test]
+    fn cpu_reference_epilogue_applies_bias_relu() {
+        let mut o = Oracle::cpu_reference();
+        let (m, n, k) = (4, 4, 8);
+        let a = vec![0.5f32; m * k];
+        let b = vec![-0.25f32; k * n];
+        let bias = vec![0.1f32; n];
+        // A@B = 8 * 0.5 * -0.25 = -1.0; +0.1 = -0.9; relu -> 0.
+        let got = o.gemm_bias_relu(m, n, k, &a, &b, &bias).unwrap();
+        assert!(got.iter().all(|&v| v == 0.0), "{got:?}");
+        let pos_bias = vec![1.5f32; n];
+        let got = o.gemm_bias_relu(m, n, k, &a, &b, &pos_bias).unwrap();
+        assert!(got.iter().all(|&v| (v - 0.5).abs() < 1e-6), "{got:?}");
+    }
+
+    #[test]
+    fn gemm_rejects_bad_dims() {
+        let mut o = Oracle::cpu_reference();
+        assert!(o.gemm(4, 4, 4, &[0.0; 15], &[0.0; 16]).is_err());
+        assert!(o.gemm_bias_relu(4, 4, 4, &[0.0; 16], &[0.0; 16], &[0.0; 3]).is_err());
     }
 }

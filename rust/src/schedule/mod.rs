@@ -15,7 +15,7 @@ use crate::util::{ceil_div, is_pow2};
 use remap::Remap;
 
 /// Dataflow pattern primitives (paper §3.3.2, Fig. 6).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Dataflow {
     /// No on-chip sharing: every tile DMAs its own operands from HBM.
     Baseline,
@@ -55,7 +55,7 @@ impl Dataflow {
 /// Who reduces and commits split-K partial results (§3.1.1: "configurable
 /// policies to determine which compute tiles are responsible for
 /// performing the final reduction").
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ReducePolicy {
     /// K-group 0's tile always reduces + stores.
     FirstGroup,
@@ -65,8 +65,9 @@ pub enum ReducePolicy {
 }
 
 /// A complete deployment schedule: the tuple DiT's "Generate and Optimize"
-/// stage consumes.
-#[derive(Debug, Clone, PartialEq)]
+/// stage consumes. `Eq + Hash` (all fields are discrete) so schedules can
+/// key the engine's simulation memo-cache.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct Schedule {
     pub dataflow: Dataflow,
     /// Logical grid `(P, Q)` the *compute* mapping uses. For split-K this

@@ -337,16 +337,23 @@ fn hbm_transfer(
     t0: f64,
     is_read: bool,
 ) -> f64 {
-    // Group runs by channel.
+    // Group runs by channel. Legs are processed in ascending channel
+    // order: HashMap iteration order varies per instance, and the leg →
+    // DMA-engine round-robin below is order-sensitive — unordered
+    // iteration would make two simulations of the same deployment
+    // disagree (the parallel autotuning engine requires simulate() to be
+    // a pure function of its inputs).
     let mut per_chan: HashMap<usize, (u64, u64)> = HashMap::new(); // ch -> (bytes, nruns)
     for r in runs {
         let e = per_chan.entry(r.channel).or_insert((0, 0));
         e.0 += r.bytes;
         e.1 += 1;
     }
+    let mut legs: Vec<(usize, (u64, u64))> = per_chan.into_iter().collect();
+    legs.sort_unstable_by_key(|(ch, _)| *ch);
     let mut op_end = t0;
     let n_engines = res.dma[tile_lin].len();
-    for (idx, (ch, (bytes, nruns))) in per_chan.into_iter().enumerate() {
+    for (idx, (ch, (bytes, nruns))) in legs.into_iter().enumerate() {
         // DMA engine availability.
         let engine = idx % n_engines;
         let t_engine = res.dma[tile_lin][engine].max(t0);

@@ -1,11 +1,15 @@
 //! Integration tests: the full three-layer stack.
 //!
-//! These tests require `make artifacts` (the JAX/Pallas → HLO-text AOT
-//! step) to have run: they load the golden GEMM executables through the
-//! PJRT CPU client and check the Rust functional executor — i.e. the
-//! *deployment's* data movement over the simulated HBM/NoC — against the
-//! XLA numbers. This is the paper's "Benchmark" stage ("compares results
-//! against reference outputs to validate correctness") end-to-end.
+//! The golden-number tests come in two flavours:
+//!
+//! * **PJRT** — require `make artifacts` (the JAX/Pallas → HLO-text AOT
+//!   step) *and* a build with `--features pjrt`. When either is missing
+//!   the test prints a `SKIP` notice and returns instead of panicking, so
+//!   `cargo test` stays green on a bare checkout.
+//! * **CPU reference** — always run. `Oracle::cpu_reference()` computes
+//!   golden numbers with f64 accumulation over the same artifact shape
+//!   families, so the deployment data path (layouts, collectives, K-panel
+//!   accumulation) is still asserted numerically without PJRT.
 
 use dit::arch::{ArchConfig, GemmShape};
 use dit::coordinator;
@@ -13,13 +17,69 @@ use dit::runtime::Oracle;
 use dit::schedule::{retune_tk, Dataflow, Schedule};
 use dit::util::rng::Rng;
 
-fn oracle() -> Oracle {
-    Oracle::open("artifacts").expect("run `make artifacts` before `cargo test`")
+/// The PJRT oracle, or `None` (with a printed notice) when the artifacts
+/// or the `pjrt` feature are absent.
+fn pjrt_oracle() -> Option<Oracle> {
+    match Oracle::open("artifacts") {
+        Ok(o) => Some(o),
+        Err(e) => {
+            eprintln!("SKIP: PJRT oracle unavailable ({e:#})");
+            eprintln!(
+                "      run `make artifacts`, add the `xla` dependency to rust/Cargo.toml, \
+                 and build with `--features pjrt` to enable"
+            );
+            None
+        }
+    }
 }
+
+/// Representative schedule set for a shape on a 4×4 grid (all dataflow
+/// families, hierarchical variants re-deriving tk for their L1 staging).
+fn schedule_set(arch: &ArchConfig, shape: GemmShape) -> Vec<Schedule> {
+    let mut scheds: Vec<Schedule> = vec![
+        Schedule::summa(arch, shape),
+        Schedule::baseline(arch, shape),
+        Schedule::systolic(arch, shape),
+    ];
+    if shape.k >= 128 {
+        scheds.push(Schedule::splitk(arch, shape, 2));
+    }
+    scheds.push(retune_tk(arch, shape, &Schedule {
+        dataflow: Dataflow::SystolicOverSumma { group: 2 },
+        ..Schedule::summa(arch, shape)
+    }));
+    scheds.push(retune_tk(arch, shape, &Schedule {
+        dataflow: Dataflow::SummaOverSystolic { group: 2 },
+        ..Schedule::summa(arch, shape)
+    }));
+    scheds
+}
+
+/// Every oracle shape × the representative schedule set, verified
+/// functionally on a 4×4 SoftHier.
+fn verify_all_shapes(mut oracle: Oracle, seed: u64) {
+    let arch = ArchConfig::tiny(4, 4);
+    for (m, n, k) in oracle.shapes("gemm") {
+        let shape = GemmShape::new(m, n, k);
+        for sched in schedule_set(&arch, shape) {
+            let report = coordinator::verify(&arch, shape, &sched, &mut oracle, seed)
+                .unwrap_or_else(|e| panic!("{} on {shape}: {e}", sched.name()));
+            assert!(
+                report.passed(),
+                "{} on {shape}: diff {} > tol {}",
+                report.schedule,
+                report.max_abs_diff,
+                report.tolerance
+            );
+        }
+    }
+}
+
+// ---------------- PJRT-backed tests (skip gracefully) ----------------
 
 #[test]
 fn oracle_matches_cpu_reference() {
-    let mut o = oracle();
+    let Some(mut o) = pjrt_oracle() else { return };
     let (m, n, k) = (64, 64, 64);
     let mut rng = Rng::new(11);
     let a = rng.f32_vec(m * k);
@@ -34,7 +94,7 @@ fn oracle_matches_cpu_reference() {
 
 #[test]
 fn oracle_epilogue_matches_reference() {
-    let mut o = oracle();
+    let Some(mut o) = pjrt_oracle() else { return };
     let (m, n, k) = (64, 64, 64);
     let mut rng = Rng::new(13);
     let a = rng.f32_vec(m * k);
@@ -54,7 +114,7 @@ fn oracle_epilogue_matches_reference() {
 
 #[test]
 fn manifest_covers_required_shape_families() {
-    let o = oracle();
+    let Some(o) = pjrt_oracle() else { return };
     let shapes = o.shapes("gemm");
     assert!(shapes.len() >= 5, "{shapes:?}");
     // The ragged §4.1.3 analogue and a flat-decode analogue must exist.
@@ -62,49 +122,16 @@ fn manifest_covers_required_shape_families() {
     assert!(shapes.iter().any(|&(m, n, _)| m <= 64 && n >= 8 * m));
 }
 
-/// Every artifact shape × a representative schedule set, verified
-/// functionally against the PJRT golden GEMM on a 4×4 SoftHier.
 #[test]
 fn functional_deployments_match_pjrt_oracle() {
-    let mut o = oracle();
-    let arch = ArchConfig::tiny(4, 4);
-    for (m, n, k) in o.shapes("gemm") {
-        let shape = GemmShape::new(m, n, k);
-        let mut scheds: Vec<Schedule> = vec![
-            Schedule::summa(&arch, shape),
-            Schedule::baseline(&arch, shape),
-            Schedule::systolic(&arch, shape),
-        ];
-        if k >= 128 {
-            scheds.push(Schedule::splitk(&arch, shape, 2));
-        }
-        // Hierarchical variants re-derive tk (they stage more in L1).
-        scheds.push(retune_tk(&arch, shape, &Schedule {
-            dataflow: Dataflow::SystolicOverSumma { group: 2 },
-            ..Schedule::summa(&arch, shape)
-        }));
-        scheds.push(retune_tk(&arch, shape, &Schedule {
-            dataflow: Dataflow::SummaOverSystolic { group: 2 },
-            ..Schedule::summa(&arch, shape)
-        }));
-        for sched in scheds {
-            let report = coordinator::verify(&arch, shape, &sched, &mut o, 0xA5)
-                .unwrap_or_else(|e| panic!("{} on {shape}: {e}", sched.name()));
-            assert!(
-                report.passed(),
-                "{} on {shape}: diff {} > tol {}",
-                report.schedule,
-                report.max_abs_diff,
-                report.tolerance
-            );
-        }
-    }
+    let Some(o) = pjrt_oracle() else { return };
+    verify_all_shapes(o, 0xA5);
 }
 
 /// The flat-GEMM cluster-remap path (Insight 4) against the oracle.
 #[test]
 fn flat_remap_verifies_against_oracle() {
-    let mut o = oracle();
+    let Some(mut o) = pjrt_oracle() else { return };
     let arch = ArchConfig::tiny(4, 4);
     let shape = GemmShape::new(64, 528, 512);
     for splits in [4, 8] {
@@ -118,7 +145,7 @@ fn flat_remap_verifies_against_oracle() {
 /// numerically correct.
 #[test]
 fn autotuned_best_schedule_is_correct() {
-    let mut o = oracle();
+    let Some(mut o) = pjrt_oracle() else { return };
     let arch = ArchConfig::tiny(4, 4);
     let shape = GemmShape::new(128, 128, 128);
     let result = coordinator::autotune(&arch, shape).unwrap();
@@ -126,6 +153,40 @@ fn autotuned_best_schedule_is_correct() {
     let report = coordinator::verify(&arch, shape, &best, &mut o, 0x77).unwrap();
     assert!(report.passed(), "best={} diff {}", report.schedule, report.max_abs_diff);
 }
+
+// ---------------- CPU-reference fallback tests (always run) ----------------
+// (Shape-family coverage of the CPU oracle itself is asserted in
+// runtime::tests::cpu_reference_covers_required_families.)
+
+#[test]
+fn functional_deployments_match_cpu_oracle() {
+    verify_all_shapes(Oracle::cpu_reference(), 0xA5);
+}
+
+#[test]
+fn flat_remap_verifies_against_cpu_oracle() {
+    let mut o = Oracle::cpu_reference();
+    let arch = ArchConfig::tiny(4, 4);
+    let shape = GemmShape::new(64, 528, 512);
+    for splits in [4, 8] {
+        let sched = Schedule::flat_remap(&arch, shape, splits);
+        let report = coordinator::verify(&arch, shape, &sched, &mut o, 0x5A).unwrap();
+        assert!(report.passed(), "{}: diff {}", report.schedule, report.max_abs_diff);
+    }
+}
+
+#[test]
+fn autotuned_best_schedule_is_correct_vs_cpu_oracle() {
+    let mut o = Oracle::cpu_reference();
+    let arch = ArchConfig::tiny(4, 4);
+    let shape = GemmShape::new(128, 128, 128);
+    let result = coordinator::autotune(&arch, shape).unwrap();
+    let best = result.best().schedule.clone();
+    let report = coordinator::verify(&arch, shape, &best, &mut o, 0x77).unwrap();
+    assert!(report.passed(), "best={} diff {}", report.schedule, report.max_abs_diff);
+}
+
+// ---------------- oracle-independent tests ----------------
 
 /// Preload files round-trip through disk (the workflow's Preload stage).
 #[test]
@@ -141,7 +202,8 @@ fn preload_file_roundtrip_on_disk() {
     assert_eq!(p, q);
 }
 
-/// The CLI verify command wires everything together.
+/// The CLI verify command wires everything together (CPU oracle fallback
+/// when no artifacts are present).
 #[test]
 fn cli_verify_command() {
     let argv: Vec<String> = "verify --shape 128x128x128 --grid 4 --schedule summa"
