@@ -1,0 +1,46 @@
+//! Hardware design-space exploration as a library call.
+//!
+//! Sweeps three mesh sizes of the GH200-like template at two SPM
+//! capacities, co-tunes every candidate instance over the DSE serving
+//! suite on one shared engine/memo-cache, and prints the Pareto frontier
+//! of achieved TFLOP/s vs. the silicon-cost proxy.
+//!
+//! Run with: `cargo run --release --example dse_sweep`
+
+use dit::dse::{self, DseOptions, SweepSpec};
+use dit::report;
+
+fn main() -> anyhow::Result<()> {
+    let mut spec = SweepSpec::reduced();
+    // Trim the mesh axis so the demo finishes in a few seconds; the full
+    // reduced sweep (8..32, `dit dse --workload serving`) adds 24x24 and
+    // 32x32.
+    spec.mesh = vec![8, 12, 16];
+
+    let workload = dse::suite("serving").expect("builtin DSE suite");
+    let res = dse::run_sweep(&spec, &workload, &DseOptions::default())?;
+
+    print!("{}", report::dse_summary(&res).markdown());
+    print!("{}", report::dse_plot(&res).render());
+    println!(
+        "frontier: {} non-dominated of {} evaluated ({} pruned by roofline bound)",
+        res.frontier().len(),
+        res.points.len(),
+        res.pruned.len()
+    );
+    if let Some(best) = res.best() {
+        println!(
+            "best: {} at {:.1} TFLOP/s ({:.1}% of its {:.0} TFLOP/s peak), cost {:.0}",
+            best.arch.name,
+            best.tflops,
+            100.0 * best.utilization(),
+            best.arch.peak_tflops(),
+            best.cost
+        );
+    }
+    println!(
+        "engine: {} simulations, {} cache hits, {:.0} ms",
+        res.sim_calls, res.cache_hits, res.elapsed_ms
+    );
+    Ok(())
+}

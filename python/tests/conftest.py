@@ -1,0 +1,7 @@
+"""Make the ``compile`` package importable when pytest runs from the repo
+root (``python -m pytest python/tests``), as the CI python job does."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))

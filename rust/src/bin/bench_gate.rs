@@ -1,0 +1,416 @@
+//! CI perf-regression gate over machine-readable bench artifacts.
+//!
+//! `cargo bench -- ... --json BENCH_results.json` writes every headline
+//! bench metric (TFLOP/s, utilization, speedup ratios — all deterministic
+//! outputs of the performance model, so they are machine-independent).
+//! This binary compares such an artifact against the committed
+//! `rust/bench_baseline.json` and exits non-zero when any pinned metric
+//! regresses by more than the tolerance (default 5%), which fails the CI
+//! `bench-gate` job.
+//!
+//! ```text
+//! bench_gate [--baseline bench_baseline.json] [--results BENCH_results.json]
+//!            [--tolerance 0.05]     # override the baseline's tolerance
+//!            [--update]             # rewrite the baseline from the results
+//!            [--self-check]         # prove a synthetic 10% regression fails
+//! ```
+//!
+//! The baseline pins a *subset* of metrics (every pinned metric must exist
+//! in the results); results metrics that are not pinned are listed as
+//! informational. After a model change that intentionally shifts numbers,
+//! refresh with `--update` and commit the new baseline.
+
+use std::process::ExitCode;
+
+use dit::report::Table;
+use dit::util::json::Json;
+
+const DEFAULT_TOLERANCE: f64 = 0.05;
+
+/// One named, directional metric.
+#[derive(Debug, Clone, PartialEq)]
+struct Metric {
+    figure: String,
+    metric: String,
+    value: f64,
+    higher_is_better: bool,
+}
+
+impl Metric {
+    fn key(&self) -> String {
+        format!("{}.{}", self.figure, self.metric)
+    }
+}
+
+/// Extract the `metrics` array of a bench/baseline document.
+fn metrics_of(doc: &Json) -> Result<Vec<Metric>, String> {
+    let arr = doc
+        .get("metrics")
+        .and_then(|m| m.items())
+        .ok_or("document has no `metrics` array")?;
+    let mut out = Vec::with_capacity(arr.len());
+    for (i, m) in arr.iter().enumerate() {
+        let field = |k: &str| m.get(k).ok_or_else(|| format!("metrics[{i}] missing `{k}`"));
+        let str_field = |k: &str| -> Result<String, String> {
+            Ok(field(k)?
+                .as_str()
+                .ok_or_else(|| format!("metrics[{i}].{k} not a string"))?
+                .to_string())
+        };
+        out.push(Metric {
+            figure: str_field("figure")?,
+            metric: str_field("metric")?,
+            value: field("value")?
+                .as_f64()
+                .ok_or_else(|| format!("metrics[{i}].value not a number"))?,
+            higher_is_better: field("higher_is_better")?
+                .as_bool()
+                .ok_or_else(|| format!("metrics[{i}].higher_is_better not a bool"))?,
+        });
+    }
+    Ok(out)
+}
+
+/// Gate verdict for one pinned metric.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Verdict {
+    Pass,
+    Regressed,
+    Missing,
+}
+
+/// Compare the results against every pinned baseline metric. Returns one
+/// row per pinned metric; `tolerance` is the allowed relative regression.
+fn gate(
+    baseline: &[Metric],
+    results: &[Metric],
+    tolerance: f64,
+) -> Vec<(Metric, Option<f64>, Verdict)> {
+    baseline
+        .iter()
+        .map(|pin| {
+            let got = results
+                .iter()
+                .find(|m| m.figure == pin.figure && m.metric == pin.metric)
+                .map(|m| m.value);
+            let verdict = match got {
+                None => Verdict::Missing,
+                Some(v) => {
+                    let regressed = if pin.value == 0.0 {
+                        // Degenerate pin (e.g. a 0/1 flag at 0): any drop
+                        // below it is impossible, any direction-bad move is
+                        // a regression only for lower-is-better pins.
+                        if pin.higher_is_better { v < 0.0 } else { v > 0.0 }
+                    } else if pin.higher_is_better {
+                        v < pin.value * (1.0 - tolerance)
+                    } else {
+                        v > pin.value * (1.0 + tolerance)
+                    };
+                    if regressed {
+                        Verdict::Regressed
+                    } else {
+                        Verdict::Pass
+                    }
+                }
+            };
+            (pin.clone(), got, verdict)
+        })
+        .collect()
+}
+
+fn render(rows: &[(Metric, Option<f64>, Verdict)], tolerance: f64) -> (Table, usize) {
+    let mut t = Table::new(
+        format!("bench gate (tolerance {:.1}%)", tolerance * 100.0),
+        &["metric", "direction", "baseline", "result", "delta %", "verdict"],
+    );
+    let mut failures = 0usize;
+    for (pin, got, verdict) in rows {
+        let delta = match got {
+            Some(v) if pin.value != 0.0 => {
+                format!("{:+.2}", 100.0 * (v - pin.value) / pin.value)
+            }
+            _ => "-".into(),
+        };
+        if *verdict != Verdict::Pass {
+            failures += 1;
+        }
+        t.row(vec![
+            pin.key(),
+            if pin.higher_is_better { "higher" } else { "lower" }.into(),
+            format!("{:.4}", pin.value),
+            got.map(|v| format!("{v:.4}")).unwrap_or_else(|| "MISSING".into()),
+            delta,
+            match verdict {
+                Verdict::Pass => "pass".into(),
+                Verdict::Regressed => "REGRESSED".into(),
+                Verdict::Missing => "MISSING".into(),
+            },
+        ]);
+    }
+    (t, failures)
+}
+
+fn load(path: &str) -> Result<Json, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+    Json::parse(&text).map_err(|e| format!("parsing {path}: {e}"))
+}
+
+fn write_baseline(path: &str, results: &[Metric], tolerance: f64) -> Result<(), String> {
+    let mut metrics = Json::arr();
+    for m in results {
+        metrics = metrics.push(
+            Json::obj()
+                .field("figure", m.figure.as_str())
+                .field("metric", m.metric.as_str())
+                .field("value", m.value)
+                .field("higher_is_better", m.higher_is_better),
+        );
+    }
+    let doc = Json::obj()
+        .field("schema", 1i64)
+        .field("tolerance", tolerance)
+        .field("note", "pinned bench metrics; refresh with `cargo run --bin bench_gate -- --update` after intentional model changes")
+        .field("metrics", metrics);
+    std::fs::write(path, doc.pretty()).map_err(|e| format!("writing {path}: {e}"))
+}
+
+/// Prove the gate mechanism catches a synthetic 10% regression (and does
+/// not fire on a 3% drift) without touching any file.
+fn self_check() -> Result<(), String> {
+    let pin = |figure: &str, metric: &str, value: f64, higher: bool| Metric {
+        figure: figure.into(),
+        metric: metric.into(),
+        value,
+        higher_is_better: higher,
+    };
+    let baseline =
+        vec![pin("fig9", "mean_speedup", 1.0, true), pin("fig8", "store_best_us", 100.0, false)];
+    // 10% regression on a higher-is-better metric must fail.
+    let bad =
+        vec![pin("fig9", "mean_speedup", 0.9, true), pin("fig8", "store_best_us", 100.0, false)];
+    let (_, failures) = render(&gate(&baseline, &bad, DEFAULT_TOLERANCE), DEFAULT_TOLERANCE);
+    if failures != 1 {
+        return Err(format!("synthetic -10% speedup regression not caught ({failures} failures)"));
+    }
+    // 10% slowdown on a lower-is-better metric must fail.
+    let slow =
+        vec![pin("fig9", "mean_speedup", 1.0, true), pin("fig8", "store_best_us", 110.0, false)];
+    let (_, failures) = render(&gate(&baseline, &slow, DEFAULT_TOLERANCE), DEFAULT_TOLERANCE);
+    if failures != 1 {
+        return Err(format!("synthetic +10% makespan regression not caught ({failures} failures)"));
+    }
+    // 3% drift inside the tolerance must pass; a missing metric must fail.
+    let drift =
+        vec![pin("fig9", "mean_speedup", 0.97, true), pin("fig8", "store_best_us", 103.0, false)];
+    let (_, failures) = render(&gate(&baseline, &drift, DEFAULT_TOLERANCE), DEFAULT_TOLERANCE);
+    if failures != 0 {
+        return Err(format!("3% drift flagged as regression ({failures} failures)"));
+    }
+    let (_, failures) = render(&gate(&baseline, &[], DEFAULT_TOLERANCE), DEFAULT_TOLERANCE);
+    if failures != 2 {
+        return Err(format!("missing metrics not flagged ({failures} failures)"));
+    }
+    println!("self-check OK: 10% synthetic regressions fail, 3% drift passes, missing metrics fail");
+    Ok(())
+}
+
+struct Opts {
+    baseline: String,
+    results: String,
+    tolerance: Option<f64>,
+    update: bool,
+    self_check: bool,
+}
+
+fn parse_args(argv: &[String]) -> Result<Opts, String> {
+    let mut o = Opts {
+        baseline: "bench_baseline.json".into(),
+        results: "BENCH_results.json".into(),
+        tolerance: None,
+        update: false,
+        self_check: false,
+    };
+    let mut it = argv.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--baseline" => o.baseline = it.next().ok_or("--baseline needs a value")?.clone(),
+            "--results" => o.results = it.next().ok_or("--results needs a value")?.clone(),
+            "--tolerance" => {
+                o.tolerance = Some(
+                    it.next()
+                        .ok_or("--tolerance needs a value")?
+                        .parse()
+                        .map_err(|e| format!("--tolerance: {e}"))?,
+                )
+            }
+            "--update" => o.update = true,
+            "--self-check" => o.self_check = true,
+            other => return Err(format!("unknown flag {other:?}")),
+        }
+    }
+    Ok(o)
+}
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let opts = match parse_args(&argv) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    if opts.self_check {
+        return match self_check() {
+            Ok(()) => ExitCode::SUCCESS,
+            Err(e) => {
+                eprintln!("self-check FAILED: {e}");
+                ExitCode::FAILURE
+            }
+        };
+    }
+
+    let run = || -> Result<usize, String> {
+        let results_doc = load(&opts.results)?;
+        let results = metrics_of(&results_doc)?;
+        if opts.update {
+            // Preserve a committed custom tolerance unless --tolerance
+            // explicitly overrides it.
+            let old_tol = load(&opts.baseline)
+                .ok()
+                .and_then(|doc| doc.get("tolerance").and_then(|t| t.as_f64()));
+            let tol = opts.tolerance.or(old_tol).unwrap_or(DEFAULT_TOLERANCE);
+            write_baseline(&opts.baseline, &results, tol)?;
+            println!(
+                "pinned {} metrics from {} into {}",
+                results.len(),
+                opts.results,
+                opts.baseline
+            );
+            return Ok(0);
+        }
+        let baseline_doc = load(&opts.baseline)?;
+        let baseline = metrics_of(&baseline_doc)?;
+        let tolerance = opts
+            .tolerance
+            .or_else(|| baseline_doc.get("tolerance").and_then(|t| t.as_f64()))
+            .unwrap_or(DEFAULT_TOLERANCE);
+        let rows = gate(&baseline, &results, tolerance);
+        let (table, failures) = render(&rows, tolerance);
+        print!("{}", table.markdown());
+        let pinned: Vec<String> = baseline.iter().map(|m| m.key()).collect();
+        let unpinned: Vec<String> = results
+            .iter()
+            .map(|m| m.key())
+            .filter(|k| !pinned.contains(k))
+            .collect();
+        if !unpinned.is_empty() {
+            println!("informational (not pinned): {}", unpinned.join(", "));
+        }
+        if failures > 0 {
+            println!("bench gate: {failures} pinned metric(s) regressed or missing");
+        } else {
+            println!("bench gate: all {} pinned metric(s) within tolerance", baseline.len());
+        }
+        Ok(failures)
+    };
+    match run() {
+        Ok(0) => ExitCode::SUCCESS,
+        Ok(_) => ExitCode::FAILURE,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(figure: &str, metric: &str, value: f64, higher: bool) -> Metric {
+        Metric { figure: figure.into(), metric: metric.into(), value, higher_is_better: higher }
+    }
+
+    #[test]
+    fn gate_passes_within_tolerance_both_directions() {
+        let base = vec![m("f", "up", 100.0, true), m("f", "down", 100.0, false)];
+        let res = vec![m("f", "up", 96.0, true), m("f", "down", 104.0, false)];
+        let rows = gate(&base, &res, 0.05);
+        assert!(rows.iter().all(|(_, _, v)| *v == Verdict::Pass), "{rows:?}");
+        // Improvements never fail, however large.
+        let res = vec![m("f", "up", 500.0, true), m("f", "down", 1.0, false)];
+        let rows = gate(&base, &res, 0.05);
+        assert!(rows.iter().all(|(_, _, v)| *v == Verdict::Pass), "{rows:?}");
+    }
+
+    #[test]
+    fn gate_fails_on_ten_percent_regression() {
+        let base = vec![m("fig9", "mean_speedup", 1.31, true)];
+        let res = vec![m("fig9", "mean_speedup", 1.31 * 0.9, true)];
+        let rows = gate(&base, &res, 0.05);
+        assert_eq!(rows[0].2, Verdict::Regressed);
+        // Lower-is-better: +10% wall fails too.
+        let base = vec![m("fig8", "store_best_us", 50.0, false)];
+        let res = vec![m("fig8", "store_best_us", 55.1, false)];
+        assert_eq!(gate(&base, &res, 0.05)[0].2, Verdict::Regressed);
+    }
+
+    #[test]
+    fn gate_flags_missing_metrics() {
+        let base = vec![m("fig9", "mean_speedup", 1.31, true)];
+        let rows = gate(&base, &[], 0.05);
+        assert_eq!(rows[0].2, Verdict::Missing);
+        let (_, failures) = render(&rows, 0.05);
+        assert_eq!(failures, 1);
+    }
+
+    #[test]
+    fn metrics_roundtrip_through_json_files() {
+        let results = vec![m("table1", "peak_tflops", 1977.614336, true)];
+        let mut arr = Json::arr();
+        for x in &results {
+            arr = arr.push(
+                Json::obj()
+                    .field("figure", x.figure.as_str())
+                    .field("metric", x.metric.as_str())
+                    .field("value", x.value)
+                    .field("higher_is_better", x.higher_is_better),
+            );
+        }
+        let doc = Json::obj().field("schema", 1i64).field("metrics", arr);
+        let parsed = Json::parse(&doc.pretty()).unwrap();
+        assert_eq!(metrics_of(&parsed).unwrap(), results);
+    }
+
+    #[test]
+    fn malformed_documents_are_rejected() {
+        assert!(metrics_of(&Json::obj()).is_err(), "no metrics array");
+        let doc = Json::obj().field("metrics", Json::arr().push(Json::obj().field("figure", "f")));
+        assert!(metrics_of(&doc).is_err(), "missing fields");
+    }
+
+    #[test]
+    fn self_check_is_green() {
+        self_check().unwrap();
+    }
+
+    #[test]
+    fn arg_parsing() {
+        let argv: Vec<String> =
+            ["--baseline", "b.json", "--results", "r.json", "--tolerance", "0.1", "--update"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let o = parse_args(&argv).unwrap();
+        assert_eq!(o.baseline, "b.json");
+        assert_eq!(o.results, "r.json");
+        assert_eq!(o.tolerance, Some(0.1));
+        assert!(o.update && !o.self_check);
+        assert!(parse_args(&["--tolerance".to_string()]).is_err());
+        assert!(parse_args(&["--bogus".to_string()]).is_err());
+        let d = parse_args(&[]).unwrap();
+        assert_eq!(d.baseline, "bench_baseline.json");
+        assert_eq!(d.results, "BENCH_results.json");
+    }
+}

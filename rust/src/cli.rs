@@ -6,6 +6,7 @@
 //! dit simulate  --preset P --shape MxNxK [--schedule NAME] [--tk N] ...
 //! dit autotune  --preset P --shape MxNxK             # rank all candidates
 //! dit tune-workload --preset P --suite transformer   # batch-tune a suite
+//! dit dse       --workload serving [--spec FILE]     # hardware design-space sweep
 //! dit verify    --shape MxNxK [--grid RxC] [--schedule NAME]   # vs oracle
 //! dit fig       --id 7a|7b|7c|7d|8|9|10|11|12|1|table1  # regen a figure
 //! ```
@@ -18,6 +19,7 @@ use crate::arch::workload::Workload;
 use crate::arch::{ArchConfig, GemmShape};
 use crate::coordinator;
 use crate::coordinator::engine::Engine;
+use crate::dse::{DseOptions, SweepSpec};
 use crate::report::Table;
 use crate::schedule::{candidates, Dataflow, Schedule};
 
@@ -71,12 +73,15 @@ pub fn parse_arch(spec: &str) -> Result<ArchConfig> {
         "a100" => Ok(ArchConfig::a100_like()),
         _ if spec.starts_with("tiny") => {
             let n: usize = spec.trim_start_matches("tiny").parse().unwrap_or(4);
-            Ok(ArchConfig::tiny(n, n))
+            let a = ArchConfig::tiny(n, n);
+            a.validate().with_context(|| format!("invalid tiny grid {spec:?}"))?;
+            Ok(a)
         }
         path => {
             let text = std::fs::read_to_string(path)
                 .with_context(|| format!("unknown preset and unreadable file: {path:?}"))?;
             ArchConfig::from_text(&text)
+                .with_context(|| format!("invalid architecture config {path:?}"))
         }
     }
 }
@@ -140,6 +145,11 @@ COMMANDS:
   tune-workload --preset P [--suite NAME]               batch-tune a GEMM suite
               [--shapes MxNxK,MxNxK,...] [--workers N]  (suites: prefill, decode,
               [--csv true]                               transformer, tiny)
+  dse         [--workload serving|prefill|decode|tiny]  hardware design-space sweep:
+              [--spec FILE] [--full true]               co-tune every config, print the
+              [--base PRESET] [--mesh 8,16,32]          TFLOPS-vs-cost Pareto frontier
+              [--spm 256,384] [--workers N] [--wave N]
+              [--prune bool] [--csv true] [--json FILE]
   verify      --shape MxNxK [--grid N] [--schedule S]   functional vs golden oracle
               [--artifacts DIR] [--seed N]               (CPU reference if no PJRT)
   help                                                  this text
@@ -148,6 +158,7 @@ EXAMPLES:
   dit simulate --preset gh200 --shape 4096x2112x7168 --schedule summa
   dit autotune --preset gh200 --shape 64x2112x7168
   dit tune-workload --preset gh200 --suite transformer
+  dit dse      --workload serving
   dit verify   --shape 128x128x128 --grid 4 --schedule splitk --splits 2
 ";
 
@@ -164,6 +175,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "simulate" => cmd_simulate(&args),
         "autotune" => cmd_autotune(&args),
         "tune-workload" => cmd_tune_workload(&args),
+        "dse" => cmd_dse(&args),
         "verify" => cmd_verify(&args),
         other => bail!("unknown command {other:?}; try `dit help`"),
     }
@@ -301,9 +313,123 @@ fn cmd_tune_workload(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Hardware design-space sweep: enumerate the spec's configurations,
+/// co-tune each over the chosen workload on one shared engine, and print
+/// the Pareto frontier of achieved TFLOP/s vs. the silicon-cost proxy.
+fn cmd_dse(args: &Args) -> Result<()> {
+    let mut spec = match args.get("spec") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("unreadable sweep spec {path:?}"))?;
+            SweepSpec::from_text(&text).with_context(|| format!("invalid sweep spec {path:?}"))?
+        }
+        None => {
+            let full: bool = match args.get("full") {
+                Some(v) => v.parse().context("--full")?,
+                None => false,
+            };
+            if full {
+                SweepSpec::full()
+            } else {
+                SweepSpec::reduced()
+            }
+        }
+    };
+    if let Some(b) = args.get("base") {
+        // Re-anchor the sweep on another template: single-point axes come
+        // from the base machine, mesh stays swept (override with --mesh).
+        let base = parse_arch(b)?;
+        spec.ce = vec![(base.tile.ce_m, base.tile.ce_n)];
+        spec.spm_kib = vec![base.tile.l1_bytes / 1024];
+        spec.hbm_channel_gbps = vec![base.hbm.channel_gbps];
+        // Preserve the base machine's channel population relative to its
+        // own mesh edge (presets have channels_per_edge == rows, i.e.
+        // 100%, but a custom config may be sparser).
+        spec.hbm_channels_pct =
+            vec![(base.hbm.channels_per_edge * 100 / base.rows.max(1)).max(1)];
+        spec.dma_engines = vec![base.tile.dma_engines];
+        spec.base = base;
+    }
+    let parse_list = |flag: &str| -> Result<Option<Vec<usize>>> {
+        match args.get(flag) {
+            None => Ok(None),
+            Some(list) => list
+                .split(',')
+                .map(|s| s.trim().parse::<usize>().with_context(|| format!("--{flag}")))
+                .collect::<Result<Vec<usize>>>()
+                .map(Some),
+        }
+    };
+    if let Some(mesh) = parse_list("mesh")? {
+        spec.mesh = mesh;
+    }
+    if let Some(spm) = parse_list("spm")? {
+        spec.spm_kib = spm;
+    }
+
+    let suite_name = args.get_or("workload", "serving");
+    let workload = crate::dse::suite(suite_name).with_context(|| {
+        format!("unknown DSE workload {suite_name:?}; available: {:?}", crate::dse::suite_names())
+    })?;
+
+    let mut opts = DseOptions::default();
+    if let Some(n) = args.get("workers") {
+        opts.workers = n.parse().context("--workers")?;
+    }
+    if let Some(n) = args.get("wave") {
+        opts.config_parallelism = n.parse().context("--wave")?;
+    }
+    if let Some(v) = args.get("prune") {
+        opts.prune = v.parse().context("--prune")?;
+    }
+    let csv: bool = match args.get("csv") {
+        Some(v) => v.parse().context("--csv")?,
+        None => false,
+    };
+
+    let res = crate::dse::run_sweep(&spec, &workload, &opts)?;
+    let table = crate::report::dse_summary(&res);
+    if csv {
+        print!("{}", table.csv());
+    } else {
+        print!("{}", table.markdown());
+        print!("{}", crate::report::dse_plot(&res).render());
+    }
+    println!(
+        "frontier   : {} non-dominated of {} evaluated ({} pruned by roofline, {} infeasible)",
+        res.frontier().len(),
+        res.points.len(),
+        res.pruned.len(),
+        res.infeasible.len()
+    );
+    // Read the Table 1-class instance against the frontier.
+    if let Some(p) = res.best_at_mesh(32) {
+        println!(
+            "32x32 class: {} achieves {:.1} TFLOP/s at cost {:.0}; frontier interpolation there is {:.1} -> {}",
+            p.arch.name,
+            p.tflops,
+            p.cost,
+            res.interpolation_at(p.cost),
+            if res.on_or_above_frontier(p) { "on/above the frontier" } else { "below the frontier" }
+        );
+    }
+    println!(
+        "engine     : {} simulations, {} cache hits, {:.0} ms wall",
+        res.sim_calls, res.cache_hits, res.elapsed_ms
+    );
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, res.to_json().pretty())
+            .with_context(|| format!("writing {path:?}"))?;
+        println!("wrote      : {path}");
+    }
+    Ok(())
+}
+
 fn cmd_verify(args: &Args) -> Result<()> {
     let grid: usize = args.get_or("grid", "4").parse().context("--grid")?;
     let arch = ArchConfig::tiny(grid, grid);
+    arch.validate()
+        .with_context(|| format!("invalid verification grid --grid {grid}"))?;
     let shape = parse_shape(args.get("shape").context("--shape required")?)?;
     let sched = parse_schedule(args, &arch, shape)?;
     let mut oracle = match args.get("artifacts") {
@@ -389,6 +515,27 @@ mod tests {
         run(&argv("candidates --preset tiny4 --shape 64x64x64")).unwrap();
         run(&argv("arch --preset a100")).unwrap();
         assert!(run(&argv("bogus")).is_err());
+    }
+
+    #[test]
+    fn cli_supplied_configs_are_validated() {
+        // tinyN with a degenerate grid must error cleanly, not panic later.
+        let err = parse_arch("tiny0").unwrap_err();
+        assert!(format!("{err:#}").contains("invalid tiny grid"), "{err:#}");
+        // The verify path validates its --grid before deploying.
+        let err = run(&argv("verify --shape 8x8x8 --grid 0")).unwrap_err();
+        assert!(format!("{err:#}").contains("invalid verification grid"), "{err:#}");
+    }
+
+    #[test]
+    fn run_dse_smoke() {
+        // A tiny-grid sweep: two meshes of the tiny template, tiny suite.
+        run(&argv("dse --base tiny4 --mesh 2,4 --workload tiny --wave 2 --workers 2")).unwrap();
+        run(&argv("dse --base tiny4 --mesh 2 --workload tiny --csv true --prune false")).unwrap();
+        assert!(run(&argv("dse --workload nope")).is_err());
+        assert!(run(&argv("dse --base tiny4 --mesh 0 --workload tiny")).is_err());
+        assert!(run(&argv("dse --spec /no/such/file")).is_err());
+        assert!(run(&argv("dse --base tiny4 --mesh x")).is_err());
     }
 
     #[test]

@@ -178,10 +178,27 @@ impl Engine {
         Ok(rep.shapes.remove(0).result)
     }
 
-    /// Tune every GEMM in a workload: enumerate candidates per item,
-    /// simulate all not-yet-cached candidates on the worker pool, and
-    /// assemble a per-item ranking plus aggregate statistics.
+    /// Tune every GEMM in a workload on the engine's default architecture.
     pub fn tune_workload(&self, w: &Workload) -> Result<WorkloadReport> {
+        self.tune_on(&self.arch, self.arch_fp, w)
+    }
+
+    /// Tune a workload on an *arbitrary* architecture, sharing this
+    /// engine's memo-cache and counters: the cache key includes the
+    /// architecture fingerprint, so a hardware design-space sweep reuses
+    /// one engine (and every simulation it has ever run) across candidate
+    /// configs. Safe to call concurrently from several threads — the DSE
+    /// sweep parallelizes at the config level on top of this.
+    pub fn tune_workload_on(&self, arch: &ArchConfig, w: &Workload) -> Result<WorkloadReport> {
+        let fp =
+            if *arch == self.arch { self.arch_fp } else { arch_fingerprint(arch) };
+        self.tune_on(arch, fp, w)
+    }
+
+    /// Shared implementation: enumerate candidates per item, simulate all
+    /// not-yet-cached candidates on the worker pool, and assemble a
+    /// per-item ranking plus aggregate statistics.
+    fn tune_on(&self, arch: &ArchConfig, arch_fp: u64, w: &Workload) -> Result<WorkloadReport> {
         let t0 = std::time::Instant::now();
 
         struct Job {
@@ -198,9 +215,8 @@ impl Engine {
             let cache = self.cache.lock().unwrap();
             let mut pending: HashSet<CacheKey> = HashSet::new();
             for item in &w.items {
-                for sched in candidates(&self.arch, item.shape) {
-                    let key =
-                        CacheKey { arch_fp: self.arch_fp, shape: item.shape, sched: sched.clone() };
+                for sched in candidates(arch, item.shape) {
+                    let key = CacheKey { arch_fp, shape: item.shape, sched: sched.clone() };
                     if cache.contains_key(&key) || pending.contains(&key) {
                         hits_this_call += 1;
                     } else {
@@ -220,7 +236,6 @@ impl Engine {
         let results: Vec<Mutex<Option<Option<RunStats>>>> =
             (0..jobs.len()).map(|_| Mutex::new(None)).collect();
         let next = AtomicUsize::new(0);
-        let arch = &self.arch;
         std::thread::scope(|s| {
             for _ in 0..workers {
                 s.spawn(|| loop {
@@ -254,8 +269,8 @@ impl Engine {
         let mut shapes = Vec::with_capacity(w.items.len());
         for item in &w.items {
             let mut ranking = Vec::new();
-            for sched in candidates(&self.arch, item.shape) {
-                let key = CacheKey { arch_fp: self.arch_fp, shape: item.shape, sched };
+            for sched in candidates(arch, item.shape) {
+                let key = CacheKey { arch_fp, shape: item.shape, sched };
                 if let Some(Some(stats)) = cache.get(&key) {
                     ranking.push(Scored { schedule: key.sched, stats: stats.clone() });
                 }
@@ -277,7 +292,7 @@ impl Engine {
 
         Ok(WorkloadReport {
             workload: w.name.clone(),
-            arch: self.arch.name.clone(),
+            arch: arch.name.clone(),
             shapes,
             sim_calls: jobs.len(),
             cache_hits: hits_this_call,
@@ -315,6 +330,29 @@ mod tests {
         assert_eq!(
             arch_fingerprint(&ArchConfig::tiny(4, 4)),
             arch_fingerprint(&ArchConfig::tiny(4, 4))
+        );
+    }
+
+    #[test]
+    fn tune_workload_on_shares_cache_across_architectures() {
+        let a4 = ArchConfig::tiny(4, 4);
+        let a2 = ArchConfig::tiny(2, 2);
+        let engine = Engine::new(&a4);
+        let w = Workload::single("s", GemmShape::new(64, 64, 64));
+        let r4 = engine.tune_workload_on(&a4, &w).unwrap();
+        let r2 = engine.tune_workload_on(&a2, &w).unwrap();
+        assert!(r4.sim_calls > 0, "first arch simulates");
+        assert!(r2.sim_calls > 0, "a different arch cannot reuse the first's entries");
+        assert_eq!(r2.arch, a2.name);
+        // Re-tuning either architecture is now fully memoized.
+        assert_eq!(engine.tune_workload_on(&a2, &w).unwrap().sim_calls, 0);
+        assert_eq!(engine.tune_workload_on(&a4, &w).unwrap().sim_calls, 0);
+        // The default-arch path hits the same cache entries bit for bit.
+        let d = engine.tune_workload(&w).unwrap();
+        assert_eq!(d.sim_calls, 0);
+        assert_eq!(
+            d.shapes[0].result.best().stats.makespan_ns.to_bits(),
+            r4.shapes[0].result.best().stats.makespan_ns.to_bits()
         );
     }
 

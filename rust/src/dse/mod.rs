@@ -1,0 +1,626 @@
+//! Hardware design-space exploration (DSE).
+//!
+//! The paper's thesis is that GEMM deployment must be *co-designed* with
+//! the hardware instance: SoftHier is "fully configurable through
+//! architecture configuration files", and the deployment toolchain is the
+//! evaluator that tells you what a configuration is worth. This module
+//! closes that loop. A [`SweepSpec`] spans the hardware side of the design
+//! space — mesh dimensions, CE-array shape, SPM capacity, HBM channel
+//! count/bandwidth, DMA engines — and [`run_sweep`] co-tunes every
+//! candidate instance with the parallel batched autotuner
+//! ([`Engine::tune_workload_on`]) over a named GEMM workload, reporting
+//! the Pareto frontier of achieved TFLOP/s vs. a silicon-cost proxy.
+//!
+//! Sweep mechanics:
+//!
+//! * **one engine, one memo-cache** — the simulation cache is keyed by
+//!   architecture fingerprint, so every config shares one engine and
+//!   repeated shapes/schedules across sweep waves never re-simulate;
+//! * **config-level parallelism** — candidate configs are evaluated in
+//!   deterministic cost-ordered waves, the configs of a wave concurrently;
+//! * **roofline early-prune** — before simulating a config, its workload
+//!   roofline upper bound ([`crate::perfmodel::workload_roofline_tflops`])
+//!   is compared against the already-measured frontier: a config whose
+//!   *ceiling* cannot beat a cheaper measured point can never be Pareto-
+//!   optimal and is skipped. Pruning only consults completed waves, so the
+//!   sweep output is independent of thread scheduling.
+
+pub mod pareto;
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::arch::workload::Workload;
+use crate::arch::ArchConfig;
+use crate::coordinator::engine::{Engine, WorkloadReport};
+use crate::perfmodel::workload_roofline_tflops;
+use crate::util::cfgtext::{Doc, Value};
+use crate::util::json::Json;
+
+/// Safety slack applied to the roofline bound before pruning: a config is
+/// only discarded when even `slack × bound` cannot reach the measured
+/// frontier, so modest model error cannot prune a truly optimal config.
+pub const PRUNE_SLACK: f64 = 1.05;
+
+/// Silicon-cost proxy weights. The absolute scale is arbitrary (it only
+/// ranks configurations); the defaults weigh a tile's MAC array, its SPM,
+/// and system HBM bandwidth in roughly the area/cost proportions of a
+/// modern accelerator die.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostModel {
+    /// Cost per 1024 MAC units (PE count × CE-array area).
+    pub per_kmac: f64,
+    /// Cost per KiB of on-chip SPM, summed over all tiles.
+    pub per_spm_kib: f64,
+    /// Cost per GB/s of aggregate HBM bandwidth.
+    pub per_hbm_gbps: f64,
+}
+
+impl CostModel {
+    pub fn default_proxy() -> CostModel {
+        CostModel { per_kmac: 1.0, per_spm_kib: 0.002, per_hbm_gbps: 0.05 }
+    }
+
+    /// Cost units for one architecture instance.
+    pub fn cost(&self, arch: &ArchConfig) -> f64 {
+        let kmacs = (arch.num_tiles() * arch.tile.ce_m * arch.tile.ce_n) as f64 / 1024.0;
+        let spm_kib = (arch.num_tiles() * arch.tile.l1_bytes) as f64 / 1024.0;
+        kmacs * self.per_kmac
+            + spm_kib * self.per_spm_kib
+            + arch.hbm.total_gbps() * self.per_hbm_gbps
+    }
+}
+
+/// The swept hardware axes. Configurations are the cross product of all
+/// axes applied to `base` (every non-swept parameter comes from `base`);
+/// combinations that fail [`ArchConfig::validate`] are silently skipped.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    pub name: String,
+    /// Square mesh dimensions (rows = cols).
+    pub mesh: Vec<usize>,
+    /// CE-array shapes `(ce_m, ce_n)`.
+    pub ce: Vec<(usize, usize)>,
+    /// Per-tile SPM capacities, KiB.
+    pub spm_kib: Vec<usize>,
+    /// Per-channel HBM bandwidths, GB/s.
+    pub hbm_channel_gbps: Vec<f64>,
+    /// HBM channel population as a percentage of the mesh edge:
+    /// `channels_per_edge = max(1, rows × pct / 100)`.
+    pub hbm_channels_pct: Vec<usize>,
+    /// DMA engines per tile.
+    pub dma_engines: Vec<usize>,
+    /// Template for everything not swept.
+    pub base: ArchConfig,
+}
+
+impl SweepSpec {
+    /// The fast default sweep: five mesh sizes (8×8 → 32×32) at two SPM
+    /// capacities around the GH200-like template. The 192 KiB point forces
+    /// a shallower K-panel ladder than 384 KiB, so each mesh contributes a
+    /// real cheaper-but-slower / costlier-but-faster trade-off pair.
+    /// Completes in seconds and includes the 32×32 GH200-class instance
+    /// itself, so the frontier can be read against the paper's Table 1
+    /// machine.
+    pub fn reduced() -> SweepSpec {
+        SweepSpec {
+            name: "reduced".into(),
+            mesh: vec![8, 12, 16, 24, 32],
+            ce: vec![(64, 16)],
+            spm_kib: vec![192, 384],
+            hbm_channel_gbps: vec![64.0],
+            hbm_channels_pct: vec![100],
+            dma_engines: vec![2],
+            base: ArchConfig::gh200_like(),
+        }
+    }
+
+    /// The broad sweep: adds CE-array shape, per-channel bandwidth, and
+    /// channel-population axes (120 raw configurations before pruning).
+    pub fn full() -> SweepSpec {
+        SweepSpec {
+            name: "full".into(),
+            mesh: vec![8, 12, 16, 24, 32],
+            ce: vec![(32, 16), (64, 16)],
+            spm_kib: vec![256, 384, 512],
+            hbm_channel_gbps: vec![48.0, 64.0],
+            hbm_channels_pct: vec![50, 100],
+            dma_engines: vec![2],
+            base: ArchConfig::gh200_like(),
+        }
+    }
+
+    /// Parse a sweep spec from config text (`util::cfgtext` grammar). All
+    /// keys are optional and default to [`SweepSpec::reduced`]; the base
+    /// architecture is read from the same document's `[grid]`/`[tile]`/
+    /// `[noc]`/`[hbm]` sections exactly like an architecture file, and the
+    /// sweep axes live in a `[sweep]` section:
+    ///
+    /// ```text
+    /// [sweep]
+    /// name = "mine"
+    /// mesh = [8, 16, 32]
+    /// ce_m = [64]
+    /// ce_n = [16]
+    /// spm_kib = [256, 384]
+    /// hbm_channel_gbps = [64]
+    /// hbm_channels_pct = [50, 100]
+    /// dma_engines = [2]
+    /// ```
+    pub fn from_text(text: &str) -> Result<SweepSpec> {
+        let doc = Doc::parse(text).context("sweep spec")?;
+        let base = ArchConfig::from_text(text).context("sweep spec base architecture")?;
+        let mut spec = SweepSpec { base, ..SweepSpec::reduced() };
+        if let Some(name) = doc.get_str("sweep", "name") {
+            spec.name = name.to_string();
+        }
+        let usize_list = |key: &str, dflt: &[usize]| -> Result<Vec<usize>> {
+            match doc.get("sweep", key) {
+                None => Ok(dflt.to_vec()),
+                Some(Value::Int(v)) if *v > 0 => Ok(vec![*v as usize]),
+                Some(Value::IntList(vs)) if !vs.is_empty() && vs.iter().all(|v| *v > 0) => {
+                    Ok(vs.iter().map(|v| *v as usize).collect())
+                }
+                Some(other) => {
+                    anyhow::bail!("sweep.{key} must be a positive int or int list, got {other}")
+                }
+            }
+        };
+        spec.mesh = usize_list("mesh", &spec.mesh.clone())?;
+        spec.spm_kib = usize_list("spm_kib", &spec.spm_kib.clone())?;
+        spec.hbm_channels_pct = usize_list("hbm_channels_pct", &spec.hbm_channels_pct.clone())?;
+        spec.dma_engines = usize_list("dma_engines", &spec.dma_engines.clone())?;
+        // The bandwidth axis is f64 (presets use fractional GB/s, e.g. the
+        // A100-like 48.6): accept a float or int scalar, or an int list
+        // (the cfgtext grammar has no float lists).
+        spec.hbm_channel_gbps = match doc.get("sweep", "hbm_channel_gbps") {
+            None => spec.hbm_channel_gbps.clone(),
+            Some(Value::Float(v)) if *v > 0.0 => vec![*v],
+            Some(Value::Int(v)) if *v > 0 => vec![*v as f64],
+            Some(Value::IntList(vs)) if !vs.is_empty() && vs.iter().all(|v| *v > 0) => {
+                vs.iter().map(|v| *v as f64).collect()
+            }
+            Some(other) => anyhow::bail!(
+                "sweep.hbm_channel_gbps must be a positive number or int list, got {other}"
+            ),
+        };
+        let default_ce: (Vec<usize>, Vec<usize>) = spec.ce.iter().copied().unzip();
+        let ce_m = usize_list("ce_m", &default_ce.0)?;
+        let ce_n = usize_list("ce_n", &default_ce.1)?;
+        anyhow::ensure!(
+            ce_m.len() == ce_n.len(),
+            "sweep.ce_m and sweep.ce_n must have the same length ({} vs {})",
+            ce_m.len(),
+            ce_n.len()
+        );
+        spec.ce = ce_m.into_iter().zip(ce_n).collect();
+        Ok(spec)
+    }
+
+    /// All valid architecture instances this spec spans, in axis order.
+    pub fn enumerate(&self) -> Vec<ArchConfig> {
+        let mut out = Vec::new();
+        for &mesh in &self.mesh {
+            for &(ce_m, ce_n) in &self.ce {
+                for &spm in &self.spm_kib {
+                    for &gbps in &self.hbm_channel_gbps {
+                        for &pct in &self.hbm_channels_pct {
+                            for &dma in &self.dma_engines {
+                                let mut a = self.base.clone();
+                                a.rows = mesh;
+                                a.cols = mesh;
+                                a.tile.ce_m = ce_m;
+                                a.tile.ce_n = ce_n;
+                                a.tile.l1_bytes = spm * 1024;
+                                a.tile.dma_engines = dma;
+                                a.hbm.channel_gbps = gbps;
+                                a.hbm.channels_per_edge = (mesh * pct / 100).max(1);
+                                a.name = format!(
+                                    "dse-{mesh}x{mesh}-ce{ce_m}x{ce_n}-spm{spm}k-hbm{}x{:.0}-dma{dma}",
+                                    a.hbm.num_channels(),
+                                    gbps
+                                );
+                                if a.validate().is_ok() {
+                                    out.push(a);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// The GEMM suites a DSE sweep co-tunes against. These are deliberately
+/// smaller than the `tune-workload` serving suites (d_model 2048 instead
+/// of 7168, a handful of layers) so a whole sweep stays interactive while
+/// still mixing compute-bound prefill with flat decode traffic.
+pub fn suite(name: &str) -> Option<Workload> {
+    let mut w = match name {
+        "serving" => Workload::transformer_serving(512, 32, 2, 2048, 1024, 4),
+        "prefill" => Workload::transformer_prefill("prefill", 512, 2048, 1024, 4),
+        "decode" => Workload::transformer_decode("decode", 32, 2048, 1024, 4),
+        "tiny" => Workload::builtin("tiny")?,
+        _ => return None,
+    };
+    w.name = format!("dse-{name}");
+    Some(w)
+}
+
+/// Names accepted by [`suite`].
+pub fn suite_names() -> &'static [&'static str] {
+    &["serving", "prefill", "decode", "tiny"]
+}
+
+/// Sweep execution knobs.
+#[derive(Debug, Clone)]
+pub struct DseOptions {
+    /// Worker threads per tuning engine (0 = engine default).
+    pub workers: usize,
+    /// Configs evaluated concurrently per wave (config-level parallelism).
+    pub config_parallelism: usize,
+    /// Enable the roofline early-prune.
+    pub prune: bool,
+    /// Cost-model weights.
+    pub cost: CostModel,
+}
+
+impl Default for DseOptions {
+    fn default() -> DseOptions {
+        DseOptions {
+            workers: 0,
+            config_parallelism: 4,
+            prune: true,
+            cost: CostModel::default_proxy(),
+        }
+    }
+}
+
+/// One evaluated configuration.
+#[derive(Debug, Clone)]
+pub struct DsePoint {
+    pub arch: ArchConfig,
+    /// Cost-proxy units ([`CostModel`]).
+    pub cost: f64,
+    /// Achieved count-weighted aggregate TFLOP/s (best schedules).
+    pub tflops: f64,
+    /// Roofline upper bound for the same workload.
+    pub roofline_tflops: f64,
+    /// On the Pareto frontier of (cost, tflops)?
+    pub on_frontier: bool,
+    /// Full per-shape tuning report for this config.
+    pub report: WorkloadReport,
+}
+
+impl DsePoint {
+    /// Achieved fraction of this instance's peak.
+    pub fn utilization(&self) -> f64 {
+        let peak = self.arch.peak_tflops();
+        if peak <= 0.0 {
+            0.0
+        } else {
+            self.tflops / peak
+        }
+    }
+}
+
+/// A configuration skipped by the roofline prune.
+#[derive(Debug, Clone)]
+pub struct PrunedPoint {
+    pub name: String,
+    pub cost: f64,
+    pub roofline_tflops: f64,
+}
+
+/// Outcome of one [`run_sweep`] call.
+#[derive(Debug, Clone)]
+pub struct DseResult {
+    pub spec_name: String,
+    pub workload: String,
+    /// Evaluated points, sorted by ascending cost (name-tie-broken).
+    pub points: Vec<DsePoint>,
+    /// Configs the roofline prune skipped.
+    pub pruned: Vec<PrunedPoint>,
+    /// Configs the tuner could not deploy at all (name, error).
+    pub infeasible: Vec<(String, String)>,
+    /// Simulations actually executed across the sweep.
+    pub sim_calls: usize,
+    /// Memo-cache hits across the sweep.
+    pub cache_hits: usize,
+    pub elapsed_ms: f64,
+}
+
+impl DseResult {
+    /// Frontier points in ascending-cost order.
+    pub fn frontier(&self) -> Vec<&DsePoint> {
+        self.points.iter().filter(|p| p.on_frontier).collect()
+    }
+
+    /// The highest-throughput evaluated point.
+    pub fn best(&self) -> Option<&DsePoint> {
+        self.points
+            .iter()
+            .reduce(|a, b| if b.tflops > a.tflops { b } else { a })
+    }
+
+    /// The frontier as a (cost, tflops) polyline.
+    pub fn frontier_curve(&self) -> Vec<(f64, f64)> {
+        self.frontier().iter().map(|p| (p.cost, p.tflops)).collect()
+    }
+
+    /// Frontier interpolation at an arbitrary cost (clamped outside the
+    /// covered range) — the "is this point on or above the frontier?"
+    /// reference line.
+    pub fn interpolation_at(&self, cost: f64) -> f64 {
+        pareto::interpolate(&self.frontier_curve(), cost)
+    }
+
+    /// The fastest evaluated point on an `n × n` mesh, if any — e.g. the
+    /// Table 1-class 32×32 instance the reduced sweep includes.
+    pub fn best_at_mesh(&self, n: usize) -> Option<&DsePoint> {
+        self.points
+            .iter()
+            .filter(|p| p.arch.rows == n && p.arch.cols == n)
+            .reduce(|a, b| if b.tflops > a.tflops { b } else { a })
+    }
+
+    /// Does `p` sit on or above the frontier's interpolation at its cost?
+    pub fn on_or_above_frontier(&self, p: &DsePoint) -> bool {
+        p.tflops + 1e-9 >= self.interpolation_at(p.cost)
+    }
+
+    /// Machine-readable rendering (the `dse --json` artifact).
+    pub fn to_json(&self) -> Json {
+        let mut pts = Json::arr();
+        for p in &self.points {
+            pts = pts.push(
+                Json::obj()
+                    .field("config", p.arch.name.as_str())
+                    .field("rows", p.arch.rows)
+                    .field("cols", p.arch.cols)
+                    .field("peak_tflops", p.arch.peak_tflops())
+                    .field("hbm_gbps", p.arch.hbm.total_gbps())
+                    .field("cost", p.cost)
+                    .field("tflops", p.tflops)
+                    .field("utilization", p.utilization())
+                    .field("roofline_tflops", p.roofline_tflops)
+                    .field("on_frontier", p.on_frontier),
+            );
+        }
+        let mut pruned = Json::arr();
+        for p in &self.pruned {
+            pruned = pruned.push(
+                Json::obj()
+                    .field("config", p.name.as_str())
+                    .field("cost", p.cost)
+                    .field("roofline_tflops", p.roofline_tflops),
+            );
+        }
+        let mut infeasible = Json::arr();
+        for (name, err) in &self.infeasible {
+            let entry = Json::obj().field("config", name.as_str()).field("error", err.as_str());
+            infeasible = infeasible.push(entry);
+        }
+        Json::obj()
+            .field("spec", self.spec_name.as_str())
+            .field("workload", self.workload.as_str())
+            .field("evaluated", self.points.len())
+            .field("frontier_size", self.frontier().len())
+            .field("sim_calls", self.sim_calls)
+            .field("cache_hits", self.cache_hits)
+            .field("points", pts)
+            .field("pruned", pruned)
+            .field("infeasible", infeasible)
+    }
+}
+
+/// Sweep the spec's design space over a workload: enumerate configs, prune
+/// by roofline bound, co-tune the survivors (sharing one engine/cache),
+/// and mark the Pareto frontier of achieved TFLOP/s vs. cost.
+pub fn run_sweep(spec: &SweepSpec, w: &Workload, opts: &DseOptions) -> Result<DseResult> {
+    anyhow::ensure!(!w.items.is_empty(), "DSE workload is empty");
+    let t0 = Instant::now();
+
+    // Candidate list: (arch, cost, roofline bound), cost-ascending so the
+    // prune sees cheap configs first and waves are deterministic.
+    let mut cands: Vec<(ArchConfig, f64, f64)> = spec
+        .enumerate()
+        .into_iter()
+        .map(|a| {
+            let cost = opts.cost.cost(&a);
+            let ub = workload_roofline_tflops(&a, w);
+            (a, cost, ub)
+        })
+        .collect();
+    anyhow::ensure!(
+        !cands.is_empty(),
+        "sweep spec '{}' enumerates no valid configuration",
+        spec.name
+    );
+    cands.sort_by(|x, y| x.1.total_cmp(&y.1).then_with(|| x.0.name.cmp(&y.0.name)));
+
+    let mut engine = Engine::new(&spec.base);
+    if opts.workers > 0 {
+        engine = engine.with_workers(opts.workers);
+    }
+    let sim0 = engine.sim_calls();
+    let hits0 = engine.cache_hits();
+
+    let mut points: Vec<DsePoint> = Vec::new();
+    let mut pruned: Vec<PrunedPoint> = Vec::new();
+    let mut infeasible: Vec<(String, String)> = Vec::new();
+    let wave = opts.config_parallelism.max(1);
+
+    let mut idx = 0usize;
+    while idx < cands.len() {
+        // Assemble the next wave, pruning against completed points only —
+        // a config whose (slack-inflated) ceiling cannot strictly beat an
+        // already-measured cheaper-or-equal point can never join the
+        // frontier.
+        let mut batch: Vec<usize> = Vec::new();
+        while idx < cands.len() && batch.len() < wave {
+            let (a, cost, ub) = &cands[idx];
+            let bound = ub * PRUNE_SLACK;
+            let hopeless = opts.prune
+                && points.iter().any(|p| {
+                    (p.tflops > bound && p.cost <= *cost) || (p.tflops >= bound && p.cost < *cost)
+                });
+            if hopeless {
+                pruned.push(PrunedPoint {
+                    name: a.name.clone(),
+                    cost: *cost,
+                    roofline_tflops: *ub,
+                });
+            } else {
+                batch.push(idx);
+            }
+            idx += 1;
+        }
+
+        // Evaluate the wave concurrently; merge results in wave order so
+        // thread completion order never reaches the output.
+        let slots: Vec<Mutex<Option<Result<WorkloadReport>>>> =
+            batch.iter().map(|_| Mutex::new(None)).collect();
+        let eng = &engine;
+        std::thread::scope(|scope| {
+            for (slot, &ci) in slots.iter().zip(&batch) {
+                let arch = &cands[ci].0;
+                scope.spawn(move || {
+                    let r = eng.tune_workload_on(arch, w);
+                    *slot.lock().unwrap() = Some(r);
+                });
+            }
+        });
+        for (slot, &ci) in slots.iter().zip(&batch) {
+            let (a, cost, ub) = &cands[ci];
+            match slot.lock().unwrap().take().expect("wave evaluated every slot") {
+                Ok(report) => points.push(DsePoint {
+                    arch: a.clone(),
+                    cost: *cost,
+                    tflops: report.aggregate_tflops(),
+                    roofline_tflops: *ub,
+                    on_frontier: false,
+                    report,
+                }),
+                Err(e) => infeasible.push((a.name.clone(), format!("{e:#}"))),
+            }
+        }
+    }
+
+    anyhow::ensure!(
+        !points.is_empty(),
+        "no sweep configuration could deploy workload '{}' (first error: {})",
+        w.name,
+        infeasible.first().map(|(n, e)| format!("{n}: {e}")).unwrap_or_default()
+    );
+
+    let curve: Vec<(f64, f64)> = points.iter().map(|p| (p.cost, p.tflops)).collect();
+    for i in pareto::frontier_indices(&curve) {
+        points[i].on_frontier = true;
+    }
+
+    Ok(DseResult {
+        spec_name: spec.name.clone(),
+        workload: w.name.clone(),
+        points,
+        pruned,
+        infeasible,
+        sim_calls: engine.sim_calls() - sim0,
+        cache_hits: engine.cache_hits() - hits0,
+        elapsed_ms: t0.elapsed().as_secs_f64() * 1e3,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cost_model_orders_machines_sanely() {
+        let c = CostModel::default_proxy();
+        let small = ArchConfig::tiny(2, 2);
+        let big = ArchConfig::tiny(4, 4);
+        assert!(c.cost(&small) < c.cost(&big));
+        assert!(c.cost(&ArchConfig::a100_like()) < c.cost(&ArchConfig::gh200_like()));
+        assert!(c.cost(&small) > 0.0);
+    }
+
+    #[test]
+    fn reduced_spec_contains_gh200_class_point() {
+        let spec = SweepSpec::reduced();
+        let configs = spec.enumerate();
+        assert!(configs.len() >= 5, "{}", configs.len());
+        let gh = ArchConfig::gh200_like();
+        let class = configs.iter().find(|a| {
+            a.rows == 32
+                && a.cols == 32
+                && a.tile == gh.tile
+                && a.hbm == gh.hbm
+                && a.noc == gh.noc
+                && a.elem_bytes == gh.elem_bytes
+        });
+        assert!(class.is_some(), "reduced sweep must include the Table 1 instance");
+        for a in &configs {
+            a.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn spec_text_roundtrip_and_defaults() {
+        let text = "\
+[sweep]\nname = \"mine\"\nmesh = [2, 4]\nce_m = [16]\nce_n = [8]\nspm_kib = 128\n\
+[tile]\nclock_ghz = 1.0\n";
+        let spec = SweepSpec::from_text(text).unwrap();
+        assert_eq!(spec.name, "mine");
+        assert_eq!(spec.mesh, vec![2, 4]);
+        assert_eq!(spec.ce, vec![(16, 8)]);
+        assert_eq!(spec.spm_kib, vec![128], "scalar promotes to one-element list");
+        // Unset axes fall back to the reduced defaults.
+        assert_eq!(spec.hbm_channels_pct, SweepSpec::reduced().hbm_channels_pct);
+        assert_eq!(spec.base.tile.clock_ghz, 1.0, "base arch read from same doc");
+        assert_eq!(spec.enumerate().len(), 2);
+    }
+
+    #[test]
+    fn spec_text_accepts_fractional_bandwidth() {
+        // Presets use fractional GB/s (A100-like: 48.6); a float scalar
+        // must parse even though the list grammar is int-only.
+        let spec = SweepSpec::from_text("[sweep]\nhbm_channel_gbps = 48.6\n").unwrap();
+        assert_eq!(spec.hbm_channel_gbps, vec![48.6]);
+        let spec = SweepSpec::from_text("[sweep]\nhbm_channel_gbps = [48, 64]\n").unwrap();
+        assert_eq!(spec.hbm_channel_gbps, vec![48.0, 64.0]);
+        assert!(SweepSpec::from_text("[sweep]\nhbm_channel_gbps = -3\n").is_err());
+    }
+
+    #[test]
+    fn spec_text_rejects_nonsense() {
+        assert!(SweepSpec::from_text("[sweep]\nmesh = [0]\n").is_err(), "zero mesh");
+        assert!(SweepSpec::from_text("[sweep]\nmesh = \"big\"\n").is_err(), "wrong type");
+        assert!(
+            SweepSpec::from_text("[sweep]\nce_m = [16, 32]\nce_n = [8]\n").is_err(),
+            "ragged ce lists"
+        );
+        assert!(SweepSpec::from_text("[grid\n").is_err(), "cfgtext error propagates");
+        assert!(
+            SweepSpec::from_text("elem_bytes = 99\n").is_err(),
+            "invalid base architecture rejected via ArchConfig::validate"
+        );
+    }
+
+    #[test]
+    fn suites_resolve_and_mix_regimes() {
+        for name in suite_names() {
+            let w = suite(name).unwrap();
+            assert!(!w.items.is_empty(), "{name}");
+            assert_eq!(w.name, format!("dse-{name}"));
+        }
+        assert!(suite("nope").is_none());
+        let serving = suite("serving").unwrap();
+        assert!(serving.items.iter().any(|i| i.shape.is_flat()), "decode side present");
+        assert!(serving.items.iter().any(|i| !i.shape.is_flat()), "prefill side present");
+    }
+}

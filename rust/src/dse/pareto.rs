@@ -1,0 +1,141 @@
+//! Pareto-dominance calculus for (cost, value) points.
+//!
+//! The DSE sweep reports configurations on the frontier of *achieved
+//! TFLOP/s vs. hardware cost*: a config earns its place only if no other
+//! config is at least as fast for strictly less cost (or strictly faster
+//! for the same cost). Everything here is deterministic — ties between
+//! bit-identical points are broken by input order, so two sweeps over the
+//! same spec mark exactly the same frontier.
+
+/// `a` dominates `b` in (cost, value) space: no worse on both axes
+/// (cost minimized, value maximized) and strictly better on at least one.
+pub fn dominates(a: (f64, f64), b: (f64, f64)) -> bool {
+    a.0 <= b.0 && a.1 >= b.1 && (a.0 < b.0 || a.1 > b.1)
+}
+
+/// Indices of the Pareto-optimal points of `pts`, in input order.
+///
+/// Exact duplicates keep only their first occurrence (a copy of a frontier
+/// point adds no information); NaN on either axis disqualifies a point.
+pub fn frontier_indices(pts: &[(f64, f64)]) -> Vec<usize> {
+    (0..pts.len())
+        .filter(|&i| {
+            let p = pts[i];
+            if p.0.is_nan() || p.1.is_nan() {
+                return false;
+            }
+            !pts.iter().enumerate().any(|(j, &q)| {
+                j != i && (dominates(q, p) || (q == p && j < i))
+            })
+        })
+        .collect()
+}
+
+/// Piecewise-linear interpolation of a frontier at `cost`.
+///
+/// `frontier` must be sorted by ascending cost (what
+/// [`crate::dse::DseResult::frontier`] returns). Outside the covered cost
+/// range the curve is clamped to the nearest endpoint's value; an empty
+/// frontier interpolates to 0.
+pub fn interpolate(frontier: &[(f64, f64)], cost: f64) -> f64 {
+    match frontier {
+        [] => 0.0,
+        [only] => only.1,
+        _ => {
+            if cost <= frontier[0].0 {
+                return frontier[0].1;
+            }
+            let last = frontier[frontier.len() - 1];
+            if cost >= last.0 {
+                return last.1;
+            }
+            for w in frontier.windows(2) {
+                let (x0, y0) = w[0];
+                let (x1, y1) = w[1];
+                if cost >= x0 && cost <= x1 {
+                    if x1 <= x0 {
+                        return y0.max(y1);
+                    }
+                    let t = (cost - x0) / (x1 - x0);
+                    return y0 + t * (y1 - y0);
+                }
+            }
+            last.1 // unreachable for sorted input, but stay total
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dominance_is_strict_somewhere() {
+        assert!(dominates((1.0, 10.0), (2.0, 9.0)));
+        assert!(dominates((1.0, 10.0), (1.0, 9.0)));
+        assert!(dominates((1.0, 10.0), (2.0, 10.0)));
+        assert!(!dominates((1.0, 10.0), (1.0, 10.0)), "ties dominate nothing");
+        assert!(!dominates((2.0, 11.0), (1.0, 10.0)), "trade-offs don't dominate");
+        assert!(!dominates((1.0, 9.0), (2.0, 10.0)));
+    }
+
+    #[test]
+    fn frontier_filters_dominated_points() {
+        //  (cost, value): b dominated by a; d dominated by c; trade-offs stay.
+        let pts = [
+            (1.0, 10.0), // a: frontier
+            (1.5, 9.0),  // b: dominated by a
+            (2.0, 20.0), // c: frontier
+            (2.0, 15.0), // d: dominated by c
+            (3.0, 25.0), // e: frontier
+        ];
+        assert_eq!(frontier_indices(&pts), vec![0, 2, 4]);
+    }
+
+    #[test]
+    fn frontier_no_mutual_domination_invariant() {
+        let pts = [
+            (5.0, 5.0),
+            (1.0, 1.0),
+            (3.0, 3.0),
+            (3.0, 3.0), // exact duplicate: only the first survives
+            (2.0, 0.5),
+            (4.0, 4.5),
+        ];
+        let f = frontier_indices(&pts);
+        assert_eq!(f, vec![0, 1, 2, 5]);
+        for &i in &f {
+            for &j in &f {
+                if i != j {
+                    assert!(!dominates(pts[i], pts[j]), "{i} dominates {j}");
+                }
+            }
+        }
+        // Every non-frontier point is dominated by (or duplicates) one on it.
+        for i in 0..pts.len() {
+            if !f.contains(&i) {
+                assert!(
+                    f.iter().any(|&j| dominates(pts[j], pts[i]) || pts[j] == pts[i]),
+                    "point {i} excluded but not dominated"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nan_points_are_excluded() {
+        let pts = [(1.0, f64::NAN), (2.0, 5.0)];
+        assert_eq!(frontier_indices(&pts), vec![1]);
+    }
+
+    #[test]
+    fn interpolation_clamps_and_lerps() {
+        let f = [(1.0, 10.0), (3.0, 30.0), (5.0, 40.0)];
+        assert_eq!(interpolate(&f, 0.5), 10.0, "below range clamps left");
+        assert_eq!(interpolate(&f, 9.0), 40.0, "above range clamps right");
+        assert!((interpolate(&f, 2.0) - 20.0).abs() < 1e-12);
+        assert!((interpolate(&f, 4.0) - 35.0).abs() < 1e-12);
+        assert_eq!(interpolate(&[], 2.0), 0.0);
+        assert_eq!(interpolate(&[(2.0, 7.0)], 99.0), 7.0);
+    }
+}

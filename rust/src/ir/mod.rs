@@ -199,23 +199,45 @@ impl Deployment {
 }
 
 /// IR validation errors.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum IrError {
-    #[error("tile {tile}: buffer {buf:?} undeclared (op {op})")]
     UndeclaredBuf { tile: TileCoord, buf: BufId, op: String },
-    #[error("tile {tile}: L1 over budget: {used} > {cap} bytes")]
     L1OverBudget { tile: TileCoord, used: u64, cap: u64 },
-    #[error("tile {tile}: buffer {buf:?} too small: needs {need}, has {have}")]
     BufTooSmall { tile: TileCoord, buf: BufId, need: u64, have: u64 },
-    #[error("tile {tile} step {step}: double-buffer race on {buf:?}: compute touches while comm writes")]
     BufferRace { tile: TileCoord, step: usize, buf: BufId },
-    #[error("step {step} tag {tag}: unmatched communication: {detail}")]
     UnmatchedComm { step: usize, tag: u32, detail: String },
-    #[error("tile {tile} step {step}: {detail}")]
     Malformed { tile: TileCoord, step: usize, detail: String },
-    #[error("duplicate program for tile {0}")]
     DuplicateProgram(TileCoord),
 }
+
+impl std::fmt::Display for IrError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            IrError::UndeclaredBuf { tile, buf, op } => {
+                write!(f, "tile {tile}: buffer {buf:?} undeclared (op {op})")
+            }
+            IrError::L1OverBudget { tile, used, cap } => {
+                write!(f, "tile {tile}: L1 over budget: {used} > {cap} bytes")
+            }
+            IrError::BufTooSmall { tile, buf, need, have } => {
+                write!(f, "tile {tile}: buffer {buf:?} too small: needs {need}, has {have}")
+            }
+            IrError::BufferRace { tile, step, buf } => write!(
+                f,
+                "tile {tile} step {step}: double-buffer race on {buf:?}: compute touches while comm writes"
+            ),
+            IrError::UnmatchedComm { step, tag, detail } => {
+                write!(f, "step {step} tag {tag}: unmatched communication: {detail}")
+            }
+            IrError::Malformed { tile, step, detail } => {
+                write!(f, "tile {tile} step {step}: {detail}")
+            }
+            IrError::DuplicateProgram(tile) => write!(f, "duplicate program for tile {tile}"),
+        }
+    }
+}
+
+impl std::error::Error for IrError {}
 
 /// Validate a deployment against an architecture: buffer discipline,
 /// L1 capacity, communication matching, mask sanity.

@@ -33,6 +33,9 @@
 //! * [`coordinator`] — the end-to-end deployment driver, the
 //!   insight-guided schedule autotuner, and the parallel batched
 //!   workload-tuning engine ([`coordinator::engine`]).
+//! * [`dse`] — hardware design-space exploration: sweep mesh/CE/SPM/HBM
+//!   axes, co-tune every candidate instance with the engine, and report
+//!   the Pareto frontier of achieved TFLOP/s vs. a silicon-cost proxy.
 //! * [`report`] — tables, CSV, and ASCII plots for the bench harness.
 //! * [`util`] — zero-dependency substrates: config text parser, JSON
 //!   writer, PRNG, mini property-test harness.
@@ -42,6 +45,7 @@ pub mod cli;
 pub mod codegen;
 pub mod collective;
 pub mod coordinator;
+pub mod dse;
 pub mod functional;
 pub mod ir;
 pub mod layout;
@@ -58,5 +62,6 @@ pub mod prelude {
     pub use crate::arch::{ArchConfig, GemmShape};
     pub use crate::collective::{Mask, TileCoord};
     pub use crate::coordinator::engine::Engine;
+    pub use crate::dse::{run_sweep, DseOptions, SweepSpec};
     pub use crate::layout::{MatrixLayout, Placement};
 }

@@ -130,6 +130,32 @@ pub fn ridge_intensity(arch: &ArchConfig) -> f64 {
     arch.peak_tflops() * 1e3 / arch.hbm.total_gbps()
 }
 
+/// Roofline upper bound on the count-weighted aggregate throughput
+/// (TFLOP/s) of a whole workload on an architecture: every item runs at
+/// best at `min(peak, intensity × BW)`, so the aggregate can never exceed
+/// `Σ flops / Σ (flops / per-item ceiling)`. No schedule, layout, or
+/// simulation enters this bound — it is the cheap config-level screen the
+/// DSE sweep uses to prune candidates that cannot beat an already-measured
+/// Pareto point ([`crate::dse`]).
+pub fn workload_roofline_tflops(arch: &ArchConfig, w: &crate::arch::workload::Workload) -> f64 {
+    let mut time_lb_ns = 0.0f64;
+    let mut flops = 0.0f64;
+    for item in &w.items {
+        let f = item.shape.flops();
+        let ceiling = roofline_tflops(arch, item.shape.intensity(arch.elem_bytes));
+        if ceiling <= 0.0 {
+            return 0.0;
+        }
+        time_lb_ns += item.count as f64 * f / (ceiling * 1e3);
+        flops += item.count as f64 * f;
+    }
+    if time_lb_ns <= 0.0 {
+        0.0
+    } else {
+        flops / time_lb_ns / 1e3
+    }
+}
+
 /// The DeepSeek-V3 GEMM workload suites the paper benchmarks (§4.1.4,
 /// via the DeepGEMM benchmark set).
 pub mod workloads {
@@ -225,6 +251,38 @@ mod tests {
             // Memory-bound: throughput well below compute peak.
             assert!(t < 0.5 * g.peak_tflops, "{shape}: {t}");
         }
+    }
+
+    #[test]
+    fn workload_roofline_bounds_single_item_exactly() {
+        use crate::arch::workload::Workload;
+        let arch = ArchConfig::gh200_like();
+        let shape = GemmShape::new(4096, 2112, 7168);
+        let w = Workload::single("one", shape);
+        let bound = workload_roofline_tflops(&arch, &w);
+        let direct = roofline_tflops(&arch, shape.intensity(arch.elem_bytes));
+        assert!((bound - direct).abs() < 1e-9 * direct, "{bound} vs {direct}");
+        // Mixing in a memory-bound item can only lower the aggregate bound.
+        let mut mix = Workload::single("one", shape);
+        mix.push("flat", GemmShape::new(64, 2112, 7168), 4);
+        assert!(workload_roofline_tflops(&arch, &mix) < bound);
+        // Empty workload degrades to zero, not NaN.
+        assert_eq!(workload_roofline_tflops(&arch, &Workload::new("empty")), 0.0);
+    }
+
+    #[test]
+    fn workload_roofline_scales_with_hardware() {
+        use crate::arch::workload::Workload;
+        let big = ArchConfig::gh200_like();
+        let mut small = ArchConfig::gh200_like();
+        small.rows = 8;
+        small.cols = 8;
+        small.hbm.channels_per_edge = 8;
+        let w = Workload::builtin("tiny").unwrap();
+        assert!(
+            workload_roofline_tflops(&small, &w) < workload_roofline_tflops(&big, &w),
+            "smaller machine must have a lower ceiling"
+        );
     }
 
     #[test]

@@ -117,6 +117,59 @@ pub fn workload_summary(rep: &crate::coordinator::engine::WorkloadReport) -> Tab
     t
 }
 
+/// Render a DSE sweep (one row per evaluated configuration, frontier rows
+/// starred) — the `dse` CLI/bench table.
+pub fn dse_summary(res: &crate::dse::DseResult) -> Table {
+    let mut t = Table::new(
+        format!(
+            "DSE sweep '{}' over workload '{}' ({} evaluated, {} pruned, {} infeasible)",
+            res.spec_name,
+            res.workload,
+            res.points.len(),
+            res.pruned.len(),
+            res.infeasible.len()
+        ),
+        &[
+            "config", "mesh", "peak TF", "HBM GB/s", "cost", "TFLOP/s", "util %", "roofline",
+            "frontier",
+        ],
+    );
+    for p in &res.points {
+        t.row(vec![
+            p.arch.name.clone(),
+            format!("{}x{}", p.arch.rows, p.arch.cols),
+            format!("{:.0}", p.arch.peak_tflops()),
+            format!("{:.0}", p.arch.hbm.total_gbps()),
+            format!("{:.0}", p.cost),
+            format!("{:.1}", p.tflops),
+            format!("{:.1}", 100.0 * p.utilization()),
+            format!("{:.0}", p.roofline_tflops),
+            if p.on_frontier { "*".into() } else { String::new() },
+        ]);
+    }
+    t
+}
+
+/// The TFLOPS-vs-cost scatter for a DSE sweep: frontier points as `*`,
+/// dominated points as `o`.
+pub fn dse_plot(res: &crate::dse::DseResult) -> AsciiPlot {
+    let mut plot = AsciiPlot::new(
+        format!("DSE frontier: '{}' on '{}'", res.spec_name, res.workload),
+        "cost (proxy units)",
+        "achieved TFLOP/s",
+    );
+    let frontier: Vec<(f64, f64)> = res.frontier_curve();
+    let dominated: Vec<(f64, f64)> = res
+        .points
+        .iter()
+        .filter(|p| !p.on_frontier)
+        .map(|p| (p.cost, p.tflops))
+        .collect();
+    plot.series('o', dominated);
+    plot.series('*', frontier);
+    plot
+}
+
 /// An ASCII scatter/line plot on log-log axes — enough to eyeball a
 /// roofline (Fig. 7a) in terminal output.
 pub struct AsciiPlot {
@@ -238,6 +291,51 @@ mod tests {
     fn plot_handles_empty() {
         let p = AsciiPlot::new("empty", "x", "y");
         assert!(p.render().contains("no data"));
+    }
+
+    #[test]
+    fn dse_summary_marks_frontier_rows() {
+        use crate::arch::ArchConfig;
+        use crate::coordinator::engine::WorkloadReport;
+        use crate::dse::{DsePoint, DseResult};
+
+        let mk = |name: &str, cost: f64, tflops: f64, on_frontier: bool| {
+            let mut arch = ArchConfig::tiny(2, 2);
+            arch.name = name.to_string();
+            DsePoint {
+                arch,
+                cost,
+                tflops,
+                roofline_tflops: tflops * 2.0,
+                on_frontier,
+                report: WorkloadReport {
+                    workload: "w".into(),
+                    arch: name.to_string(),
+                    shapes: vec![],
+                    sim_calls: 0,
+                    cache_hits: 0,
+                    workers: 1,
+                    elapsed_ms: 0.0,
+                },
+            }
+        };
+        let res = DseResult {
+            spec_name: "demo".into(),
+            workload: "w".into(),
+            points: vec![mk("cheap", 10.0, 5.0, true), mk("dud", 20.0, 4.0, false)],
+            pruned: vec![],
+            infeasible: vec![],
+            sim_calls: 3,
+            cache_hits: 1,
+            elapsed_ms: 1.0,
+        };
+        let md = dse_summary(&res).markdown();
+        assert!(md.contains("DSE sweep 'demo'"), "{md}");
+        assert!(md.contains("cheap"), "{md}");
+        assert!(md.contains('*'), "frontier rows are starred: {md}");
+        let plot = dse_plot(&res).render();
+        assert!(plot.contains('*') && plot.contains('o'), "{plot}");
+        assert!((res.interpolation_at(10.0) - 5.0).abs() < 1e-12);
     }
 
     #[test]

@@ -224,6 +224,36 @@ impl Schedule {
                     self.tiles_used(),
                     arch.num_tiles()
                 );
+                // The cross-K-group reduction is a hardware collective with
+                // no unicast fallback, so every reduce group must be
+                // AND-mask expressible on the physical grid. Grid/split
+                // combinations that break this (e.g. a 12x12 mesh split in
+                // 2: row stride 6 has no AND mask) are rejected here —
+                // candidate enumeration then simply skips them — instead of
+                // panicking inside codegen.
+                if splits > 1 {
+                    let (p_dim, q_dim) = self.logical;
+                    let remap = Remap {
+                        phys_rows: arch.rows,
+                        phys_cols: arch.cols,
+                        log_rows: p_dim * splits,
+                        log_cols: q_dim,
+                    };
+                    for p in 0..p_dim {
+                        for q in 0..q_dim {
+                            let members: Vec<crate::collective::TileCoord> =
+                                (0..splits).map(|ss| remap.to_phys(ss * p_dim + p, q)).collect();
+                            anyhow::ensure!(
+                                crate::collective::synthesize(&members, arch.rows, arch.cols)
+                                    .is_some(),
+                                "split-K reduce group (p={p}, q={q}) not mask-expressible on \
+                                 the {}x{} grid (logical {p_dim}x{q_dim} x{splits})",
+                                arch.rows,
+                                arch.cols
+                            );
+                        }
+                    }
+                }
             }
             _ => {}
         }
@@ -452,6 +482,28 @@ mod tests {
         assert!(plan.tn >= 16);
         assert_eq!(plan.remap.log_rows, 8);
         assert_eq!(plan.remap.log_cols, 128);
+    }
+
+    #[test]
+    fn splitk_validation_requires_mask_expressible_reduce_groups() {
+        // 12x12 split by 2 would need row-stride-6 reduce groups, which no
+        // AND mask expresses — validate must reject it (codegen would
+        // panic), and candidate enumeration must therefore skip it.
+        let mut arch = gh200();
+        arch.rows = 12;
+        arch.cols = 12;
+        arch.hbm.channels_per_edge = 12;
+        let shape = GemmShape::new(1024, 1024, 1024);
+        let err = Schedule::splitk(&arch, shape, 2).validate(&arch).unwrap_err();
+        assert!(err.to_string().contains("mask-expressible"), "{err:#}");
+        for c in candidates(&arch, shape) {
+            c.validate(&arch).unwrap();
+            assert!(!matches!(c.dataflow, Dataflow::SplitKSumma { .. }), "{}", c.name());
+        }
+        // Power-of-two grid/split ratios stay valid.
+        Schedule::splitk(&gh200(), shape, 8).validate(&gh200()).unwrap();
+        let flat = GemmShape::new(64, 2112, 7168);
+        Schedule::flat_remap(&gh200(), flat, 8).validate(&gh200()).unwrap();
     }
 
     #[test]
