@@ -3,11 +3,15 @@
 //! Sweeps three mesh sizes of the GH200-like template at two SPM
 //! capacities, co-tunes every candidate instance over the DSE serving
 //! suite on one shared engine/memo-cache, and prints the Pareto frontier
-//! of achieved TFLOP/s vs. the silicon-cost proxy.
+//! of achieved TFLOP/s vs. the silicon-cost proxy — then re-reads the
+//! same result through the energy objective: the 3-axis
+//! (cost, TFLOP/s, energy) frontier, the TFLOP/s-per-Watt winner, and a
+//! weighted scalarization that collapses all three axes into one ranked
+//! choice.
 //!
 //! Run with: `cargo run --release --example dse_sweep`
 
-use dit::dse::{self, DseOptions, SweepSpec};
+use dit::dse::{self, DseOptions, Objective, SweepSpec};
 use dit::report;
 
 fn main() -> anyhow::Result<()> {
@@ -18,7 +22,12 @@ fn main() -> anyhow::Result<()> {
     spec.mesh = vec![8, 12, 16];
 
     let workload = dse::suite("serving").expect("builtin DSE suite");
-    let res = dse::run_sweep(&spec, &workload, &DseOptions::default())?;
+    // Asking for the energy objective disables the roofline prune (it
+    // only bounds throughput), so the sweep is exhaustive and the 3-axis
+    // frontier is complete.
+    let objectives = vec![Objective::Perf, Objective::Cost, Objective::Energy];
+    let opts = DseOptions { objectives: objectives.clone(), ..DseOptions::default() };
+    let res = dse::run_sweep(&spec, &workload, &opts)?;
 
     print!("{}", report::dse_summary(&res).markdown());
     print!("{}", report::dse_plot(&res).render());
@@ -36,6 +45,40 @@ fn main() -> anyhow::Result<()> {
             100.0 * best.utilization(),
             best.arch.peak_tflops(),
             best.cost
+        );
+    }
+
+    // --- The energy axis: 3-axis frontier and per-objective projections.
+    println!();
+    for plot in report::dse_plot_projections(&res) {
+        print!("{}", plot.render());
+    }
+    println!("3-axis frontier over (cost, TFLOP/s, energy per pass):");
+    for p in res.frontier3() {
+        println!(
+            "  {:<40} {:>7.1} TFLOP/s  cost {:>6.0}  {:>8.2} mJ/pass  {:>5.2} TFLOP/s/W",
+            p.arch.name,
+            p.tflops,
+            p.cost,
+            p.energy_j * 1e3,
+            p.tflops_per_w
+        );
+    }
+    if let Some(eff) = res.most_efficient() {
+        println!(
+            "efficiency winner: {} at {:.2} TFLOP/s/W ({:.2} mJ per pass)",
+            eff.arch.name,
+            eff.tflops_per_w,
+            eff.energy_j * 1e3
+        );
+    }
+
+    // --- Scalarization: one ranked winner from a weight vector.
+    let weights = [0.5, 0.2, 0.3];
+    if let Some((winner, score)) = res.best_scalarized(&objectives, &weights)? {
+        println!(
+            "scalarized winner (perf=0.5, cost=0.2, energy=0.3): {} at score {score:.3}",
+            winner.arch.name
         );
     }
     println!(

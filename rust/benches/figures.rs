@@ -16,6 +16,7 @@
 //! | fig12  | portability: SoftHier-A100/GH200 vs the matching GPUs      |
 //! | workload | transformer serving-suite batched autotuning (engine)    |
 //! | dse    | hardware design-space sweep (TFLOPS-vs-cost Pareto front)  |
+//! | energy | energy-aware 3-axis DSE (perf/cost/energy frontier)        |
 //!
 //! Absolute numbers come from the analytical-contention SoftHier model and
 //! the calibrated GPU baselines (see DESIGN.md §Substitutions); the point
@@ -35,7 +36,7 @@ use dit::arch::workload::Workload;
 use dit::arch::{ArchConfig, GemmShape};
 use dit::coordinator::engine::Engine;
 use dit::coordinator::{autotune, simulate_schedule};
-use dit::dse::{DseOptions, SweepSpec};
+use dit::dse::{DseOptions, Objective, SweepSpec};
 use dit::perfmodel::{ridge_intensity, roofline_tflops, workloads, GpuSpec};
 use dit::report::{AsciiPlot, Table};
 use dit::schedule::{retune_tk, Dataflow, Schedule};
@@ -116,7 +117,7 @@ fn main() {
         Some(rest) => !rest.starts_with(|c: char| c.is_ascii_digit()),
         None => false,
     };
-    let figs: [(&str, fn(&mut Recorder)); 13] = [
+    let figs: [(&str, fn(&mut Recorder)); 14] = [
         ("table1", table1),
         ("fig1", fig1),
         ("fig7a", fig7a),
@@ -130,6 +131,7 @@ fn main() {
         ("fig12", fig12),
         ("workload", workload_bench),
         ("dse", dse_bench),
+        ("energy", energy_bench),
     ];
     // A filter that selects nothing is a typo (or a stale CI list): fail
     // loudly rather than emit an empty artifact with exit code 0.
@@ -587,6 +589,58 @@ fn dse_bench(r: &mut Recorder) {
     r.rec("dse", "best_tflops", res.best().map(|p| p.tflops).unwrap_or(0.0), true);
     r.rec("dse", "gh200_class_on_frontier", on_or_above, true);
     println!("(a DSE sweep co-tunes every hardware candidate with the same engine the\n serving path uses — deployment and hardware are searched together)");
+}
+
+// --------------------------------------------------------------------
+fn energy_bench(r: &mut Recorder) {
+    let spec = SweepSpec::reduced();
+    let w = dit::dse::suite("serving").expect("builtin DSE suite");
+    let opts = DseOptions {
+        objectives: vec![Objective::Perf, Objective::Cost, Objective::Energy],
+        ..DseOptions::default()
+    };
+    let res = dit::dse::run_sweep(&spec, &w, &opts).expect("energy-aware dse sweep");
+    print!("\n{}", dit::report::dse_summary(&res).markdown());
+    for plot in dit::report::dse_plot_projections(&res) {
+        print!("{}", plot.render());
+    }
+    let frontier3 = res.frontier3();
+    println!(
+        "3-axis frontier: {} non-dominated of {} evaluated over (cost, TFLOP/s, energy)",
+        frontier3.len(),
+        res.points.len()
+    );
+    let best_tpw = res.most_efficient().expect("non-empty sweep");
+    println!(
+        "efficiency winner: {} at {:.2} TFLOP/s/W ({:.2} mJ/pass, {:.1} TFLOP/s)",
+        best_tpw.arch.name,
+        best_tpw.tflops_per_w,
+        best_tpw.energy_j * 1e3,
+        best_tpw.tflops
+    );
+    // Balanced scalarization: half performance, the rest split over the
+    // silicon and energy budgets.
+    let weights = [0.5, 0.2, 0.3];
+    let objectives = [Objective::Perf, Objective::Cost, Objective::Energy];
+    let (winner, score) = res
+        .best_scalarized(&objectives, &weights)
+        .expect("valid weights")
+        .expect("non-empty sweep");
+    println!(
+        "scalarized winner (perf=0.5, cost=0.2, energy=0.3): {} at score {score:.3}",
+        winner.arch.name
+    );
+    let min_energy = res.points.iter().map(|p| p.energy_j).fold(f64::INFINITY, f64::min);
+    r.rec("energy", "frontier3_size", frontier3.len() as f64, true);
+    r.rec("energy", "best_tflops_per_w", best_tpw.tflops_per_w, true);
+    r.rec("energy", "min_energy_mj", min_energy * 1e3, false);
+    r.rec(
+        "energy",
+        "gh200_class_tflops_per_w",
+        res.best_at_mesh(32).map(|p| p.tflops_per_w).unwrap_or(0.0),
+        true,
+    );
+    println!("(the 3-axis sweep runs exhaustively — the roofline prune only bounds\n throughput, so it is disabled whenever energy is an objective)");
 }
 
 // --------------------------------------------------------------------

@@ -13,11 +13,16 @@
 //!            [--tolerance 0.05]     # override the baseline's tolerance
 //!            [--update]             # rewrite the baseline from the results
 //!            [--self-check]         # prove a synthetic 10% regression fails
+//!            [--allow-unpinned]     # tolerate produced-but-unpinned metrics
 //! ```
 //!
-//! The baseline pins a *subset* of metrics (every pinned metric must exist
-//! in the results); results metrics that are not pinned are listed as
-//! informational. After a model change that intentionally shifts numbers,
+//! The gate is strict in both directions: a pinned metric missing from the
+//! results fails (a bench id silently dropped from CI would otherwise
+//! un-gate its metrics), and a produced metric with no pin fails too (a
+//! new metric would otherwise ship ungated forever). The second check has
+//! an `--allow-unpinned` escape hatch for bring-up of a new bench id;
+//! the durable fix is `--update`, which re-pins the baseline from the
+//! results. After a model change that intentionally shifts numbers,
 //! refresh with `--update` and commit the new baseline.
 
 use std::process::ExitCode;
@@ -150,6 +155,18 @@ fn render(rows: &[(Metric, Option<f64>, Verdict)], tolerance: f64) -> (Table, us
     (t, failures)
 }
 
+/// Keys present in the results but pinned by no baseline metric. These
+/// fail the gate unless `--allow-unpinned` is passed: an unpinned metric
+/// is an un-gated metric, and silence here is how regressions ship.
+fn unpinned_keys(baseline: &[Metric], results: &[Metric]) -> Vec<String> {
+    let pinned: Vec<String> = baseline.iter().map(|m| m.key()).collect();
+    results
+        .iter()
+        .map(|m| m.key())
+        .filter(|k| !pinned.contains(k))
+        .collect()
+}
+
 fn load(path: &str) -> Result<Json, String> {
     let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
     Json::parse(&text).map_err(|e| format!("parsing {path}: {e}"))
@@ -220,6 +237,7 @@ struct Opts {
     tolerance: Option<f64>,
     update: bool,
     self_check: bool,
+    allow_unpinned: bool,
 }
 
 fn parse_args(argv: &[String]) -> Result<Opts, String> {
@@ -229,6 +247,7 @@ fn parse_args(argv: &[String]) -> Result<Opts, String> {
         tolerance: None,
         update: false,
         self_check: false,
+        allow_unpinned: false,
     };
     let mut it = argv.iter();
     while let Some(a) = it.next() {
@@ -245,6 +264,7 @@ fn parse_args(argv: &[String]) -> Result<Opts, String> {
             }
             "--update" => o.update = true,
             "--self-check" => o.self_check = true,
+            "--allow-unpinned" => o.allow_unpinned = true,
             other => return Err(format!("unknown flag {other:?}")),
         }
     }
@@ -296,19 +316,23 @@ fn main() -> ExitCode {
             .or_else(|| baseline_doc.get("tolerance").and_then(|t| t.as_f64()))
             .unwrap_or(DEFAULT_TOLERANCE);
         let rows = gate(&baseline, &results, tolerance);
-        let (table, failures) = render(&rows, tolerance);
+        let (table, mut failures) = render(&rows, tolerance);
         print!("{}", table.markdown());
-        let pinned: Vec<String> = baseline.iter().map(|m| m.key()).collect();
-        let unpinned: Vec<String> = results
-            .iter()
-            .map(|m| m.key())
-            .filter(|k| !pinned.contains(k))
-            .collect();
+        let unpinned = unpinned_keys(&baseline, &results);
         if !unpinned.is_empty() {
-            println!("informational (not pinned): {}", unpinned.join(", "));
+            if opts.allow_unpinned {
+                println!("informational (not pinned, --allow-unpinned): {}", unpinned.join(", "));
+            } else {
+                println!(
+                    "UNPINNED: {} — every produced metric must be pinned; \
+                     re-pin with --update or pass --allow-unpinned",
+                    unpinned.join(", ")
+                );
+                failures += unpinned.len();
+            }
         }
         if failures > 0 {
-            println!("bench gate: {failures} pinned metric(s) regressed or missing");
+            println!("bench gate: {failures} metric(s) regressed, missing, or unpinned");
         } else {
             println!("bench gate: all {} pinned metric(s) within tolerance", baseline.len());
         }
@@ -358,11 +382,36 @@ mod tests {
 
     #[test]
     fn gate_flags_missing_metrics() {
+        // A pinned metric absent from the results is a hard failure (a
+        // bench id dropped from the CI subset must not silently un-gate).
         let base = vec![m("fig9", "mean_speedup", 1.31, true)];
         let rows = gate(&base, &[], 0.05);
         assert_eq!(rows[0].2, Verdict::Missing);
         let (_, failures) = render(&rows, 0.05);
         assert_eq!(failures, 1);
+    }
+
+    #[test]
+    fn unpinned_metrics_are_detected() {
+        // A produced metric with no pin is a gate failure by default; the
+        // verdict table itself stays pin-driven, so the failure comes from
+        // the unpinned count (added unless --allow-unpinned).
+        let base = vec![m("fig9", "mean_speedup", 1.0, true)];
+        let res = vec![
+            m("fig9", "mean_speedup", 1.0, true),
+            m("energy", "best_tflops_per_w", 4.0, true),
+            m("energy", "min_energy_mj", 25.0, false),
+        ];
+        assert_eq!(
+            unpinned_keys(&base, &res),
+            vec!["energy.best_tflops_per_w".to_string(), "energy.min_energy_mj".to_string()]
+        );
+        let (_, gate_failures) = render(&gate(&base, &res, 0.05), 0.05);
+        assert_eq!(gate_failures, 0, "pinned metric itself is fine");
+        // Strict mode: total failures = gate failures + unpinned count.
+        assert_eq!(gate_failures + unpinned_keys(&base, &res).len(), 2);
+        // Fully pinned results produce no unpinned keys.
+        assert!(unpinned_keys(&base, &res[..1]).is_empty());
     }
 
     #[test]
@@ -407,6 +456,8 @@ mod tests {
         assert_eq!(o.results, "r.json");
         assert_eq!(o.tolerance, Some(0.1));
         assert!(o.update && !o.self_check);
+        assert!(!o.allow_unpinned, "strict by default");
+        assert!(parse_args(&["--allow-unpinned".to_string()]).unwrap().allow_unpinned);
         assert!(parse_args(&["--tolerance".to_string()]).is_err());
         assert!(parse_args(&["--bogus".to_string()]).is_err());
         let d = parse_args(&[]).unwrap();

@@ -19,7 +19,7 @@ use crate::arch::workload::Workload;
 use crate::arch::{ArchConfig, GemmShape};
 use crate::coordinator;
 use crate::coordinator::engine::Engine;
-use crate::dse::{DseOptions, SweepSpec};
+use crate::dse::{DseOptions, Objective, SweepSpec};
 use crate::report::Table;
 use crate::schedule::{candidates, Dataflow, Schedule};
 
@@ -147,9 +147,12 @@ COMMANDS:
               [--csv true]                               transformer, tiny)
   dse         [--workload serving|prefill|decode|tiny]  hardware design-space sweep:
               [--spec FILE] [--full true]               co-tune every config, print the
-              [--base PRESET] [--mesh 8,16,32]          TFLOPS-vs-cost Pareto frontier
-              [--spm 256,384] [--workers N] [--wave N]
+              [--base PRESET] [--mesh 8,16,32]          Pareto frontier over the chosen
+              [--spm 256,384] [--workers N] [--wave N]  objectives
               [--prune bool] [--csv true] [--json FILE]
+              [--objectives perf,cost,energy]           3-axis frontier + projections
+              [--weights 0.5,0.3,0.2]                   scalarized single winner
+              [--energy-coeffs FILE]                    pJ table ([energy] section)
   verify      --shape MxNxK [--grid N] [--schedule S]   functional vs golden oracle
               [--artifacts DIR] [--seed N]               (CPU reference if no PJRT)
   help                                                  this text
@@ -159,6 +162,7 @@ EXAMPLES:
   dit autotune --preset gh200 --shape 64x2112x7168
   dit tune-workload --preset gh200 --suite transformer
   dit dse      --workload serving
+  dit dse      --workload serving --objectives perf,cost,energy --weights 0.5,0.2,0.3
   dit verify   --shape 128x128x128 --grid 4 --schedule splitk --splits 2
 ";
 
@@ -382,18 +386,47 @@ fn cmd_dse(args: &Args) -> Result<()> {
     if let Some(v) = args.get("prune") {
         opts.prune = v.parse().context("--prune")?;
     }
+    if let Some(list) = args.get("objectives") {
+        opts.objectives = Objective::parse_list(list).context("--objectives")?;
+    }
+    if let Some(path) = args.get("energy-coeffs") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("unreadable energy coefficient file {path:?}"))?;
+        opts.energy = crate::perfmodel::EnergyModel::from_text(&text)
+            .with_context(|| format!("invalid energy coefficient file {path:?}"))?;
+    }
+    let weights: Option<Vec<f64>> = match args.get("weights") {
+        None => None,
+        Some(list) => Some(
+            list.split(',')
+                .map(|s| s.trim().parse::<f64>().context("--weights"))
+                .collect::<Result<Vec<f64>>>()?,
+        ),
+    };
+    if let Some(w) = &weights {
+        // Validate fully before the sweep runs — a malformed weight must
+        // not waste a multi-minute --full sweep only to fail at ranking.
+        Objective::validate_weights(&opts.objectives, w).context("--weights")?;
+    }
     let csv: bool = match args.get("csv") {
         Some(v) => v.parse().context("--csv")?,
         None => false,
     };
 
+    let three_axis = opts.objectives.contains(&Objective::Energy);
     let res = crate::dse::run_sweep(&spec, &workload, &opts)?;
     let table = crate::report::dse_summary(&res);
     if csv {
         print!("{}", table.csv());
     } else {
         print!("{}", table.markdown());
-        print!("{}", crate::report::dse_plot(&res).render());
+        if three_axis {
+            for plot in crate::report::dse_plot_projections(&res) {
+                print!("{}", plot.render());
+            }
+        } else {
+            print!("{}", crate::report::dse_plot(&res).render());
+        }
     }
     println!(
         "frontier   : {} non-dominated of {} evaluated ({} pruned by roofline, {} infeasible)",
@@ -402,6 +435,31 @@ fn cmd_dse(args: &Args) -> Result<()> {
         res.pruned.len(),
         res.infeasible.len()
     );
+    if three_axis {
+        println!(
+            "3-axis     : {} non-dominated over (cost, TFLOP/s, energy); roofline prune disabled for energy soundness",
+            res.frontier3().len()
+        );
+    }
+    if let Some(w) = &weights {
+        if let Some((p, score)) = res.best_scalarized(&opts.objectives, w)? {
+            let axes: Vec<String> = opts
+                .objectives
+                .iter()
+                .zip(w)
+                .map(|(o, wt)| format!("{}={wt}", o.name()))
+                .collect();
+            println!(
+                "scalarized : {} wins at score {score:.3} ({}; {:.1} TFLOP/s, cost {:.0}, {:.2} mJ/pass, {:.2} TFLOP/s/W)",
+                p.arch.name,
+                axes.join(", "),
+                p.tflops,
+                p.cost,
+                p.energy_j * 1e3,
+                p.tflops_per_w
+            );
+        }
+    }
     // Read the Table 1-class instance against the frontier.
     if let Some(p) = res.best_at_mesh(32) {
         println!(
@@ -536,6 +594,45 @@ mod tests {
         assert!(run(&argv("dse --base tiny4 --mesh 0 --workload tiny")).is_err());
         assert!(run(&argv("dse --spec /no/such/file")).is_err());
         assert!(run(&argv("dse --base tiny4 --mesh x")).is_err());
+    }
+
+    #[test]
+    fn run_dse_energy_objectives_smoke() {
+        // 3-axis sweep with a scalarized winner, on a tiny grid.
+        run(&argv(
+            "dse --base tiny4 --mesh 2,4 --workload tiny --workers 2 \
+             --objectives perf,cost,energy --weights 0.5,0.2,0.3",
+        ))
+        .unwrap();
+        // Weights without energy in the objectives still scalarize.
+        run(&argv(
+            "dse --base tiny4 --mesh 2 --workload tiny --objectives perf,cost --weights 1,1",
+        ))
+        .unwrap();
+        assert!(
+            run(&argv("dse --base tiny4 --mesh 2 --workload tiny --objectives perf,watts"))
+                .is_err(),
+            "unknown objective"
+        );
+        assert!(
+            run(&argv(
+                "dse --base tiny4 --mesh 2 --workload tiny --objectives perf,cost --weights 1"
+            ))
+            .is_err(),
+            "ragged weights"
+        );
+        assert!(
+            run(&argv(
+                "dse --base tiny4 --mesh 2 --workload tiny --objectives perf,cost --weights 0,0"
+            ))
+            .is_err(),
+            "all-zero weights rejected before the sweep"
+        );
+        assert!(
+            run(&argv("dse --base tiny4 --mesh 2 --workload tiny --energy-coeffs /no/file"))
+                .is_err(),
+            "unreadable coefficient file"
+        );
     }
 
     #[test]

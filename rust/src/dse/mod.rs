@@ -9,7 +9,13 @@
 //! count/bandwidth, DMA engines — and [`run_sweep`] co-tunes every
 //! candidate instance with the parallel batched autotuner
 //! ([`Engine::tune_workload_on`]) over a named GEMM workload, reporting
-//! the Pareto frontier of achieved TFLOP/s vs. a silicon-cost proxy.
+//! the Pareto frontier of achieved TFLOP/s vs. a silicon-cost proxy —
+//! and, since energy is the binding constraint for GH200-class machines,
+//! the 3-axis frontier over perf/cost/energy, where the energy of a pass
+//! comes from the deterministic [`EnergyModel`] over the simulator's
+//! traffic counters. A weighted [scalarization](pareto::scalarize) mode
+//! collapses the multi-objective result into one ranked winner
+//! ([`DseResult::best_scalarized`]).
 //!
 //! Sweep mechanics:
 //!
@@ -23,7 +29,10 @@
 //!   is compared against the already-measured frontier: a config whose
 //!   *ceiling* cannot beat a cheaper measured point can never be Pareto-
 //!   optimal and is skipped. Pruning only consults completed waves, so the
-//!   sweep output is independent of thread scheduling.
+//!   sweep output is independent of thread scheduling. The prune argument
+//!   is only sound for the perf/cost axes — a slow-but-frugal config can
+//!   still be energy-optimal — so whenever [`DseOptions::objectives`]
+//!   includes [`Objective::Energy`] the sweep evaluates exhaustively.
 
 pub mod pareto;
 
@@ -35,7 +44,8 @@ use anyhow::{Context, Result};
 use crate::arch::workload::Workload;
 use crate::arch::ArchConfig;
 use crate::coordinator::engine::{Engine, WorkloadReport};
-use crate::perfmodel::workload_roofline_tflops;
+use crate::dse::pareto::Sense;
+use crate::perfmodel::{workload_roofline_tflops, EnergyModel};
 use crate::util::cfgtext::{Doc, Value};
 use crate::util::json::Json;
 
@@ -43,6 +53,88 @@ use crate::util::json::Json;
 /// only discarded when even `slack × bound` cannot reach the measured
 /// frontier, so modest model error cannot prune a truly optimal config.
 pub const PRUNE_SLACK: f64 = 1.05;
+
+/// One axis of the multi-objective search.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    /// Achieved count-weighted aggregate TFLOP/s (maximized).
+    Perf,
+    /// Silicon-cost proxy units (minimized).
+    Cost,
+    /// Energy per workload pass, Joules (minimized).
+    Energy,
+}
+
+/// The canonical 3-axis frontier order: (cost, perf, energy) — matching
+/// the coordinates [`DseResult::frontier3`] is computed over.
+pub const FRONTIER3: [Objective; 3] = [Objective::Cost, Objective::Perf, Objective::Energy];
+
+impl Objective {
+    pub fn name(self) -> &'static str {
+        match self {
+            Objective::Perf => "perf",
+            Objective::Cost => "cost",
+            Objective::Energy => "energy",
+        }
+    }
+
+    /// Optimization direction of this axis.
+    pub fn sense(self) -> Sense {
+        match self {
+            Objective::Perf => Sense::Max,
+            Objective::Cost | Objective::Energy => Sense::Min,
+        }
+    }
+
+    /// This axis's value for an evaluated point.
+    pub fn value(self, p: &DsePoint) -> f64 {
+        match self {
+            Objective::Perf => p.tflops,
+            Objective::Cost => p.cost,
+            Objective::Energy => p.energy_j,
+        }
+    }
+
+    /// Validate a weight vector against an objective list: one finite,
+    /// non-negative weight per objective, not all zero. Shared by the CLI
+    /// (which must reject bad weights *before* a long sweep runs) and
+    /// [`DseResult::scalarized_scores`].
+    pub fn validate_weights(objectives: &[Objective], weights: &[f64]) -> Result<()> {
+        anyhow::ensure!(!objectives.is_empty(), "no objectives to scalarize");
+        anyhow::ensure!(
+            objectives.len() == weights.len(),
+            "{} objectives but {} weights",
+            objectives.len(),
+            weights.len()
+        );
+        anyhow::ensure!(
+            weights.iter().all(|w| w.is_finite() && *w >= 0.0)
+                && weights.iter().sum::<f64>() > 0.0,
+            "weights must be finite, non-negative, and not all zero"
+        );
+        Ok(())
+    }
+
+    /// Parse a comma-separated objective list (`perf,cost,energy`).
+    /// Duplicates and empty lists are rejected.
+    pub fn parse_list(s: &str) -> Result<Vec<Objective>> {
+        let mut out = Vec::new();
+        for part in s.split(',') {
+            let o = match part.trim() {
+                "perf" => Objective::Perf,
+                "cost" => Objective::Cost,
+                "energy" => Objective::Energy,
+                other => anyhow::bail!(
+                    "unknown objective {other:?}; available: perf, cost, energy"
+                ),
+            };
+            anyhow::ensure!(!out.contains(&o), "objective {:?} listed twice", o.name());
+            out.push(o);
+        }
+        anyhow::ensure!(!out.is_empty(), "objective list is empty");
+        Ok(out)
+    }
+}
 
 /// Silicon-cost proxy weights. The absolute scale is arbitrary (it only
 /// ranks configurations); the defaults weigh a tile's MAC array, its SPM,
@@ -263,10 +355,18 @@ pub struct DseOptions {
     pub workers: usize,
     /// Configs evaluated concurrently per wave (config-level parallelism).
     pub config_parallelism: usize,
-    /// Enable the roofline early-prune.
+    /// Enable the roofline early-prune. Ignored (forced off) when
+    /// `objectives` includes [`Objective::Energy`]: the roofline argument
+    /// only bounds throughput, so pruning could drop an energy-optimal
+    /// config.
     pub prune: bool,
     /// Cost-model weights.
     pub cost: CostModel,
+    /// Energy coefficient table (every point gets energy metrics from it).
+    pub energy: EnergyModel,
+    /// The axes the caller cares about; governs prune soundness (above)
+    /// and is echoed into [`DseResult::objectives`] for reporting.
+    pub objectives: Vec<Objective>,
 }
 
 impl Default for DseOptions {
@@ -276,7 +376,16 @@ impl Default for DseOptions {
             config_parallelism: 4,
             prune: true,
             cost: CostModel::default_proxy(),
+            energy: EnergyModel::default_table(),
+            objectives: vec![Objective::Perf, Objective::Cost],
         }
+    }
+}
+
+impl DseOptions {
+    /// Is the roofline prune sound for the requested objectives?
+    fn prune_effective(&self) -> bool {
+        self.prune && !self.objectives.contains(&Objective::Energy)
     }
 }
 
@@ -290,8 +399,14 @@ pub struct DsePoint {
     pub tflops: f64,
     /// Roofline upper bound for the same workload.
     pub roofline_tflops: f64,
+    /// Energy of one workload pass under the sweep's [`EnergyModel`], J.
+    pub energy_j: f64,
+    /// Count-weighted useful throughput per Watt, TFLOP/s/W.
+    pub tflops_per_w: f64,
     /// On the Pareto frontier of (cost, tflops)?
     pub on_frontier: bool,
+    /// On the 3-axis Pareto frontier of (cost, tflops, energy)?
+    pub on_frontier3: bool,
     /// Full per-shape tuning report for this config.
     pub report: WorkloadReport,
 }
@@ -305,6 +420,11 @@ impl DsePoint {
         } else {
             self.tflops / peak
         }
+    }
+
+    /// Energy-delay product of one workload pass, J·s.
+    pub fn edp_js(&self) -> f64 {
+        self.energy_j * self.report.total_time_ns() * 1e-9
     }
 }
 
@@ -321,6 +441,8 @@ pub struct PrunedPoint {
 pub struct DseResult {
     pub spec_name: String,
     pub workload: String,
+    /// The objective axes this sweep was run for (echo of the options).
+    pub objectives: Vec<Objective>,
     /// Evaluated points, sorted by ascending cost (name-tie-broken).
     pub points: Vec<DsePoint>,
     /// Configs the roofline prune skipped.
@@ -340,11 +462,63 @@ impl DseResult {
         self.points.iter().filter(|p| p.on_frontier).collect()
     }
 
+    /// 3-axis (cost, tflops, energy) frontier points in ascending-cost
+    /// order. A superset of [`DseResult::frontier`] on tie-free data: an
+    /// extra axis can only keep more trade-offs alive. Complete only when
+    /// the sweep ran with [`Objective::Energy`] requested (otherwise the
+    /// roofline prune may have skipped energy-optimal configs).
+    pub fn frontier3(&self) -> Vec<&DsePoint> {
+        self.points.iter().filter(|p| p.on_frontier3).collect()
+    }
+
+    /// Scalarized score per evaluated point (input order): weighted sum
+    /// over min–max-normalized objectives, higher is better. `weights`
+    /// pairs positionally with `objectives`.
+    pub fn scalarized_scores(
+        &self,
+        objectives: &[Objective],
+        weights: &[f64],
+    ) -> Result<Vec<f64>> {
+        Objective::validate_weights(objectives, weights)?;
+        let senses: Vec<Sense> = objectives.iter().map(|o| o.sense()).collect();
+        let pts: Vec<Vec<f64>> = self
+            .points
+            .iter()
+            .map(|p| objectives.iter().map(|o| o.value(p)).collect())
+            .collect();
+        Ok(pareto::scalarize(&pts, &senses, weights))
+    }
+
+    /// The single ranked winner of the weighted scalarization: the
+    /// highest-scoring evaluated point (score ties broken by input order,
+    /// i.e. ascending cost then name — deterministic).
+    pub fn best_scalarized(
+        &self,
+        objectives: &[Objective],
+        weights: &[f64],
+    ) -> Result<Option<(&DsePoint, f64)>> {
+        let scores = self.scalarized_scores(objectives, weights)?;
+        let mut best: Option<(usize, f64)> = None;
+        for (i, s) in scores.iter().enumerate() {
+            if best.map(|(_, b)| *s > b).unwrap_or(true) {
+                best = Some((i, *s));
+            }
+        }
+        Ok(best.map(|(i, s)| (&self.points[i], s)))
+    }
+
     /// The highest-throughput evaluated point.
     pub fn best(&self) -> Option<&DsePoint> {
         self.points
             .iter()
             .reduce(|a, b| if b.tflops > a.tflops { b } else { a })
+    }
+
+    /// The most energy-efficient evaluated point (highest TFLOP/s/W).
+    pub fn most_efficient(&self) -> Option<&DsePoint> {
+        self.points
+            .iter()
+            .reduce(|a, b| if b.tflops_per_w > a.tflops_per_w { b } else { a })
     }
 
     /// The frontier as a (cost, tflops) polyline.
@@ -388,7 +562,11 @@ impl DseResult {
                     .field("tflops", p.tflops)
                     .field("utilization", p.utilization())
                     .field("roofline_tflops", p.roofline_tflops)
-                    .field("on_frontier", p.on_frontier),
+                    .field("energy_j", p.energy_j)
+                    .field("tflops_per_w", p.tflops_per_w)
+                    .field("edp_js", p.edp_js())
+                    .field("on_frontier", p.on_frontier)
+                    .field("on_frontier3", p.on_frontier3),
             );
         }
         let mut pruned = Json::arr();
@@ -405,11 +583,17 @@ impl DseResult {
             let entry = Json::obj().field("config", name.as_str()).field("error", err.as_str());
             infeasible = infeasible.push(entry);
         }
+        let mut objectives = Json::arr();
+        for o in &self.objectives {
+            objectives = objectives.push(o.name());
+        }
         Json::obj()
             .field("spec", self.spec_name.as_str())
             .field("workload", self.workload.as_str())
+            .field("objectives", objectives)
             .field("evaluated", self.points.len())
             .field("frontier_size", self.frontier().len())
+            .field("frontier3_size", self.frontier3().len())
             .field("sim_calls", self.sim_calls)
             .field("cache_hits", self.cache_hits)
             .field("points", pts)
@@ -419,10 +603,14 @@ impl DseResult {
 }
 
 /// Sweep the spec's design space over a workload: enumerate configs, prune
-/// by roofline bound, co-tune the survivors (sharing one engine/cache),
-/// and mark the Pareto frontier of achieved TFLOP/s vs. cost.
+/// by roofline bound (perf/cost objectives only — see
+/// [`DseOptions::prune`]), co-tune the survivors (sharing one
+/// engine/cache), attach energy metrics to every point, and mark both the
+/// 2-axis (cost, tflops) and 3-axis (cost, tflops, energy) Pareto
+/// frontiers.
 pub fn run_sweep(spec: &SweepSpec, w: &Workload, opts: &DseOptions) -> Result<DseResult> {
     anyhow::ensure!(!w.items.is_empty(), "DSE workload is empty");
+    let prune = opts.prune_effective();
     let t0 = Instant::now();
 
     // Candidate list: (arch, cost, roofline bound), cost-ascending so the
@@ -465,7 +653,7 @@ pub fn run_sweep(spec: &SweepSpec, w: &Workload, opts: &DseOptions) -> Result<Ds
         while idx < cands.len() && batch.len() < wave {
             let (a, cost, ub) = &cands[idx];
             let bound = ub * PRUNE_SLACK;
-            let hopeless = opts.prune
+            let hopeless = prune
                 && points.iter().any(|p| {
                     (p.tflops > bound && p.cost <= *cost) || (p.tflops >= bound && p.cost < *cost)
                 });
@@ -498,14 +686,21 @@ pub fn run_sweep(spec: &SweepSpec, w: &Workload, opts: &DseOptions) -> Result<Ds
         for (slot, &ci) in slots.iter().zip(&batch) {
             let (a, cost, ub) = &cands[ci];
             match slot.lock().unwrap().take().expect("wave evaluated every slot") {
-                Ok(report) => points.push(DsePoint {
-                    arch: a.clone(),
-                    cost: *cost,
-                    tflops: report.aggregate_tflops(),
-                    roofline_tflops: *ub,
-                    on_frontier: false,
-                    report,
-                }),
+                Ok(report) => {
+                    let energy_j = opts.energy.workload_energy_j(&report);
+                    let tflops_per_w = opts.energy.workload_tflops_per_w(&report);
+                    points.push(DsePoint {
+                        arch: a.clone(),
+                        cost: *cost,
+                        tflops: report.aggregate_tflops(),
+                        roofline_tflops: *ub,
+                        energy_j,
+                        tflops_per_w,
+                        on_frontier: false,
+                        on_frontier3: false,
+                        report,
+                    })
+                }
                 Err(e) => infeasible.push((a.name.clone(), format!("{e:#}"))),
             }
         }
@@ -522,10 +717,16 @@ pub fn run_sweep(spec: &SweepSpec, w: &Workload, opts: &DseOptions) -> Result<Ds
     for i in pareto::frontier_indices(&curve) {
         points[i].on_frontier = true;
     }
+    let senses: Vec<Sense> = FRONTIER3.iter().map(|o| o.sense()).collect();
+    let pts3: Vec<Vec<f64>> = points.iter().map(|p| vec![p.cost, p.tflops, p.energy_j]).collect();
+    for i in pareto::frontier_indices_nd(&pts3, &senses) {
+        points[i].on_frontier3 = true;
+    }
 
     Ok(DseResult {
         spec_name: spec.name.clone(),
         workload: w.name.clone(),
+        objectives: opts.objectives.clone(),
         points,
         pruned,
         infeasible,
@@ -609,6 +810,31 @@ mod tests {
             SweepSpec::from_text("elem_bytes = 99\n").is_err(),
             "invalid base architecture rejected via ArchConfig::validate"
         );
+    }
+
+    #[test]
+    fn objective_lists_parse() {
+        assert_eq!(
+            Objective::parse_list("perf,cost,energy").unwrap(),
+            vec![Objective::Perf, Objective::Cost, Objective::Energy]
+        );
+        assert_eq!(
+            Objective::parse_list(" perf , energy ").unwrap(),
+            vec![Objective::Perf, Objective::Energy]
+        );
+        assert!(Objective::parse_list("perf,watts").is_err(), "unknown axis");
+        assert!(Objective::parse_list("perf,perf").is_err(), "duplicate axis");
+        assert!(Objective::parse_list("").is_err(), "empty list");
+    }
+
+    #[test]
+    fn energy_objective_forces_exhaustive_sweep() {
+        let mut o = DseOptions::default();
+        assert!(o.prune_effective(), "default perf/cost sweep prunes");
+        o.objectives = vec![Objective::Perf, Objective::Cost, Objective::Energy];
+        assert!(!o.prune_effective(), "energy axis disables the roofline prune");
+        o.objectives = vec![Objective::Perf];
+        assert!(o.prune_effective(), "perf-only keeps the prune");
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Pareto-dominance calculus for (cost, value) points.
+//! Pareto-dominance calculus, 2-D fast path and K-dimensional general
+//! case.
 //!
 //! The DSE sweep reports configurations on the frontier of *achieved
 //! TFLOP/s vs. hardware cost*: a config earns its place only if no other
@@ -6,6 +7,13 @@
 //! for the same cost). Everything here is deterministic — ties between
 //! bit-identical points are broken by input order, so two sweeps over the
 //! same spec mark exactly the same frontier.
+//!
+//! The 2-D `(cost minimized, value maximized)` functions ([`dominates`],
+//! [`frontier_indices`]) are the original fast path and stay as-is; the
+//! `_nd` generalizations take an explicit per-axis [`Sense`] so the same
+//! calculus covers the 3-axis perf/cost/energy frontier (and any K).
+//! [`scalarize`] collapses K objectives into one ranking via a weighted
+//! sum over min–max-normalized axes, for "give me a single winner" mode.
 
 /// `a` dominates `b` in (cost, value) space: no worse on both axes
 /// (cost minimized, value maximized) and strictly better on at least one.
@@ -27,6 +35,128 @@ pub fn frontier_indices(pts: &[(f64, f64)]) -> Vec<usize> {
             !pts.iter().enumerate().any(|(j, &q)| {
                 j != i && (dominates(q, p) || (q == p && j < i))
             })
+        })
+        .collect()
+}
+
+/// Per-axis optimization sense for the K-dimensional calculus.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sense {
+    /// Smaller is better (cost, energy, makespan).
+    Min,
+    /// Larger is better (throughput, utilization).
+    Max,
+}
+
+impl Sense {
+    /// `a` is no worse than `b` on this axis.
+    pub fn no_worse(self, a: f64, b: f64) -> bool {
+        match self {
+            Sense::Min => a <= b,
+            Sense::Max => a >= b,
+        }
+    }
+
+    /// `a` is strictly better than `b` on this axis.
+    pub fn better(self, a: f64, b: f64) -> bool {
+        match self {
+            Sense::Min => a < b,
+            Sense::Max => a > b,
+        }
+    }
+}
+
+/// `a` dominates `b` under `senses`: no worse on every axis and strictly
+/// better on at least one. With `senses == [Min, Max]` this is exactly
+/// [`dominates`]. Panics on length mismatch (a caller bug).
+pub fn dominates_nd(a: &[f64], b: &[f64], senses: &[Sense]) -> bool {
+    assert_eq!(a.len(), senses.len(), "point/sense arity mismatch");
+    assert_eq!(b.len(), senses.len(), "point/sense arity mismatch");
+    let mut strict = false;
+    for ((x, y), s) in a.iter().zip(b).zip(senses) {
+        if !s.no_worse(*x, *y) {
+            return false;
+        }
+        if s.better(*x, *y) {
+            strict = true;
+        }
+    }
+    strict
+}
+
+/// Indices of the Pareto-optimal points of `pts` under `senses`, in input
+/// order — the K-dimensional [`frontier_indices`]. Same tie rules: exact
+/// duplicates keep only their first occurrence, NaN on any axis
+/// disqualifies a point (and a NaN-bearing point dominates nothing, since
+/// every comparison against NaN is false).
+pub fn frontier_indices_nd(pts: &[Vec<f64>], senses: &[Sense]) -> Vec<usize> {
+    for p in pts {
+        assert_eq!(p.len(), senses.len(), "point/sense arity mismatch");
+    }
+    (0..pts.len())
+        .filter(|&i| {
+            let p = &pts[i];
+            if p.iter().any(|v| v.is_nan()) {
+                return false;
+            }
+            !pts.iter().enumerate().any(|(j, q)| {
+                j != i && (dominates_nd(q, p, senses) || (q == p && j < i))
+            })
+        })
+        .collect()
+}
+
+/// Weighted-sum scalarization: per point, `Σ wᵢ · normᵢ` where each axis
+/// is min–max normalized so that 1 is the best observed value and 0 the
+/// worst (direction folded in via `senses`). Weights are normalized to
+/// sum to 1, so scores land in `[0, 1]`. Normalization is relative to the
+/// observed range, so scores only rank points *within* one point set —
+/// never compare them across sweeps.
+/// A degenerate axis (all points equal) contributes a neutral 0.5; a
+/// point with NaN on any axis scores `-inf` so it can never win. Panics
+/// on arity mismatches; callers validate weights (non-negative, positive
+/// sum) before calling.
+pub fn scalarize(pts: &[Vec<f64>], senses: &[Sense], weights: &[f64]) -> Vec<f64> {
+    assert_eq!(weights.len(), senses.len(), "weight/sense arity mismatch");
+    for p in pts {
+        assert_eq!(p.len(), senses.len(), "point/sense arity mismatch");
+    }
+    let wsum: f64 = weights.iter().sum();
+    assert!(
+        wsum > 0.0 && weights.iter().all(|w| w.is_finite() && *w >= 0.0),
+        "weights must be non-negative with a positive sum"
+    );
+    // Per-axis observed range over NaN-free values.
+    let mut lo = vec![f64::INFINITY; senses.len()];
+    let mut hi = vec![f64::NEG_INFINITY; senses.len()];
+    for p in pts {
+        if p.iter().any(|v| v.is_nan()) {
+            continue;
+        }
+        for (k, v) in p.iter().enumerate() {
+            lo[k] = lo[k].min(*v);
+            hi[k] = hi[k].max(*v);
+        }
+    }
+    pts.iter()
+        .map(|p| {
+            if p.iter().any(|v| v.is_nan()) {
+                return f64::NEG_INFINITY;
+            }
+            let mut score = 0.0;
+            for (k, v) in p.iter().enumerate() {
+                let norm = if hi[k] <= lo[k] {
+                    0.5
+                } else {
+                    let t = (v - lo[k]) / (hi[k] - lo[k]);
+                    match senses[k] {
+                        Sense::Max => t,
+                        Sense::Min => 1.0 - t,
+                    }
+                };
+                score += weights[k] / wsum * norm;
+            }
+            score
         })
         .collect()
 }
@@ -126,6 +256,104 @@ mod tests {
     fn nan_points_are_excluded() {
         let pts = [(1.0, f64::NAN), (2.0, 5.0)];
         assert_eq!(frontier_indices(&pts), vec![1]);
+    }
+
+    const MCME: [Sense; 3] = [Sense::Min, Sense::Max, Sense::Min]; // cost, perf, energy
+
+    #[test]
+    fn nd_dominance_matches_2d_on_min_max_axes() {
+        let senses = [Sense::Min, Sense::Max];
+        let cases = [
+            ((1.0, 10.0), (2.0, 9.0)),
+            ((1.0, 10.0), (1.0, 10.0)),
+            ((2.0, 11.0), (1.0, 10.0)),
+            ((1.0, 9.0), (2.0, 10.0)),
+            ((1.0, 10.0), (1.0, 9.0)),
+        ];
+        for (a, b) in cases {
+            assert_eq!(
+                dominates_nd(&[a.0, a.1], &[b.0, b.1], &senses),
+                dominates(a, b),
+                "{a:?} vs {b:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn nd_dominance_three_axes() {
+        // Better cost + energy, equal perf: dominates.
+        assert!(dominates_nd(&[1.0, 5.0, 2.0], &[2.0, 5.0, 3.0], &MCME));
+        // Trade-off on the third axis breaks domination.
+        assert!(!dominates_nd(&[1.0, 5.0, 4.0], &[2.0, 5.0, 3.0], &MCME));
+        assert!(!dominates_nd(&[1.0, 5.0, 2.0], &[1.0, 5.0, 2.0], &MCME), "ties");
+    }
+
+    #[test]
+    fn nd_frontier_matches_2d_frontier() {
+        let pts2 = [
+            (1.0, 10.0),
+            (1.5, 9.0),
+            (2.0, 20.0),
+            (2.0, 20.0), // duplicate: first occurrence only
+            (2.0, 15.0),
+            (3.0, f64::NAN),
+            (3.0, 25.0),
+        ];
+        let ptsv: Vec<Vec<f64>> = pts2.iter().map(|p| vec![p.0, p.1]).collect();
+        assert_eq!(frontier_indices_nd(&ptsv, &[Sense::Min, Sense::Max]), frontier_indices(&pts2));
+    }
+
+    #[test]
+    fn nd_frontier_keeps_third_axis_tradeoffs() {
+        // b is 2D-dominated by a on (cost, perf) but has lower energy, so
+        // the 3-axis frontier keeps it; c is worse everywhere and drops.
+        let pts = vec![
+            vec![1.0, 10.0, 5.0], // a
+            vec![2.0, 9.0, 1.0],  // b
+            vec![3.0, 8.0, 6.0],  // c
+        ];
+        assert_eq!(frontier_indices_nd(&pts, &MCME), vec![0, 1]);
+        // No mutual domination among frontier members.
+        for &i in &[0usize, 1] {
+            for &j in &[0usize, 1] {
+                if i != j {
+                    assert!(!dominates_nd(&pts[i], &pts[j], &MCME));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scalarization_ranks_extremes() {
+        let pts = vec![
+            vec![1.0, 10.0, 5.0], // cheapest
+            vec![5.0, 50.0, 9.0], // fastest
+            vec![3.0, 20.0, 1.0], // most efficient
+        ];
+        // All weight on one axis selects that axis's best point.
+        let perf_only = scalarize(&pts, &MCME, &[0.0, 1.0, 0.0]);
+        assert!(perf_only[1] > perf_only[0] && perf_only[1] > perf_only[2]);
+        assert_eq!(perf_only[1], 1.0, "best axis value normalizes to 1");
+        let energy_only = scalarize(&pts, &MCME, &[0.0, 0.0, 1.0]);
+        assert!(energy_only[2] > energy_only[0] && energy_only[2] > energy_only[1]);
+        // Weight normalization: scaling all weights changes nothing.
+        let a = scalarize(&pts, &MCME, &[1.0, 1.0, 1.0]);
+        let b = scalarize(&pts, &MCME, &[2.0, 2.0, 2.0]);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-12);
+        }
+        // Scores live in [0, 1].
+        assert!(a.iter().all(|s| (0.0..=1.0).contains(s)), "{a:?}");
+    }
+
+    #[test]
+    fn scalarization_handles_degenerate_axes_and_nan() {
+        // Constant axis contributes 0.5 to everyone; NaN point never wins.
+        let pts = vec![vec![2.0, 7.0], vec![2.0, 9.0], vec![2.0, f64::NAN]];
+        let s = scalarize(&pts, &[Sense::Min, Sense::Max], &[0.5, 0.5]);
+        assert!((s[0] - 0.25).abs() < 1e-12, "{s:?}"); // 0.5·0.5 + 0.5·0.0
+        assert!((s[1] - 0.75).abs() < 1e-12, "{s:?}"); // 0.5·0.5 + 0.5·1.0
+        assert_eq!(s[2], f64::NEG_INFINITY);
     }
 
     #[test]

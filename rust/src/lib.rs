@@ -29,13 +29,17 @@
 //! * [`runtime`] — PJRT loader/executor for the JAX/Pallas golden GEMM
 //!   artifacts (`artifacts/*.hlo.txt`); the correctness oracle.
 //! * [`perfmodel`] — rooflines + analytical GPU baselines (CUTLASS /
-//!   DeepGEMM calibrated) used by the paper-figure benches.
+//!   DeepGEMM calibrated) used by the paper-figure benches, and the
+//!   deterministic [`perfmodel::EnergyModel`] over the simulator's
+//!   traffic counters (pJ/byte, pJ/MAC, static W/tile).
 //! * [`coordinator`] — the end-to-end deployment driver, the
 //!   insight-guided schedule autotuner, and the parallel batched
 //!   workload-tuning engine ([`coordinator::engine`]).
 //! * [`dse`] — hardware design-space exploration: sweep mesh/CE/SPM/HBM
 //!   axes, co-tune every candidate instance with the engine, and report
-//!   the Pareto frontier of achieved TFLOP/s vs. a silicon-cost proxy.
+//!   Pareto frontiers over achieved TFLOP/s, a silicon-cost proxy, and
+//!   energy per workload pass (2- and 3-axis, plus weighted
+//!   scalarization for a single ranked winner).
 //! * [`report`] — tables, CSV, and ASCII plots for the bench harness.
 //! * [`util`] — zero-dependency substrates: config text parser, JSON
 //!   writer, PRNG, mini property-test harness.
@@ -62,6 +66,7 @@ pub mod prelude {
     pub use crate::arch::{ArchConfig, GemmShape};
     pub use crate::collective::{Mask, TileCoord};
     pub use crate::coordinator::engine::Engine;
-    pub use crate::dse::{run_sweep, DseOptions, SweepSpec};
+    pub use crate::dse::{run_sweep, DseOptions, Objective, SweepSpec};
     pub use crate::layout::{MatrixLayout, Placement};
+    pub use crate::perfmodel::EnergyModel;
 }

@@ -1,0 +1,251 @@
+//! Deterministic energy model over the simulator's traffic counters.
+//!
+//! The binding constraint for a GH200-class 32×32-tile instance is energy,
+//! not area: related work ranks mappings by energy-delay product from
+//! analytic data-movement counts (Moon et al., *Evaluating Spatial
+//! Accelerator Architectures with Tiled Matrix-Matrix Multiplication*) and
+//! reports utilization-per-watt as the headline generator metric (Yi et
+//! al., *OpenGeMM*). This module folds one simulated run's traffic —
+//! HBM bytes, NoC hop-bytes, SPM accesses, MAC count — into Joules via a
+//! configurable pJ coefficient table, so every derived metric is a pure
+//! deterministic function of [`RunStats`] and can be pinned by the CI
+//! bench gate.
+//!
+//! The default coefficients are calibrated to the paper's Table 1
+//! machine (4 TB/s HBM behind FP8 CE arrays) at published per-operation
+//! energy scales: HBM3 access ≈ 3.75 pJ/bit, an on-chip mesh hop ≈ 1 pJ/B
+//! (link + router), SRAM scratchpad access well under a tenth of an HBM
+//! access, and an FP8 MAC a fraction of a pJ. The absolute scale matters
+//! less than the *ratios* (off-chip ≫ on-chip ≫ compute): they are what
+//! make the DSE energy axis order configurations the way the related work
+//! observes.
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::engine::WorkloadReport;
+use crate::sim::RunStats;
+use crate::util::cfgtext::Doc;
+
+/// The pJ coefficient table: energy per unit of each traffic counter the
+/// simulator produces, plus a static (leakage + clock-tree) term per tile.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnergyModel {
+    /// pJ per byte moved across an HBM channel (read or write).
+    pub pj_per_hbm_byte: f64,
+    /// pJ per byte × link traversed on the mesh NoC.
+    pub pj_per_noc_hop_byte: f64,
+    /// pJ per byte read from / written to a tile's L1 SPM.
+    pub pj_per_spm_byte: f64,
+    /// pJ per multiply-accumulate (2 FLOPs) in the CE array.
+    pub pj_per_mac: f64,
+    /// Static power per tile, Watts (charged over the whole makespan).
+    pub static_w_per_tile: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> EnergyModel {
+        EnergyModel::default_table()
+    }
+}
+
+impl EnergyModel {
+    /// The GH200-class default table (see module docs for the sourcing).
+    pub fn default_table() -> EnergyModel {
+        EnergyModel {
+            pj_per_hbm_byte: 30.0,
+            pj_per_noc_hop_byte: 1.0,
+            pj_per_spm_byte: 0.15,
+            pj_per_mac: 0.25,
+            static_w_per_tile: 0.05,
+        }
+    }
+
+    /// Parse a coefficient table from config text (`util::cfgtext`
+    /// grammar). All keys are optional and default to
+    /// [`EnergyModel::default_table`]; the coefficients live in an
+    /// `[energy]` section:
+    ///
+    /// ```text
+    /// [energy]
+    /// pj_per_hbm_byte = 30.0
+    /// pj_per_noc_hop_byte = 1.0
+    /// pj_per_spm_byte = 0.15
+    /// pj_per_mac = 0.25
+    /// static_w_per_tile = 0.05
+    /// ```
+    pub fn from_text(text: &str) -> Result<EnergyModel> {
+        let doc = Doc::parse(text).context("energy coefficient table")?;
+        let mut m = EnergyModel::default_table();
+        let read = |key: &str, slot: &mut f64| -> Result<()> {
+            if let Some(v) = doc.get("energy", key) {
+                let v = match v {
+                    crate::util::cfgtext::Value::Float(f) => *f,
+                    crate::util::cfgtext::Value::Int(i) => *i as f64,
+                    other => anyhow::bail!("energy.{key} must be a number, got {other}"),
+                };
+                anyhow::ensure!(
+                    v.is_finite() && v >= 0.0,
+                    "energy.{key} must be a finite non-negative number, got {v}"
+                );
+                *slot = v;
+            }
+            Ok(())
+        };
+        read("pj_per_hbm_byte", &mut m.pj_per_hbm_byte)?;
+        read("pj_per_noc_hop_byte", &mut m.pj_per_noc_hop_byte)?;
+        read("pj_per_spm_byte", &mut m.pj_per_spm_byte)?;
+        read("pj_per_mac", &mut m.pj_per_mac)?;
+        read("static_w_per_tile", &mut m.static_w_per_tile)?;
+        Ok(m)
+    }
+
+    /// Total energy of one simulated run, Joules: the four dynamic traffic
+    /// terms plus static power over the makespan. Monotone in every
+    /// counter (the property tests rely on this).
+    pub fn energy_j(&self, stats: &RunStats) -> f64 {
+        let hbm = (stats.hbm_read_bytes + stats.hbm_write_bytes) as f64 * self.pj_per_hbm_byte;
+        let noc = stats.noc_link_bytes as f64 * self.pj_per_noc_hop_byte;
+        let spm = stats.spm_bytes as f64 * self.pj_per_spm_byte;
+        let mac = stats.macs() * self.pj_per_mac;
+        let static_j = self.static_w_per_tile * stats.num_tiles as f64 * stats.makespan_ns * 1e-9;
+        (hbm + noc + spm + mac) * 1e-12 + static_j
+    }
+
+    /// Average power over the run, Watts (0 for a degenerate empty run).
+    pub fn avg_power_w(&self, stats: &RunStats) -> f64 {
+        if stats.makespan_ns <= 0.0 {
+            0.0
+        } else {
+            self.energy_j(stats) / (stats.makespan_ns * 1e-9)
+        }
+    }
+
+    /// Energy-delay product, J·s (Moon et al.'s ranking metric).
+    pub fn edp(&self, stats: &RunStats) -> f64 {
+        self.energy_j(stats) * stats.makespan_ns * 1e-9
+    }
+
+    /// Useful throughput per Watt, TFLOP/s/W (OpenGeMM's headline metric).
+    /// Equals `useful_flops / energy` since both sides are averaged over
+    /// the same makespan.
+    pub fn tflops_per_w(&self, stats: &RunStats) -> f64 {
+        let e = self.energy_j(stats);
+        if e <= 0.0 {
+            0.0
+        } else {
+            stats.useful_flops / e / 1e12
+        }
+    }
+
+    /// Energy of one workload pass, Joules: Σ count × energy of each
+    /// shape's best schedule (what the DSE energy objective minimizes).
+    pub fn workload_energy_j(&self, rep: &WorkloadReport) -> f64 {
+        rep.shapes
+            .iter()
+            .map(|s| s.count as f64 * self.energy_j(&s.result.best().stats))
+            .sum()
+    }
+
+    /// Count-weighted throughput per Watt over a workload pass.
+    pub fn workload_tflops_per_w(&self, rep: &WorkloadReport) -> f64 {
+        let e = self.workload_energy_j(rep);
+        if e <= 0.0 {
+            0.0
+        } else {
+            rep.total_flops() / e / 1e12
+        }
+    }
+
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(hbm: u64, noc: u64, spm: u64, flops: f64, makespan_ns: f64) -> RunStats {
+        RunStats {
+            makespan_ns,
+            useful_flops: flops,
+            total_flops: flops,
+            hbm_read_bytes: hbm,
+            hbm_write_bytes: 0,
+            noc_link_bytes: noc,
+            spm_bytes: spm,
+            peak_tflops: 10.0,
+            hbm_peak_gbps: 100.0,
+            supersteps: 1,
+            compute_busy_ns: makespan_ns,
+            num_tiles: 16,
+            step_end_ns: vec![makespan_ns],
+        }
+    }
+
+    #[test]
+    fn energy_terms_add_up() {
+        let m = EnergyModel {
+            pj_per_hbm_byte: 2.0,
+            pj_per_noc_hop_byte: 1.0,
+            pj_per_spm_byte: 0.5,
+            pj_per_mac: 0.25,
+            static_w_per_tile: 0.0,
+        };
+        // 100 HBM B + 10 hop-B + 8 SPM B + 4 FLOPs (2 MACs).
+        let s = stats(100, 10, 8, 4.0, 1000.0);
+        let want_pj = 100.0 * 2.0 + 10.0 * 1.0 + 8.0 * 0.5 + 2.0 * 0.25;
+        assert!((m.energy_j(&s) - want_pj * 1e-12).abs() < 1e-24);
+        // Static term: 0.1 W/tile × 16 tiles × 1 µs = 1.6 µJ.
+        let m2 = EnergyModel { static_w_per_tile: 0.1, ..m };
+        let s2 = stats(0, 0, 0, 0.0, 1000.0);
+        assert!((m2.energy_j(&s2) - 1.6e-6).abs() < 1e-15);
+    }
+
+    #[test]
+    fn derived_metrics_are_consistent() {
+        let m = EnergyModel::default_table();
+        let s = stats(1 << 20, 1 << 18, 1 << 22, 1e9, 5000.0);
+        let e = m.energy_j(&s);
+        assert!(e > 0.0);
+        assert!((m.edp(&s) - e * 5e-6).abs() < 1e-18);
+        assert!((m.avg_power_w(&s) - e / 5e-6).abs() < 1e-9 * m.avg_power_w(&s));
+        assert!((m.tflops_per_w(&s) - s.useful_flops / e / 1e12).abs() < 1e-9);
+        // A degenerate zero-makespan run has zero power, not inf/NaN.
+        assert_eq!(m.avg_power_w(&stats(0, 0, 0, 0.0, 0.0)), 0.0);
+        // Degenerate all-zero model never divides by zero.
+        let z = EnergyModel {
+            pj_per_hbm_byte: 0.0,
+            pj_per_noc_hop_byte: 0.0,
+            pj_per_spm_byte: 0.0,
+            pj_per_mac: 0.0,
+            static_w_per_tile: 0.0,
+        };
+        assert_eq!(z.tflops_per_w(&s), 0.0);
+    }
+
+    #[test]
+    fn coefficient_table_parses_and_defaults() {
+        let text = "[energy]\npj_per_hbm_byte = 12.5\npj_per_mac = 1\n";
+        let m = EnergyModel::from_text(text).unwrap();
+        assert_eq!(m.pj_per_hbm_byte, 12.5);
+        assert_eq!(m.pj_per_mac, 1.0, "int promotes to float");
+        let d = EnergyModel::default_table();
+        assert_eq!(m.pj_per_noc_hop_byte, d.pj_per_noc_hop_byte, "unset keys default");
+        assert_eq!(EnergyModel::from_text("").unwrap(), d);
+    }
+
+    #[test]
+    fn coefficient_table_rejects_nonsense() {
+        assert!(EnergyModel::from_text("[energy]\npj_per_mac = -1\n").is_err());
+        assert!(EnergyModel::from_text("[energy]\npj_per_mac = \"lots\"\n").is_err());
+        assert!(EnergyModel::from_text("[energy").is_err(), "cfgtext error propagates");
+    }
+
+    #[test]
+    fn default_ratios_are_physical() {
+        // Off-chip ≫ on-chip ≫ compute: the ordering that makes the energy
+        // axis meaningful, regardless of absolute calibration.
+        let m = EnergyModel::default_table();
+        assert!(m.pj_per_hbm_byte > 10.0 * m.pj_per_noc_hop_byte);
+        assert!(m.pj_per_noc_hop_byte > m.pj_per_spm_byte);
+        assert!(m.pj_per_spm_byte < m.pj_per_mac, "a MAC outweighs one SPM byte");
+    }
+}

@@ -19,6 +19,10 @@
 //! The point of the model is to preserve the paper's *ratios* (who wins,
 //! by how much, where the crossover sits), not absolute GPU truth.
 
+pub mod energy;
+
+pub use energy::EnergyModel;
+
 use crate::arch::{ArchConfig, GemmShape};
 
 /// A GPU target for baseline comparison.

@@ -131,7 +131,7 @@ pub fn dse_summary(res: &crate::dse::DseResult) -> Table {
         ),
         &[
             "config", "mesh", "peak TF", "HBM GB/s", "cost", "TFLOP/s", "util %", "roofline",
-            "frontier",
+            "energy mJ", "TF/W", "frontier", "3-axis",
         ],
     );
     for p in &res.points {
@@ -144,7 +144,10 @@ pub fn dse_summary(res: &crate::dse::DseResult) -> Table {
             format!("{:.1}", p.tflops),
             format!("{:.1}", 100.0 * p.utilization()),
             format!("{:.0}", p.roofline_tflops),
+            format!("{:.2}", p.energy_j * 1e3),
+            format!("{:.2}", p.tflops_per_w),
             if p.on_frontier { "*".into() } else { String::new() },
+            if p.on_frontier3 { "*".into() } else { String::new() },
         ]);
     }
     t
@@ -168,6 +171,47 @@ pub fn dse_plot(res: &crate::dse::DseResult) -> AsciiPlot {
     plot.series('o', dominated);
     plot.series('*', frontier);
     plot
+}
+
+/// The 3-axis (cost, TFLOP/s, energy) frontier rendered as its three
+/// pairwise projections: points on the 3-axis frontier as `*`, dominated
+/// points as `o`. Energy is plotted in mJ (the plot axes are log-scaled,
+/// so only the label changes).
+pub fn dse_plot_projections(res: &crate::dse::DseResult) -> Vec<AsciiPlot> {
+    let axes = [
+        ("cost (proxy units)", "achieved TFLOP/s"),
+        ("energy per pass (mJ)", "achieved TFLOP/s"),
+        ("cost (proxy units)", "energy per pass (mJ)"),
+    ];
+    let mut out = Vec::with_capacity(axes.len());
+    for (i, (xl, yl)) in axes.iter().enumerate() {
+        let mut dominated: Vec<(f64, f64)> = Vec::new();
+        let mut frontier: Vec<(f64, f64)> = Vec::new();
+        for p in &res.points {
+            let xy = match i {
+                0 => (p.cost, p.tflops),
+                1 => (p.energy_j * 1e3, p.tflops),
+                _ => (p.cost, p.energy_j * 1e3),
+            };
+            if p.on_frontier3 {
+                frontier.push(xy);
+            } else {
+                dominated.push(xy);
+            }
+        }
+        let mut plot = AsciiPlot::new(
+            format!(
+                "DSE 3-axis frontier projection: '{}' on '{}'",
+                res.spec_name, res.workload
+            ),
+            *xl,
+            *yl,
+        );
+        plot.series('o', dominated);
+        plot.series('*', frontier);
+        out.push(plot);
+    }
+    out
 }
 
 /// An ASCII scatter/line plot on log-log axes — enough to eyeball a
@@ -299,7 +343,7 @@ mod tests {
         use crate::coordinator::engine::WorkloadReport;
         use crate::dse::{DsePoint, DseResult};
 
-        let mk = |name: &str, cost: f64, tflops: f64, on_frontier: bool| {
+        let mk = |name: &str, cost: f64, tflops: f64, energy_j: f64, on_frontier: bool| {
             let mut arch = ArchConfig::tiny(2, 2);
             arch.name = name.to_string();
             DsePoint {
@@ -307,7 +351,10 @@ mod tests {
                 cost,
                 tflops,
                 roofline_tflops: tflops * 2.0,
+                energy_j,
+                tflops_per_w: if energy_j > 0.0 { 1.0 / energy_j } else { 0.0 },
                 on_frontier,
+                on_frontier3: on_frontier,
                 report: WorkloadReport {
                     workload: "w".into(),
                     arch: name.to_string(),
@@ -322,7 +369,11 @@ mod tests {
         let res = DseResult {
             spec_name: "demo".into(),
             workload: "w".into(),
-            points: vec![mk("cheap", 10.0, 5.0, true), mk("dud", 20.0, 4.0, false)],
+            objectives: vec![crate::dse::Objective::Perf, crate::dse::Objective::Cost],
+            points: vec![
+                mk("cheap", 10.0, 5.0, 0.002, true),
+                mk("dud", 20.0, 4.0, 0.003, false),
+            ],
             pruned: vec![],
             infeasible: vec![],
             sim_calls: 3,
@@ -333,9 +384,16 @@ mod tests {
         assert!(md.contains("DSE sweep 'demo'"), "{md}");
         assert!(md.contains("cheap"), "{md}");
         assert!(md.contains('*'), "frontier rows are starred: {md}");
+        assert!(md.contains("energy mJ") && md.contains("2.00"), "energy column: {md}");
         let plot = dse_plot(&res).render();
         assert!(plot.contains('*') && plot.contains('o'), "{plot}");
         assert!((res.interpolation_at(10.0) - 5.0).abs() < 1e-12);
+        let projections = dse_plot_projections(&res);
+        assert_eq!(projections.len(), 3);
+        for p in &projections {
+            let s = p.render();
+            assert!(s.contains('*') && s.contains('o'), "{s}");
+        }
     }
 
     #[test]
@@ -355,6 +413,7 @@ mod tests {
             hbm_read_bytes: 100,
             hbm_write_bytes: 50,
             noc_link_bytes: 10,
+            spm_bytes: 200,
             peak_tflops: 10.0,
             hbm_peak_gbps: 100.0,
             supersteps: 4,

@@ -153,6 +153,10 @@ pub struct RunStats {
     pub hbm_write_bytes: u64,
     /// Bytes × links traversed on the NoC.
     pub noc_link_bytes: u64,
+    /// Bytes read from / written to tile L1 SPMs: matrix-engine operand
+    /// and accumulator traffic plus one endpoint access per transferred
+    /// byte of DMA/NoC payload (the energy model's SPM term).
+    pub spm_bytes: u64,
     pub peak_tflops: f64,
     pub hbm_peak_gbps: f64,
     pub supersteps: usize,
@@ -188,6 +192,12 @@ impl RunStats {
     pub fn intensity(&self) -> f64 {
         self.useful_flops / (self.hbm_read_bytes + self.hbm_write_bytes) as f64
     }
+
+    /// Multiply-accumulates executed (padding included): one MAC is two
+    /// FLOPs — the energy model's compute term.
+    pub fn macs(&self) -> f64 {
+        self.total_flops / 2.0
+    }
 }
 
 /// Simulate a deployment on an architecture.
@@ -200,6 +210,7 @@ pub fn simulate(arch: &ArchConfig, dep: &Deployment) -> anyhow::Result<RunStats>
         hbm_read_bytes: 0,
         hbm_write_bytes: 0,
         noc_link_bytes: 0,
+        spm_bytes: 0,
         peak_tflops: arch.peak_tflops(),
         hbm_peak_gbps: arch.hbm.total_gbps(),
         supersteps: dep.supersteps(),
@@ -235,6 +246,9 @@ pub fn simulate(arch: &ArchConfig, dep: &Deployment) -> anyhow::Result<RunStats>
                     engine_t += dt;
                     stats.compute_busy_ns += dt;
                     stats.total_flops += 2.0 * (*m as f64) * (*n as f64) * (*k as f64);
+                    // SPM operand traffic: read the A and B panels, and
+                    // read-modify-write the C accumulator tile.
+                    stats.spm_bytes += ((m * k + k * n + 2 * m * n) * arch.elem_bytes) as u64;
                 }
             }
             step_end = step_end.max(engine_t);
@@ -246,7 +260,9 @@ pub fn simulate(arch: &ArchConfig, dep: &Deployment) -> anyhow::Result<RunStats>
             for op in &ss.ops {
                 let end = match op {
                     Op::DmaIn { runs, .. } => {
-                        stats.hbm_read_bytes += runs.iter().map(|r| r.bytes).sum::<u64>();
+                        let bytes = runs.iter().map(|r| r.bytes).sum::<u64>();
+                        stats.hbm_read_bytes += bytes;
+                        stats.spm_bytes += bytes; // written into the tile's L1
                         // Input fetches are posted one superstep ahead
                         // (double-buffered DMA descriptor queues): the
                         // channel may start serving during the previous
@@ -254,7 +270,9 @@ pub fn simulate(arch: &ArchConfig, dep: &Deployment) -> anyhow::Result<RunStats>
                         hbm_transfer(arch, &mut res, &mut stats, tile, tile_lin, runs, t_prev, true)
                     }
                     Op::DmaOut { runs, .. } => {
-                        stats.hbm_write_bytes += runs.iter().map(|r| r.bytes).sum::<u64>();
+                        let bytes = runs.iter().map(|r| r.bytes).sum::<u64>();
+                        stats.hbm_write_bytes += bytes;
+                        stats.spm_bytes += bytes; // read out of the tile's L1
                         hbm_transfer(arch, &mut res, &mut stats, tile, tile_lin, runs, t_step, false)
                     }
                     Op::Multicast { group, bytes, .. } => {
@@ -264,6 +282,7 @@ pub fn simulate(arch: &ArchConfig, dep: &Deployment) -> anyhow::Result<RunStats>
                         let path = Resources::route(tile, *to);
                         let hops = path.len();
                         stats.noc_link_bytes += *bytes * hops as u64;
+                        stats.spm_bytes += *bytes * 2; // read at source, write at sink
                         let (_, end) = res.reserve(&path, hops, *bytes, t_step);
                         end
                     }
@@ -424,6 +443,8 @@ fn multicast_transfer(
         return t0; // self-only group
     }
     stats.noc_link_bytes += bytes * tree.len() as u64;
+    // SPM endpoints: one read at the root, one write per other member.
+    stats.spm_bytes += bytes * members.len() as u64;
     let (_, end) = res.reserve(&tree, max_hops, bytes, t0);
     end
 }
@@ -458,6 +479,9 @@ fn reduce_transfer(
         return t0;
     }
     stats.noc_link_bytes += bytes * tree.len() as u64;
+    // SPM endpoints: one read per contributing member, one result write
+    // at the root (in-network combining touches no intermediate SPM).
+    stats.spm_bytes += bytes * (members.len() as u64 + 1);
     let (_, end) = res.reserve(&tree, max_hops, bytes, t0);
     end
 }
@@ -499,6 +523,26 @@ mod tests {
         assert_eq!(a.makespan_ns, b.makespan_ns);
         assert_eq!(a.hbm_read_bytes, b.hbm_read_bytes);
         assert_eq!(a.noc_link_bytes, b.noc_link_bytes);
+        assert_eq!(a.spm_bytes, b.spm_bytes);
+    }
+
+    #[test]
+    fn spm_traffic_covers_engine_operands() {
+        let arch = ArchConfig::tiny(4, 4);
+        let shape = GemmShape::new(128, 128, 256);
+        let stats = run(&arch, shape, &Schedule::summa(&arch, shape));
+        // At minimum the matrix engines read every A/B operand byte and
+        // read-modify-write every C byte once per MMAD; with K-panel
+        // staging and communication endpoints the SPM sees strictly more
+        // traffic than the compulsory HBM bytes.
+        assert!(stats.spm_bytes > 0);
+        assert!(
+            stats.spm_bytes > stats.hbm_read_bytes + stats.hbm_write_bytes,
+            "spm {} vs hbm {}",
+            stats.spm_bytes,
+            stats.hbm_read_bytes + stats.hbm_write_bytes
+        );
+        assert!((stats.macs() - stats.total_flops / 2.0).abs() < 1.0);
     }
 
     #[test]

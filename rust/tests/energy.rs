@@ -1,0 +1,327 @@
+//! Energy-model and N-dimensional-frontier acceptance tests: monotonicity
+//! of the energy model in every traffic counter, agreement of the K-D
+//! Pareto calculus with the 2-D fast path, frontier inclusion laws, and
+//! the end-to-end energy-aware sweep (determinism, prune soundness,
+//! scalarization). Everything runs on tiny grids / synthetic points so
+//! the suite stays fast in debug builds.
+
+use dit::arch::workload::Workload;
+use dit::arch::{ArchConfig, GemmShape};
+use dit::dse::pareto::Sense;
+use dit::dse::{self, pareto, DseOptions, Objective, SweepSpec};
+use dit::perfmodel::EnergyModel;
+use dit::sim::RunStats;
+use dit::util::quickprop::check;
+use dit::util::rng::Rng;
+
+/// A synthetic RunStats with the energy-relevant counters set explicitly.
+fn stats(hbm: u64, noc: u64, spm: u64, flops: f64, makespan_ns: f64) -> RunStats {
+    RunStats {
+        makespan_ns,
+        useful_flops: flops,
+        total_flops: flops,
+        hbm_read_bytes: hbm / 2,
+        hbm_write_bytes: hbm - hbm / 2,
+        noc_link_bytes: noc,
+        spm_bytes: spm,
+        peak_tflops: 10.0,
+        hbm_peak_gbps: 100.0,
+        supersteps: 1,
+        compute_busy_ns: makespan_ns,
+        num_tiles: 16,
+        step_end_ns: vec![makespan_ns],
+    }
+}
+
+/// Energy is monotone in HBM bytes and MAC count (and every other
+/// counter): more traffic can never cost less energy.
+#[test]
+fn prop_energy_monotone_in_traffic() {
+    check("energy monotone in hbm/mac/noc/spm/time", 64, |rng: &mut Rng| {
+        let model = EnergyModel::default_table();
+        let hbm = rng.below(1 << 30);
+        let noc = rng.below(1 << 30);
+        let spm = rng.below(1 << 30);
+        let flops = rng.below(1 << 40) as f64;
+        let t = 1.0 + rng.below(1 << 20) as f64;
+        let base = model.energy_j(&stats(hbm, noc, spm, flops, t));
+        let bump = 1 + rng.below(1 << 24);
+        assert!(
+            model.energy_j(&stats(hbm + bump, noc, spm, flops, t)) > base,
+            "more HBM bytes must cost more energy"
+        );
+        assert!(
+            model.energy_j(&stats(hbm, noc, spm, flops + 2.0 * bump as f64, t)) > base,
+            "more MACs must cost more energy"
+        );
+        assert!(
+            model.energy_j(&stats(hbm, noc + bump, spm, flops, t)) > base,
+            "more NoC hop-bytes must cost more energy"
+        );
+        assert!(
+            model.energy_j(&stats(hbm, noc, spm + bump, flops, t)) > base,
+            "more SPM bytes must cost more energy"
+        );
+        assert!(
+            model.energy_j(&stats(hbm, noc, spm, flops, t + 1000.0)) > base,
+            "a longer makespan must cost more static energy"
+        );
+        assert!(base.is_finite() && base >= 0.0);
+    });
+}
+
+/// `frontier_indices_nd` with (Min, Max) senses agrees with the 2-D fast
+/// path exactly — including duplicate-keeps-first and NaN-disqualifies
+/// tie rules, which the generator injects deliberately.
+#[test]
+fn prop_nd_frontier_matches_2d_fast_path() {
+    check("frontier_indices_nd == frontier_indices on 2D", 64, |rng: &mut Rng| {
+        let n = rng.range(1, 24);
+        let mut pts2: Vec<(f64, f64)> = (0..n)
+            .map(|_| (rng.below(12) as f64, rng.below(12) as f64))
+            .collect();
+        if rng.chance(0.3) && n >= 2 {
+            pts2[0] = pts2[n - 1]; // exact duplicate across positions
+        }
+        if rng.chance(0.2) {
+            let i = rng.range(0, n - 1);
+            pts2[i].1 = f64::NAN;
+        }
+        let ptsv: Vec<Vec<f64>> = pts2.iter().map(|p| vec![p.0, p.1]).collect();
+        assert_eq!(
+            pareto::frontier_indices_nd(&ptsv, &[Sense::Min, Sense::Max]),
+            pareto::frontier_indices(&pts2),
+            "{pts2:?}"
+        );
+    });
+}
+
+/// Frontier laws on random tie-free 3-D points: the (cost, perf) frontier
+/// is a subset of the 3-axis frontier (an extra axis only keeps more
+/// trade-offs alive), and every excluded point is dominated by a frontier
+/// member. Note the converse of the first law is deliberately NOT
+/// asserted — a 3-D frontier point can be dominated in every 2-D
+/// projection (see `frontier3_point_can_lose_every_projection` below), so
+/// projection-optimality is not a valid completeness check.
+#[test]
+fn prop_frontier3_inclusion_and_completeness() {
+    const SENSES: [Sense; 3] = [Sense::Min, Sense::Max, Sense::Min];
+    check("2D frontier subset of 3D + completeness", 64, |rng: &mut Rng| {
+        let n = rng.range(2, 24);
+        // Continuous values make exact ties measure-zero, so the subset
+        // law is exercised without its duplicate-tie edge cases.
+        let mut f = || (rng.next_u64() >> 11) as f64 / (1u64 << 53) as f64;
+        let pts3: Vec<Vec<f64>> = (0..n).map(|_| vec![f(), f(), f()]).collect();
+        let pts2: Vec<(f64, f64)> = pts3.iter().map(|p| (p[0], p[1])).collect();
+        let f2 = pareto::frontier_indices(&pts2);
+        let f3 = pareto::frontier_indices_nd(&pts3, &SENSES);
+        for i in &f2 {
+            assert!(f3.contains(i), "2D-frontier point {i} missing from 3D frontier");
+        }
+        for i in 0..n {
+            if !f3.contains(&i) {
+                assert!(
+                    f3.iter().any(|&j| pareto::dominates_nd(&pts3[j], &pts3[i], &SENSES)),
+                    "point {i} excluded from the 3D frontier but not dominated"
+                );
+            }
+        }
+    });
+}
+
+/// The classic counterexample: a point can be Pareto-optimal in 3-D while
+/// being strictly dominated in every 2-D projection. This is why the
+/// sweep computes the 3-axis frontier directly instead of intersecting or
+/// unioning projections.
+#[test]
+fn frontier3_point_can_lose_every_projection() {
+    const MIN3: [Sense; 3] = [Sense::Min, Sense::Min, Sense::Min];
+    let pts = vec![
+        vec![2.0, 2.0, 2.0], // x: balanced
+        vec![1.0, 1.0, 3.0],
+        vec![1.0, 3.0, 1.0],
+        vec![3.0, 1.0, 1.0],
+    ];
+    let f3 = pareto::frontier_indices_nd(&pts, &MIN3);
+    assert!(f3.contains(&0), "balanced point is 3D-Pareto-optimal");
+    for (a, b) in [(0usize, 1usize), (0, 2), (1, 2)] {
+        let proj: Vec<Vec<f64>> = pts.iter().map(|p| vec![p[a], p[b]]).collect();
+        let f2 = pareto::frontier_indices_nd(&proj, &[Sense::Min, Sense::Min]);
+        assert!(!f2.contains(&0), "balanced point is dominated in projection ({a},{b})");
+    }
+}
+
+// ---------------------------------------------------------------------
+// End-to-end energy-aware sweeps on tiny grids.
+
+fn tiny_spec() -> SweepSpec {
+    SweepSpec {
+        name: "energy-test".into(),
+        mesh: vec![2, 3, 4],
+        ce: vec![(16, 8), (8, 8)],
+        spm_kib: vec![128, 256],
+        hbm_channel_gbps: vec![32.0],
+        hbm_channels_pct: vec![100],
+        dma_engines: vec![2],
+        base: ArchConfig::tiny(4, 4),
+    }
+}
+
+fn tiny_workload() -> Workload {
+    let mut w = Workload::new("energy-test");
+    w.push("square", GemmShape::new(64, 64, 64), 2);
+    w.push("flat", GemmShape::new(16, 128, 128), 1);
+    w
+}
+
+fn energy_opts() -> DseOptions {
+    DseOptions {
+        workers: 2,
+        config_parallelism: 3,
+        objectives: vec![Objective::Perf, Objective::Cost, Objective::Energy],
+        ..DseOptions::default()
+    }
+}
+
+/// An energy-objective sweep evaluates exhaustively (the roofline prune
+/// only bounds throughput) and attaches finite, positive energy metrics
+/// consistent with the workload report on every point.
+#[test]
+fn energy_sweep_is_exhaustive_with_consistent_metrics() {
+    let spec = tiny_spec();
+    let res = dse::run_sweep(&spec, &tiny_workload(), &energy_opts()).unwrap();
+    assert!(res.pruned.is_empty(), "energy objective must disable the prune");
+    assert_eq!(
+        res.points.len() + res.infeasible.len(),
+        spec.enumerate().len(),
+        "every config evaluated or infeasible"
+    );
+    assert_eq!(res.objectives, energy_opts().objectives);
+    for p in &res.points {
+        assert!(p.energy_j.is_finite() && p.energy_j > 0.0, "{}", p.arch.name);
+        assert!(p.tflops_per_w.is_finite() && p.tflops_per_w > 0.0, "{}", p.arch.name);
+        let flops = p.report.total_flops();
+        assert!(
+            (p.tflops_per_w - flops / p.energy_j / 1e12).abs() < 1e-9 * p.tflops_per_w,
+            "tflops_per_w inconsistent with report on {}",
+            p.arch.name
+        );
+        assert!(p.edp_js() > 0.0);
+    }
+    let eff = res.most_efficient().unwrap();
+    assert!(res.points.iter().all(|p| p.tflops_per_w <= eff.tflops_per_w));
+}
+
+/// Real-sweep frontier laws: the 2-axis frontier is contained in the
+/// 3-axis frontier, the 3-axis frontier is mutually non-dominating, and
+/// both are non-empty.
+#[test]
+fn energy_sweep_frontier3_invariants() {
+    let res = dse::run_sweep(&tiny_spec(), &tiny_workload(), &energy_opts()).unwrap();
+    let f3: Vec<usize> = (0..res.points.len()).filter(|&i| res.points[i].on_frontier3).collect();
+    assert!(!f3.is_empty());
+    for (i, p) in res.points.iter().enumerate() {
+        if p.on_frontier {
+            assert!(
+                p.on_frontier3,
+                "{} on the 2-axis frontier but not the 3-axis one",
+                p.arch.name
+            );
+        }
+        let pi = [p.cost, p.tflops, p.energy_j];
+        for (j, q) in res.points.iter().enumerate() {
+            if i != j && p.on_frontier3 && q.on_frontier3 {
+                let qj = [q.cost, q.tflops, q.energy_j];
+                assert!(
+                    !pareto::dominates_nd(&qj, &pi, &[Sense::Min, Sense::Max, Sense::Min]),
+                    "{} dominates {} on the 3-axis frontier",
+                    q.arch.name,
+                    p.arch.name
+                );
+            }
+        }
+    }
+}
+
+/// Two energy-aware sweeps with different parallelism produce bit-identical
+/// results — the energy axis must not break the determinism contract the
+/// CI gate relies on.
+#[test]
+fn energy_sweep_is_deterministic() {
+    let spec = tiny_spec();
+    let w = tiny_workload();
+    let r1 = dse::run_sweep(&spec, &w, &energy_opts()).unwrap();
+    let o2 = DseOptions { workers: 4, config_parallelism: 1, ..energy_opts() };
+    let r2 = dse::run_sweep(&spec, &w, &o2).unwrap();
+    assert_eq!(r1.points.len(), r2.points.len());
+    for (a, b) in r1.points.iter().zip(&r2.points) {
+        assert_eq!(a.arch.name, b.arch.name);
+        assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+        assert_eq!(a.tflops_per_w.to_bits(), b.tflops_per_w.to_bits());
+        assert_eq!(a.on_frontier3, b.on_frontier3);
+    }
+    // The machine-readable artifact is byte-identical too (wall-clock is
+    // deliberately excluded from it).
+    assert_eq!(r1.to_json().pretty(), r2.to_json().pretty());
+}
+
+/// Scalarization: the winner under strictly positive weights is always
+/// 3-axis-Pareto-optimal, single-axis weights pick that axis's best
+/// point, and malformed weights are rejected.
+#[test]
+fn energy_sweep_scalarization() {
+    let res = dse::run_sweep(&tiny_spec(), &tiny_workload(), &energy_opts()).unwrap();
+    let objectives = [Objective::Perf, Objective::Cost, Objective::Energy];
+    let (winner, score) = res.best_scalarized(&objectives, &[0.5, 0.2, 0.3]).unwrap().unwrap();
+    assert!(
+        winner.on_frontier3,
+        "scalarized winner {} must be 3-axis-Pareto-optimal",
+        winner.arch.name
+    );
+    assert!((0.0..=1.0).contains(&score), "{score}");
+    let (fastest, _) = res.best_scalarized(&objectives, &[1.0, 0.0, 0.0]).unwrap().unwrap();
+    assert_eq!(fastest.arch.name, res.best().unwrap().arch.name);
+    let (frugal, _) = res.best_scalarized(&objectives, &[0.0, 0.0, 1.0]).unwrap().unwrap();
+    for p in &res.points {
+        assert!(frugal.energy_j <= p.energy_j, "{} beats the energy winner", p.arch.name);
+    }
+    assert!(res.best_scalarized(&objectives, &[1.0]).is_err(), "ragged weights");
+    assert!(res.best_scalarized(&objectives, &[0.0, 0.0, 0.0]).is_err(), "zero weights");
+    assert!(res.best_scalarized(&objectives, &[-1.0, 1.0, 1.0]).is_err(), "negative weight");
+    assert!(res.best_scalarized(&[], &[]).is_err(), "no objectives");
+}
+
+/// The JSON artifact carries the energy axes and frontier3 marking.
+#[test]
+fn energy_sweep_json_has_energy_axes() {
+    let res = dse::run_sweep(&tiny_spec(), &tiny_workload(), &energy_opts()).unwrap();
+    let json = res.to_json();
+    let rendered = json.pretty();
+    for key in ["energy_j", "tflops_per_w", "edp_js", "on_frontier3", "frontier3_size"] {
+        assert!(rendered.contains(key), "missing {key} in artifact");
+    }
+    let objectives = json.get("objectives").and_then(|o| o.items()).unwrap();
+    let names: Vec<&str> = objectives.iter().filter_map(|o| o.as_str()).collect();
+    assert_eq!(names, vec!["perf", "cost", "energy"]);
+    assert_eq!(
+        json.get("frontier3_size").and_then(|v| v.as_f64()).unwrap() as usize,
+        res.frontier3().len()
+    );
+}
+
+/// Default (perf, cost) sweeps keep the prune enabled and still attach
+/// energy metrics to every evaluated point.
+#[test]
+fn default_sweep_reports_energy_metrics() {
+    let spec = SweepSpec {
+        mesh: vec![2, 4],
+        ce: vec![(16, 8)],
+        spm_kib: vec![256],
+        ..tiny_spec()
+    };
+    let res = dse::run_sweep(&spec, &tiny_workload(), &DseOptions::default()).unwrap();
+    assert_eq!(res.objectives, vec![Objective::Perf, Objective::Cost]);
+    for p in &res.points {
+        assert!(p.energy_j > 0.0 && p.tflops_per_w > 0.0);
+    }
+}
