@@ -31,9 +31,15 @@ pub struct Args {
 
 impl Args {
     pub fn parse(argv: &[String]) -> Result<Args> {
-        let mut it = argv.iter();
-        let command = it.next().cloned().unwrap_or_else(|| "help".to_string());
+        let command = argv.first().cloned().unwrap_or_else(|| "help".to_string());
+        Args::with_flags(command, argv.get(1..).unwrap_or_default())
+    }
+
+    /// Parse `--key value` pairs under an already-known command (used by
+    /// commands with a positional sub-action, e.g. `cache stats`).
+    pub fn with_flags(command: String, rest: &[String]) -> Result<Args> {
         let mut flags = HashMap::new();
+        let mut it = rest.iter();
         while let Some(arg) = it.next() {
             let key = arg
                 .strip_prefix("--")
@@ -144,7 +150,7 @@ COMMANDS:
   autotune    --preset P --shape MxNxK                  rank all candidates
   tune-workload --preset P [--suite NAME]               batch-tune a GEMM suite
               [--shapes MxNxK,MxNxK,...] [--workers N]  (suites: prefill, decode,
-              [--csv true]                               transformer, tiny)
+              [--csv true] [--cache FILE]                transformer, tiny)
   dse         [--workload serving|prefill|decode|tiny]  hardware design-space sweep:
               [--spec FILE] [--full true]               co-tune every config, print the
               [--base PRESET] [--mesh 8,16,32]          Pareto frontier over the chosen
@@ -153,6 +159,11 @@ COMMANDS:
               [--objectives perf,cost,energy]           3-axis frontier + projections
               [--weights 0.5,0.3,0.2]                   scalarized single winner
               [--energy-coeffs FILE]                    pJ table ([energy] section)
+              [--cache FILE]                            persistent simulation cache:
+                                                        killed sweeps resume, refined
+                                                        sweeps reuse overlapping points
+  cache       stats --cache FILE                        inspect a simulation cache
+              clear --cache FILE                        delete it (+ stray temp files)
   verify      --shape MxNxK [--grid N] [--schedule S]   functional vs golden oracle
               [--artifacts DIR] [--seed N]               (CPU reference if no PJRT)
   help                                                  this text
@@ -163,11 +174,22 @@ EXAMPLES:
   dit tune-workload --preset gh200 --suite transformer
   dit dse      --workload serving
   dit dse      --workload serving --objectives perf,cost,energy --weights 0.5,0.2,0.3
+  dit dse      --workload serving --cache sweep.cache   # re-run resumes from disk
+  dit cache    stats --cache sweep.cache
   dit verify   --shape 128x128x128 --grid 4 --schedule splitk --splits 2
 ";
 
 /// CLI entry point (called from main).
 pub fn run(argv: &[String]) -> Result<()> {
+    // `cache` takes a positional sub-action (`dit cache stats --cache F`).
+    if argv.first().map(String::as_str) == Some("cache") {
+        let action = argv.get(1).map(String::as_str).unwrap_or("stats");
+        if action.starts_with("--") {
+            bail!("usage: dit cache <stats|clear> --cache FILE");
+        }
+        let args = Args::with_flags("cache".to_string(), argv.get(2..).unwrap_or_default())?;
+        return cmd_cache(action, &args);
+    }
     let args = Args::parse(argv)?;
     match args.command.as_str() {
         "help" | "--help" | "-h" => {
@@ -182,6 +204,52 @@ pub fn run(argv: &[String]) -> Result<()> {
         "dse" => cmd_dse(&args),
         "verify" => cmd_verify(&args),
         other => bail!("unknown command {other:?}; try `dit help`"),
+    }
+}
+
+/// Inspect or delete a persistent simulation cache.
+fn cmd_cache(action: &str, args: &Args) -> Result<()> {
+    use crate::coordinator::cache::{DiskCache, FORMAT, VERSION};
+    let path = args.get("cache").context("--cache FILE required")?;
+    match action {
+        "stats" => {
+            let cache = DiskCache::open(path);
+            for w in cache.warnings() {
+                println!("warning    : {w}");
+            }
+            let size = std::fs::metadata(path).map(|m| m.len()).unwrap_or(0);
+            println!("cache file : {path}");
+            println!("format     : {FORMAT} v{VERSION}");
+            println!(
+                "entries    : {} ({} deployable, {} recorded-infeasible), {} on disk",
+                cache.len(),
+                cache.len() - cache.infeasible_count(),
+                cache.infeasible_count(),
+                crate::util::human_bytes(size)
+            );
+            let counts = cache.fingerprint_counts();
+            if !counts.is_empty() {
+                let mut t = Table::new(
+                    "entries per architecture fingerprint",
+                    &["fingerprint", "entries"],
+                );
+                for (fp, n) in counts {
+                    t.row(vec![format!("{fp:016x}"), n.to_string()]);
+                }
+                print!("{}", t.markdown());
+            }
+            Ok(())
+        }
+        "clear" => {
+            let (removed, temps) = DiskCache::clear(path)?;
+            println!(
+                "{} {path} ({temps} stray temp file{} removed)",
+                if removed { "removed" } else { "no cache file at" },
+                if temps == 1 { "" } else { "s" }
+            );
+            Ok(())
+        }
+        other => bail!("unknown cache action {other:?}; usage: dit cache <stats|clear>"),
     }
 }
 
@@ -293,6 +361,9 @@ fn cmd_tune_workload(args: &Args) -> Result<()> {
     if let Some(n) = args.get("workers") {
         engine = engine.with_workers(n.parse().context("--workers")?);
     }
+    if let Some(path) = args.get("cache") {
+        engine = engine.with_cache(path);
+    }
     let csv: bool = match args.get("csv") {
         Some(v) => v.parse().context("--csv")?,
         None => false,
@@ -310,10 +381,15 @@ fn cmd_tune_workload(args: &Args) -> Result<()> {
         rep.aggregate_tflops(),
         rep.total_count(),
     );
-    println!(
-        "engine     : {} simulations, {} cache hits, {} workers, {:.0} ms wall",
-        rep.sim_calls, rep.cache_hits, rep.workers, rep.elapsed_ms
-    );
+    println!("{}", crate::report::workload_counters(&rep));
+    if let Some(path) = args.get("cache") {
+        engine.flush_cache()?;
+        println!(
+            "cache file : {path} ({} entries, {} preloaded this run)",
+            engine.disk_len(),
+            engine.disk_loaded()
+        );
+    }
     Ok(())
 }
 
@@ -385,6 +461,9 @@ fn cmd_dse(args: &Args) -> Result<()> {
     }
     if let Some(v) = args.get("prune") {
         opts.prune = v.parse().context("--prune")?;
+    }
+    if let Some(path) = args.get("cache") {
+        opts.cache_path = Some(path.into());
     }
     if let Some(list) = args.get("objectives") {
         opts.objectives = Objective::parse_list(list).context("--objectives")?;
@@ -471,10 +550,7 @@ fn cmd_dse(args: &Args) -> Result<()> {
             if res.on_or_above_frontier(p) { "on/above the frontier" } else { "below the frontier" }
         );
     }
-    println!(
-        "engine     : {} simulations, {} cache hits, {:.0} ms wall",
-        res.sim_calls, res.cache_hits, res.elapsed_ms
-    );
+    println!("{}", crate::report::dse_counters(&res));
     if let Some(path) = args.get("json") {
         std::fs::write(path, res.to_json().pretty())
             .with_context(|| format!("writing {path:?}"))?;
@@ -633,6 +709,30 @@ mod tests {
                 .is_err(),
             "unreadable coefficient file"
         );
+    }
+
+    #[test]
+    fn run_cache_cli_smoke() {
+        let path =
+            std::env::temp_dir().join(format!("dit-cli-cache-{}.jsonl", std::process::id()));
+        let p = path.to_string_lossy().into_owned();
+        let _ = std::fs::remove_file(&path);
+        // Cold run writes the cache; the same command again resumes from
+        // it; stats and clear round the lifecycle off.
+        run(&argv(&format!("tune-workload --preset tiny4 --shapes 64x64x64 --cache {p}")))
+            .unwrap();
+        assert!(path.exists(), "tuning with --cache persists");
+        run(&argv(&format!("tune-workload --preset tiny4 --shapes 64x64x64 --cache {p}")))
+            .unwrap();
+        run(&argv(&format!("dse --base tiny4 --mesh 2 --workload tiny --cache {p}"))).unwrap();
+        run(&argv(&format!("cache stats --cache {p}"))).unwrap();
+        run(&argv(&format!("cache clear --cache {p}"))).unwrap();
+        assert!(!path.exists(), "clear removes the file");
+        run(&argv(&format!("cache clear --cache {p}"))).unwrap();
+        // Bad usages error cleanly.
+        assert!(run(&argv("cache")).is_err(), "stats without --cache");
+        assert!(run(&argv("cache nuke --cache x")).is_err(), "unknown action");
+        assert!(run(&argv("cache --cache x")).is_err(), "missing action");
     }
 
     #[test]

@@ -1,0 +1,648 @@
+//! The persistent simulation cache: a versioned on-disk store mapping
+//! `(architecture fingerprint, shape, schedule key) → RunStats`.
+//!
+//! DiT's pitch is that deployment cost is amortized by caching tuned
+//! mappings across a coupled hardware/software design space; until now
+//! the engine's memo-cache lived only in memory, so an interrupted or
+//! refined sweep re-simulated everything. This module is the disk half
+//! of that cache, following the replay/checkpoint pattern of autotuners
+//! like Ansor and AKG:
+//!
+//! * **stable keys** — the architecture fingerprint is FNV-1a over the
+//!   canonical config text ([`crate::coordinator::engine::arch_fingerprint`]),
+//!   the shape is its `MxNxK` text, and the schedule is
+//!   [`crate::schedule::Schedule::cache_key`] (every field encoded). All
+//!   three are pinned by specification, so a cache written by one build
+//!   is read bit-for-bit by every other build, platform, and Rust
+//!   version.
+//! * **lossless values** — [`RunStats`] serializes through
+//!   [`crate::util::json`]'s exact-integer representation and
+//!   shortest-roundtrip floats, so a resumed sweep is *bit-identical* to
+//!   a cold one.
+//! * **amortized-linear persistence** — the first [`DiskCache::flush`]
+//!   writes the whole file atomically (temp file + rename); later
+//!   flushes *append* only the entries added since the previous flush
+//!   (the line-oriented layout exists exactly for this), and
+//!   [`DiskCache::compact`] — run when the owning engine drops —
+//!   rewrites one sorted, deduplicated image. Total I/O across a sweep
+//!   is O(entries), not O(checkpoints × entries), while a kill at any
+//!   point still leaves a loadable file: a torn final append line
+//!   degrades to one skipped entry, a crash mid-rewrite leaves the
+//!   previous image (plus a stray temp file, which loading ignores and
+//!   [`DiskCache::clear`] removes).
+//! * **corruption tolerance** — a truncated or unparseable entry, a
+//!   foreign format/version header, or a wholly garbled file degrades to
+//!   a (partial) cold start with a recorded warning. Opening **never**
+//!   fails and **never** panics; the worst outcome is re-simulating.
+//!
+//! ## File layout (`dit-sim-cache` v1)
+//!
+//! Line-oriented JSON. The first line is the header; every further line
+//! is one entry:
+//!
+//! ```text
+//! {"format":"dit-sim-cache","version":1}
+//! {"fp":"00530ff383b1c8eb","shape":"64x64x64","sched":"summa|l4x4|tk64|ps1|db1|ol1|rprr","stats":{...}}
+//! {"fp":"00530ff383b1c8eb","shape":"64x64x64","sched":"systolic|l4x4|tk64|ps1|db1|ol1|rprr","stats":null}
+//! ```
+//!
+//! `stats: null` records a candidate that failed to lower — persisting
+//! the failure means a resumed sweep skips it without retrying. Rewrites
+//! and appended batches are each written in sorted key order, and a
+//! compacted file is one sorted image: equal cache contents produce
+//! byte-identical compacted files (diffable checkpoints). Loading
+//! tolerates duplicate keys (last wins), which is what makes appended
+//! batches and retried appends safe.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{Context, Result};
+
+use crate::sim::RunStats;
+use crate::util::json::Json;
+
+/// Magic format tag in the header line.
+pub const FORMAT: &str = "dit-sim-cache";
+
+/// On-disk format version. Bump when the key grammar or the `RunStats`
+/// field set changes incompatibly; readers treat any other version as a
+/// cold start (never a misread).
+pub const VERSION: i64 = 1;
+
+/// Auto-flush cadence for direct [`DiskCache::insert`] users: the cache
+/// persists itself after this many dirty entries even when the caller
+/// never flushes explicitly. (The engine batch-commits with
+/// [`DiskCache::insert_deferred`] and flushes once per tuning call
+/// instead, keeping file I/O out of its lock scope.)
+pub const DEFAULT_FLUSH_EVERY: usize = 256;
+
+/// Distinguishes concurrent flushes (same process) in temp-file names.
+static TEMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// The on-disk cache key. All three components are stable text/values by
+/// construction — see the module docs. The derived `Ord` (field order:
+/// fingerprint, shape, schedule) is the canonical on-disk sort order.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct DiskKey {
+    /// [`crate::coordinator::engine::arch_fingerprint`] of the instance.
+    pub arch_fp: u64,
+    /// `MxNxK` shape text.
+    pub shape: String,
+    /// [`crate::schedule::Schedule::cache_key`] text.
+    pub sched: String,
+}
+
+/// A persistent `(arch, shape, schedule) → Option<RunStats>` store.
+///
+/// `None` values record candidates that failed to lower (a deliberate
+/// negative-cache, mirroring the in-memory memo-cache).
+pub struct DiskCache {
+    path: PathBuf,
+    entries: HashMap<DiskKey, Option<RunStats>>,
+    /// Entries read from disk at open time.
+    loaded: usize,
+    /// Keys inserted since the last successful flush (not yet on disk).
+    dirty: Vec<DiskKey>,
+    /// May flush() extend the on-disk file by appending? True only when
+    /// the file is known intact (clean load, or we wrote it ourselves);
+    /// false forces the next flush to be a full atomic rewrite, which is
+    /// also how a damaged file heals.
+    appendable: bool,
+    /// The on-disk layout contains appended batches (not one sorted
+    /// image); compact() canonicalizes it.
+    needs_compact: bool,
+    flush_every: usize,
+    /// After a failed auto-flush, retry only once this many entries are
+    /// dirty (prevents an error storm on every subsequent insert while
+    /// keeping explicit flush()/compact() calls retrying immediately).
+    auto_retry_at: usize,
+    warnings: Vec<String>,
+}
+
+impl DiskCache {
+    /// Open (or create-on-first-flush) a cache at `path`, loading every
+    /// parseable entry. Infallible by design: any corruption — missing
+    /// file aside, which is a normal first run — degrades to a partial or
+    /// full cold start and is recorded in [`DiskCache::warnings`].
+    pub fn open(path: impl Into<PathBuf>) -> DiskCache {
+        let path = path.into();
+        let mut cache = DiskCache {
+            path,
+            entries: HashMap::new(),
+            loaded: 0,
+            dirty: Vec::new(),
+            appendable: false,
+            needs_compact: false,
+            flush_every: DEFAULT_FLUSH_EVERY,
+            auto_retry_at: 0,
+            warnings: Vec::new(),
+        };
+        cache.load();
+        cache
+    }
+
+    fn load(&mut self) {
+        let text = match std::fs::read_to_string(&self.path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return,
+            Err(e) => {
+                self.warnings.push(format!(
+                    "cannot read {} ({e}); starting cold",
+                    self.path.display()
+                ));
+                return;
+            }
+        };
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        let Some(header) = lines.next() else {
+            self.warnings
+                .push(format!("{} is empty (no header); starting cold", self.path.display()));
+            return;
+        };
+        match Json::parse(header) {
+            Ok(h)
+                if h.get("format").and_then(Json::as_str) == Some(FORMAT)
+                    && h.get("version").and_then(Json::as_i64) == Some(VERSION) => {}
+            Ok(h) => {
+                self.warnings.push(format!(
+                    "{} has foreign header {} (want format {FORMAT:?} v{VERSION}); starting cold",
+                    self.path.display(),
+                    h.render()
+                ));
+                return;
+            }
+            Err(e) => {
+                self.warnings.push(format!(
+                    "{} header is unparseable ({e}); starting cold",
+                    self.path.display()
+                ));
+                return;
+            }
+        }
+        let mut skipped = 0usize;
+        let mut first_err = String::new();
+        let mut prev: Option<DiskKey> = None;
+        let mut unsorted = false;
+        for line in lines {
+            match Self::parse_entry(line) {
+                Ok((key, stats)) => {
+                    // Appended batches / duplicate keys show up as keys
+                    // out of canonical order; remember so compact() knows
+                    // the layout needs canonicalizing.
+                    if prev.as_ref().is_some_and(|p| *p >= key) {
+                        unsorted = true;
+                    }
+                    prev = Some(key.clone());
+                    self.entries.insert(key, stats);
+                }
+                Err(e) => {
+                    skipped += 1;
+                    if first_err.is_empty() {
+                        first_err = format!("{e:#}");
+                    }
+                }
+            }
+        }
+        if skipped > 0 {
+            self.warnings.push(format!(
+                "{}: {skipped} unreadable entr{} skipped (first: {first_err}); \
+                 they degrade to cache misses",
+                self.path.display(),
+                if skipped == 1 { "y" } else { "ies" }
+            ));
+        }
+        self.loaded = self.entries.len();
+        // A cleanly-loaded file is safe to extend by appending; anything
+        // damaged forces the next flush to a full rewrite (which heals it).
+        self.appendable = skipped == 0;
+        // A non-canonical or damaged layout is compacted at the next
+        // compact() (the engine's drop), even if nothing new is inserted.
+        self.needs_compact = unsorted || skipped > 0;
+    }
+
+    fn parse_entry(line: &str) -> Result<(DiskKey, Option<RunStats>)> {
+        let j = Json::parse(line).map_err(|e| anyhow::anyhow!("bad entry line: {e}"))?;
+        let fp_hex = j
+            .get("fp")
+            .and_then(Json::as_str)
+            .context("entry missing string field `fp`")?;
+        let arch_fp = u64::from_str_radix(fp_hex, 16)
+            .with_context(|| format!("entry fingerprint {fp_hex:?} is not hex"))?;
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_str)
+            .context("entry missing string field `shape`")?
+            .to_string();
+        let sched = j
+            .get("sched")
+            .and_then(Json::as_str)
+            .context("entry missing string field `sched`")?
+            .to_string();
+        let stats = match j.get("stats") {
+            Some(Json::Null) => None,
+            Some(s) => Some(RunStats::from_json(s).context("entry stats")?),
+            None => anyhow::bail!("entry missing field `stats`"),
+        };
+        Ok((DiskKey { arch_fp, shape, sched }, stats))
+    }
+
+    fn entry_line(key: &DiskKey, stats: &Option<RunStats>) -> String {
+        Json::obj()
+            .field("fp", format!("{:016x}", key.arch_fp))
+            .field("shape", key.shape.as_str())
+            .field("sched", key.sched.as_str())
+            .field("stats", match stats {
+                Some(s) => s.to_json(),
+                None => Json::Null,
+            })
+            .render()
+    }
+
+    /// The cache file path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Problems encountered while loading (corrupt entries, foreign
+    /// headers, ...). Empty on a clean open.
+    pub fn warnings(&self) -> &[String] {
+        &self.warnings
+    }
+
+    /// Entries currently held (loaded + inserted).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Entries read from disk when the cache was opened.
+    pub fn loaded(&self) -> usize {
+        self.loaded
+    }
+
+    /// Entries recording a candidate that failed to lower.
+    pub fn infeasible_count(&self) -> usize {
+        self.entries.values().filter(|s| s.is_none()).count()
+    }
+
+    /// Per-fingerprint entry counts, descending (for `cache stats`).
+    pub fn fingerprint_counts(&self) -> Vec<(u64, usize)> {
+        let mut counts: HashMap<u64, usize> = HashMap::new();
+        for key in self.entries.keys() {
+            *counts.entry(key.arch_fp).or_insert(0) += 1;
+        }
+        let mut out: Vec<(u64, usize)> = counts.into_iter().collect();
+        out.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+        out
+    }
+
+    /// Look up one entry.
+    pub fn get(&self, key: &DiskKey) -> Option<&Option<RunStats>> {
+        self.entries.get(key)
+    }
+
+    /// Insert one entry without any flush: callers that batch-commit
+    /// under a lock (the engine's phase 3) use this and flush explicitly
+    /// right after, keeping file I/O out of their critical section.
+    /// Updating an existing key re-marks it dirty too, so every insert —
+    /// new or overwrite — is durable by the next flush (the appended
+    /// duplicate line wins on load; flush dedups within a batch).
+    pub fn insert_deferred(&mut self, key: DiskKey, stats: Option<RunStats>) {
+        self.entries.insert(key.clone(), stats);
+        self.dirty.push(key);
+    }
+
+    /// Insert one entry; auto-flushes every [`DiskCache::flush_every`]
+    /// dirty entries. A failed auto-flush is demoted to a warning and
+    /// the entries stay dirty — explicit [`DiskCache::flush`] /
+    /// [`DiskCache::compact`] calls (the per-tuning-call checkpoint, the
+    /// engine's drop) retry immediately; the auto path retries after
+    /// another `flush_every` insertions to avoid an error storm.
+    pub fn insert(&mut self, key: DiskKey, stats: Option<RunStats>) {
+        self.insert_deferred(key, stats);
+        if self.dirty.len() >= self.flush_every.max(self.auto_retry_at) {
+            if let Err(e) = self.flush() {
+                let msg = format!("auto-flush of {} failed: {e:#}", self.path.display());
+                eprintln!("warning: simulation cache: {msg}");
+                self.warnings.push(msg);
+                self.auto_retry_at = self.dirty.len() + self.flush_every;
+            }
+        }
+    }
+
+    /// Override the auto-flush cadence (minimum 1).
+    pub fn set_flush_every(&mut self, n: usize) {
+        self.flush_every = n.max(1);
+    }
+
+    /// Persist everything not yet on disk. The first flush (or any flush
+    /// over a damaged file) atomically rewrites the whole file; later
+    /// flushes append just the dirty entries, so total checkpoint I/O
+    /// over a sweep is linear in entries. On failure the entries stay
+    /// dirty and the next flush retries. No-op when nothing is dirty.
+    pub fn flush(&mut self) -> Result<()> {
+        if self.dirty.is_empty() {
+            return Ok(());
+        }
+        if !self.appendable {
+            return self.rewrite();
+        }
+        let mut batch = std::mem::take(&mut self.dirty);
+        batch.sort();
+        batch.dedup(); // a key updated twice since the last flush writes once
+        let mut out = String::new();
+        for key in &batch {
+            out.push_str(&Self::entry_line(key, &self.entries[key]));
+            out.push('\n');
+        }
+        let append = std::fs::OpenOptions::new()
+            .append(true)
+            .open(&self.path)
+            .and_then(|mut f| std::io::Write::write_all(&mut f, out.as_bytes()));
+        match append {
+            Ok(()) => {
+                self.needs_compact = true;
+                self.auto_retry_at = 0;
+                Ok(())
+            }
+            Err(e) => {
+                // Keep the batch dirty for a retry, and stop trusting the
+                // file: the next flush does a full atomic rewrite, which
+                // self-heals whatever broke the append (file deleted or
+                // renamed underneath us, truncated by another process,
+                // ...). A partially-appended batch is harmless either
+                // way: loading tolerates both the torn line and the
+                // duplicates the rewrite removes.
+                self.dirty = batch;
+                self.appendable = false;
+                Err(anyhow::Error::new(e)
+                    .context(format!("appending to {}", self.path.display())))
+            }
+        }
+    }
+
+    /// Canonicalize the on-disk file to one sorted, deduplicated image
+    /// (equal contents ⇒ byte-identical files), flushing anything dirty
+    /// on the way. No-op when the file is already compact and clean.
+    /// Called by the engine when it drops.
+    pub fn compact(&mut self) -> Result<()> {
+        if self.dirty.is_empty() && !self.needs_compact {
+            return Ok(());
+        }
+        self.rewrite()
+    }
+
+    /// Atomically rewrite the full cache: write `path.tmp.<pid>.<seq>` in
+    /// the same directory, then rename it over `path`, in sorted key
+    /// order.
+    fn rewrite(&mut self) -> Result<()> {
+        let mut keys: Vec<DiskKey> = self.entries.keys().cloned().collect();
+        keys.sort();
+        let mut out = String::new();
+        out.push_str(&Json::obj().field("format", FORMAT).field("version", VERSION).render());
+        out.push('\n');
+        for key in &keys {
+            out.push_str(&Self::entry_line(key, &self.entries[key]));
+            out.push('\n');
+        }
+        if let Some(parent) = self.path.parent() {
+            if !parent.as_os_str().is_empty() && !parent.exists() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating cache directory {}", parent.display()))?;
+            }
+        }
+        let tmp = self.temp_path();
+        std::fs::write(&tmp, &out)
+            .with_context(|| format!("writing cache temp file {}", tmp.display()))?;
+        if let Err(e) = std::fs::rename(&tmp, &self.path) {
+            // Leave no stray temp file behind on a failed rename.
+            let _ = std::fs::remove_file(&tmp);
+            return Err(anyhow::Error::new(e).context(format!(
+                "renaming {} over {}",
+                tmp.display(),
+                self.path.display()
+            )));
+        }
+        self.dirty.clear();
+        self.appendable = true;
+        self.needs_compact = false;
+        self.auto_retry_at = 0;
+        Ok(())
+    }
+
+    fn temp_path(&self) -> PathBuf {
+        let seq = TEMP_SEQ.fetch_add(1, Ordering::Relaxed);
+        let name = self
+            .path
+            .file_name()
+            .map(|n| n.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "cache".to_string());
+        self.path
+            .with_file_name(format!("{name}.tmp.{}.{seq}", std::process::id()))
+    }
+
+    /// Delete the cache file and any stray temp files a killed writer
+    /// left beside it. Returns `(file_removed, temp_files_removed)`.
+    pub fn clear(path: impl AsRef<Path>) -> Result<(bool, usize)> {
+        let path = path.as_ref();
+        let removed = match std::fs::remove_file(path) {
+            Ok(()) => true,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => false,
+            Err(e) => {
+                return Err(e).with_context(|| format!("removing {}", path.display()));
+            }
+        };
+        let mut temps = 0usize;
+        if let (Some(parent), Some(name)) = (path.parent(), path.file_name()) {
+            let parent = if parent.as_os_str().is_empty() { Path::new(".") } else { parent };
+            let prefix = format!("{}.tmp.", name.to_string_lossy());
+            if let Ok(dir) = std::fs::read_dir(parent) {
+                for ent in dir.flatten() {
+                    if ent.file_name().to_string_lossy().starts_with(&prefix)
+                        && std::fs::remove_file(ent.path()).is_ok()
+                    {
+                        temps += 1;
+                    }
+                }
+            }
+        }
+        Ok((removed, temps))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(fp: u64, shape: &str, sched: &str) -> DiskKey {
+        DiskKey { arch_fp: fp, shape: shape.into(), sched: sched.into() }
+    }
+
+    fn stats(makespan: f64, spm: u64) -> RunStats {
+        RunStats {
+            makespan_ns: makespan,
+            useful_flops: 2e6,
+            total_flops: 2.5e6,
+            hbm_read_bytes: 123,
+            hbm_write_bytes: 456,
+            noc_link_bytes: 789,
+            spm_bytes: spm,
+            peak_tflops: 10.0,
+            hbm_peak_gbps: 100.0,
+            supersteps: 3,
+            compute_busy_ns: 0.5,
+            num_tiles: 4,
+            step_end_ns: vec![1.0, 2.0, makespan],
+        }
+    }
+
+    fn temp_file(tag: &str) -> PathBuf {
+        let seq = TEMP_SEQ.fetch_add(1, Ordering::Relaxed);
+        std::env::temp_dir().join(format!(
+            "dit-cache-unit-{tag}-{}-{seq}.jsonl",
+            std::process::id()
+        ))
+    }
+
+    #[test]
+    fn roundtrip_including_negative_entries() {
+        let path = temp_file("roundtrip");
+        let mut c = DiskCache::open(&path);
+        assert!(c.warnings().is_empty(), "{:?}", c.warnings());
+        assert_eq!(c.len(), 0);
+        c.insert(key(7, "64x64x64", "summa"), Some(stats(1000.0, (1 << 53) + 1)));
+        c.insert(key(7, "64x64x64", "systolic"), None);
+        c.flush().unwrap();
+        let c2 = DiskCache::open(&path);
+        assert!(c2.warnings().is_empty(), "{:?}", c2.warnings());
+        assert_eq!(c2.len(), 2);
+        assert_eq!(c2.loaded(), 2);
+        assert_eq!(c2.infeasible_count(), 1);
+        let got = c2.get(&key(7, "64x64x64", "summa")).unwrap().as_ref().unwrap();
+        assert_eq!(got.makespan_ns.to_bits(), 1000.0f64.to_bits());
+        assert_eq!(got.spm_bytes, (1 << 53) + 1, "u64 counter survives past 2^53");
+        assert!(
+            matches!(c2.get(&key(7, "64x64x64", "systolic")), Some(None)),
+            "negative entry round-trips"
+        );
+        assert!(c2.get(&key(8, "64x64x64", "summa")).is_none(), "foreign fp misses");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn flush_is_deterministic_and_idempotent() {
+        let a = temp_file("det-a");
+        let b = temp_file("det-b");
+        for path in [&a, &b] {
+            let mut c = DiskCache::open(path);
+            // Insertion order differs; file bytes must not.
+            if path == &a {
+                c.insert(key(1, "s", "x"), None);
+                c.insert(key(2, "s", "x"), Some(stats(1.0, 2)));
+            } else {
+                c.insert(key(2, "s", "x"), Some(stats(1.0, 2)));
+                c.insert(key(1, "s", "x"), None);
+            }
+            c.flush().unwrap();
+        }
+        assert_eq!(std::fs::read(&a).unwrap(), std::fs::read(&b).unwrap());
+        // A flush with nothing pending rewrites nothing (mtime aside, the
+        // bytes stay identical).
+        let mut c = DiskCache::open(&a);
+        let before = std::fs::read(&a).unwrap();
+        c.flush().unwrap();
+        assert_eq!(std::fs::read(&a).unwrap(), before);
+        let _ = std::fs::remove_file(&a);
+        let _ = std::fs::remove_file(&b);
+    }
+
+    #[test]
+    fn later_flushes_append_and_compact_canonicalizes() {
+        let path = temp_file("append");
+        let mut c = DiskCache::open(&path);
+        c.insert(key(2, "s", "x"), None);
+        c.flush().unwrap(); // first flush: full atomic rewrite
+        let first = std::fs::read_to_string(&path).unwrap();
+        c.insert(key(1, "s", "x"), Some(stats(1.0, 2)));
+        c.flush().unwrap(); // second flush: appends, never rewrites
+        let appended = std::fs::read_to_string(&path).unwrap();
+        assert!(appended.starts_with(&first), "append extends the file in place");
+        assert_eq!(appended.lines().count(), 3, "header + two entries");
+        // Compaction canonicalizes to the sorted image: byte-identical to
+        // a one-shot write of the same contents.
+        c.compact().unwrap();
+        let canon_path = temp_file("append-canon");
+        let mut canon = DiskCache::open(&canon_path);
+        canon.insert(key(1, "s", "x"), Some(stats(1.0, 2)));
+        canon.insert(key(2, "s", "x"), None);
+        canon.flush().unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), std::fs::read(&canon_path).unwrap());
+        // Both layouts load to the same entries.
+        let back = DiskCache::open(&path);
+        assert_eq!(back.len(), 2);
+        assert!(back.warnings().is_empty(), "{:?}", back.warnings());
+        // Compacting an already-compact clean cache is a no-op.
+        let mut back = back;
+        back.compact().unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), std::fs::read(&canon_path).unwrap());
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(&canon_path);
+    }
+
+    #[test]
+    fn auto_flush_after_n_insertions() {
+        let path = temp_file("autoflush");
+        let mut c = DiskCache::open(&path);
+        c.set_flush_every(3);
+        c.insert(key(1, "a", "x"), None);
+        c.insert(key(1, "b", "x"), None);
+        assert!(!path.exists(), "below the cadence nothing is written");
+        c.insert(key(1, "c", "x"), None);
+        assert!(path.exists(), "third insert crosses the cadence");
+        assert_eq!(DiskCache::open(&path).len(), 3);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn overwriting_an_entry_stays_durable() {
+        let path = temp_file("overwrite");
+        let mut c = DiskCache::open(&path);
+        c.insert(key(1, "s", "x"), Some(stats(1.0, 2)));
+        c.flush().unwrap();
+        // An update to an existing key must reach disk on the next flush
+        // (the appended duplicate line wins on load).
+        c.insert(key(1, "s", "x"), Some(stats(9.0, 3)));
+        c.flush().unwrap();
+        let back = DiskCache::open(&path);
+        assert!(back.warnings().is_empty(), "{:?}", back.warnings());
+        assert_eq!(back.len(), 1, "duplicate lines collapse on load");
+        let got = back.get(&key(1, "s", "x")).unwrap().as_ref().unwrap();
+        assert_eq!(got.makespan_ns.to_bits(), 9.0f64.to_bits(), "last write wins");
+        assert_eq!(got.spm_bytes, 3);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn clear_removes_file_and_stray_temps() {
+        let path = temp_file("clear");
+        let mut c = DiskCache::open(&path);
+        c.insert(key(1, "a", "x"), None);
+        c.flush().unwrap();
+        let stray = path.with_file_name(format!(
+            "{}.tmp.99999.0",
+            path.file_name().unwrap().to_string_lossy()
+        ));
+        std::fs::write(&stray, "half-written").unwrap();
+        let (removed, temps) = DiskCache::clear(&path).unwrap();
+        assert!(removed);
+        assert_eq!(temps, 1);
+        assert!(!path.exists() && !stray.exists());
+        // Clearing a missing cache is not an error.
+        assert_eq!(DiskCache::clear(&path).unwrap(), (false, 0));
+    }
+}

@@ -21,12 +21,12 @@
 //! final ranking uses the same stable sort as `autotune`.
 
 use std::collections::{HashMap, HashSet};
-use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use anyhow::Result;
 
+use super::cache::{DiskCache, DiskKey};
 use super::{simulate_schedule, AutotuneResult, Scored};
 use crate::arch::workload::Workload;
 use crate::arch::{ArchConfig, GemmShape};
@@ -46,13 +46,19 @@ fn _assert_send_sync() {
     check::<RunStats>();
 }
 
-/// Stable fingerprint of an architecture (hash of its canonical config
-/// text) — the cache-key component that keeps results from different
-/// SoftHier instances apart.
+/// Stable fingerprint of an architecture: FNV-1a over its canonical
+/// config text — the cache-key component that keeps results from
+/// different SoftHier instances apart.
+///
+/// This used to hash with `DefaultHasher`, whose algorithm is explicitly
+/// unspecified across Rust versions; that was harmless for the in-memory
+/// memo-cache but a landmine for the persistent cache
+/// ([`crate::coordinator::cache`]), where an on-disk key that drifts with
+/// the toolchain silently invalidates every stored entry. FNV-1a is
+/// pinned by specification ([`crate::util::fnv1a64`]), so fingerprints
+/// are identical across Rust versions, platforms, and process runs.
 pub fn arch_fingerprint(arch: &ArchConfig) -> u64 {
-    let mut h = std::collections::hash_map::DefaultHasher::new();
-    arch.to_text().hash(&mut h);
-    h.finish()
+    crate::util::fnv1a64(arch.to_text().as_bytes())
 }
 
 /// Simulation memo-cache key.
@@ -80,9 +86,14 @@ pub struct WorkloadReport {
     pub shapes: Vec<ShapeResult>,
     /// Simulations actually executed during this call.
     pub sim_calls: usize,
-    /// Candidate evaluations served from the memo-cache (or deduplicated
-    /// against an identical in-flight candidate) during this call.
+    /// Candidate evaluations served from the in-memory memo-cache (or
+    /// deduplicated against an identical in-flight candidate) during this
+    /// call.
     pub cache_hits: usize,
+    /// Candidate evaluations served from the persistent on-disk cache
+    /// ([`Engine::with_cache`]) during this call. Zero when no cache is
+    /// attached.
+    pub disk_hits: usize,
     /// Worker threads used for this call.
     pub workers: usize,
     /// Wall-clock tuning time, milliseconds.
@@ -118,14 +129,20 @@ impl WorkloadReport {
     }
 }
 
-/// The tuning engine: one architecture, a worker pool, a memo-cache.
+/// The tuning engine: one architecture, a worker pool, a memo-cache —
+/// and, optionally, a persistent on-disk cache behind it
+/// ([`Engine::with_cache`]).
 pub struct Engine {
     arch: ArchConfig,
     arch_fp: u64,
     workers: usize,
     cache: Mutex<HashMap<CacheKey, Option<RunStats>>>,
+    /// Persistent second-level cache. Lock order: `cache` before `disk`
+    /// (both phase 1 and phase 3 follow it), never the reverse.
+    disk: Option<Mutex<DiskCache>>,
     sim_calls: AtomicUsize,
     cache_hits: AtomicUsize,
+    disk_hits: AtomicUsize,
 }
 
 impl Engine {
@@ -139,14 +156,33 @@ impl Engine {
             arch_fp: arch_fingerprint(arch),
             workers: workers.clamp(2, 16),
             cache: Mutex::new(HashMap::new()),
+            disk: None,
             sim_calls: AtomicUsize::new(0),
             cache_hits: AtomicUsize::new(0),
+            disk_hits: AtomicUsize::new(0),
         }
     }
 
     /// Override the worker-pool size (minimum 1).
     pub fn with_workers(mut self, n: usize) -> Engine {
         self.workers = n.max(1);
+        self
+    }
+
+    /// Attach a persistent simulation cache at `path`
+    /// ([`crate::coordinator::cache`]): existing entries are loaded now
+    /// and consulted before simulating; new results are checkpointed at
+    /// the end of every tuning call (an atomic full write first, cheap
+    /// appends after, compaction on drop), so a killed run resumes from
+    /// its last checkpoint. A missing file is a normal cold start; a
+    /// corrupt one degrades to (partial) cold start with a warning on
+    /// stderr — attaching never fails.
+    pub fn with_cache(mut self, path: impl Into<std::path::PathBuf>) -> Engine {
+        let disk = DiskCache::open(path);
+        for w in disk.warnings() {
+            eprintln!("warning: simulation cache: {w}");
+        }
+        self.disk = Some(Mutex::new(disk));
         self
     }
 
@@ -160,14 +196,45 @@ impl Engine {
         self.sim_calls.load(Ordering::Relaxed)
     }
 
-    /// Total cache hits over the engine's lifetime.
+    /// Total in-memory cache hits over the engine's lifetime.
     pub fn cache_hits(&self) -> usize {
         self.cache_hits.load(Ordering::Relaxed)
     }
 
-    /// Cached simulation entries currently held.
+    /// Total on-disk cache hits over the engine's lifetime (0 without
+    /// [`Engine::with_cache`]).
+    pub fn disk_hits(&self) -> usize {
+        self.disk_hits.load(Ordering::Relaxed)
+    }
+
+    /// Cached simulation entries currently held in memory.
     pub fn cache_len(&self) -> usize {
         self.cache.lock().unwrap().len()
+    }
+
+    /// Is a persistent cache attached?
+    pub fn has_disk_cache(&self) -> bool {
+        self.disk.is_some()
+    }
+
+    /// Entries currently held by the attached persistent cache.
+    pub fn disk_len(&self) -> usize {
+        self.disk.as_ref().map(|d| d.lock().unwrap().len()).unwrap_or(0)
+    }
+
+    /// Entries the attached persistent cache loaded from disk at open.
+    pub fn disk_loaded(&self) -> usize {
+        self.disk.as_ref().map(|d| d.lock().unwrap().loaded()).unwrap_or(0)
+    }
+
+    /// Persist the attached cache now (no-op without one, or with nothing
+    /// new to write). Called automatically at the end of every tuning
+    /// call and on drop; exposed for callers that want the error.
+    pub fn flush_cache(&self) -> Result<()> {
+        if let Some(disk) = &self.disk {
+            disk.lock().unwrap().flush()?;
+        }
+        Ok(())
     }
 
     /// Parallel, memoized autotune of a single shape. Bit-identical to
@@ -208,25 +275,44 @@ impl Engine {
         }
 
         // Phase 1 — plan (serial, deterministic): one job per candidate
-        // not already cached, deduplicated across repeated shapes.
+        // not already cached, deduplicated across repeated shapes. A miss
+        // in memory falls through to the persistent cache (when attached):
+        // a disk hit promotes the entry into memory, so every later lookup
+        // — including phase 4's ranking assembly — sees one store.
         let mut jobs: Vec<Job> = Vec::new();
         let mut hits_this_call = 0usize;
+        let mut disk_hits_this_call = 0usize;
         {
-            let cache = self.cache.lock().unwrap();
+            let mut cache = self.cache.lock().unwrap();
+            let disk = self.disk.as_ref().map(|d| d.lock().unwrap());
             let mut pending: HashSet<CacheKey> = HashSet::new();
             for item in &w.items {
+                let shape_text = item.shape.to_string();
                 for sched in candidates(arch, item.shape) {
                     let key = CacheKey { arch_fp, shape: item.shape, sched: sched.clone() };
                     if cache.contains_key(&key) || pending.contains(&key) {
                         hits_this_call += 1;
-                    } else {
-                        pending.insert(key.clone());
-                        jobs.push(Job { key, shape: item.shape, sched });
+                        continue;
                     }
+                    if let Some(disk) = disk.as_deref() {
+                        let dkey = DiskKey {
+                            arch_fp,
+                            shape: shape_text.clone(),
+                            sched: sched.cache_key(),
+                        };
+                        if let Some(stats) = disk.get(&dkey) {
+                            cache.insert(key, stats.clone());
+                            disk_hits_this_call += 1;
+                            continue;
+                        }
+                    }
+                    pending.insert(key.clone());
+                    jobs.push(Job { key, shape: item.shape, sched });
                 }
             }
         }
         self.cache_hits.fetch_add(hits_this_call, Ordering::Relaxed);
+        self.disk_hits.fetch_add(disk_hits_this_call, Ordering::Relaxed);
 
         // Phase 2 — evaluate: workers pull jobs off a shared index; each
         // result lands in its job's own slot, so completion order is
@@ -252,12 +338,36 @@ impl Engine {
         });
 
         // Phase 3 — commit results to the cache in job (= enumeration)
-        // order.
+        // order, mirroring every new entry (failures included — they are
+        // a deliberate negative-cache) into the persistent store.
         {
             let mut cache = self.cache.lock().unwrap();
+            let mut disk = self.disk.as_ref().map(|d| d.lock().unwrap());
             for (job, cell) in jobs.iter().zip(&results) {
                 let stats = cell.lock().unwrap().take().expect("worker completed every job");
+                if let Some(disk) = disk.as_deref_mut() {
+                    let dkey = DiskKey {
+                        arch_fp,
+                        shape: job.shape.to_string(),
+                        sched: job.sched.cache_key(),
+                    };
+                    // Deferred: no auto-flush here — file I/O happens in
+                    // the explicit checkpoint below, after the memo-cache
+                    // lock is released.
+                    disk.insert_deferred(dkey, stats.clone());
+                }
                 cache.insert(job.key.clone(), stats);
+            }
+        }
+        // Checkpoint: one flush per tuning call (a DSE sweep therefore
+        // persists after every evaluated config — appends after the first
+        // rewrite, so sweep-total checkpoint I/O stays linear). Done
+        // outside the memo-cache lock: concurrent wave configs queue
+        // behind the disk lock only, never behind planning/ranking.
+        // Failure only costs durability, never correctness.
+        if let Some(disk) = &self.disk {
+            if let Err(e) = disk.lock().unwrap().flush() {
+                eprintln!("warning: simulation cache: {e:#}");
             }
         }
 
@@ -296,9 +406,27 @@ impl Engine {
             shapes,
             sim_calls: jobs.len(),
             cache_hits: hits_this_call,
+            disk_hits: disk_hits_this_call,
             workers,
             elapsed_ms: t0.elapsed().as_secs_f64() * 1e3,
         })
+    }
+}
+
+impl Drop for Engine {
+    /// Last-chance persistence: whatever the engine learned reaches disk
+    /// even when the caller never flushes explicitly, and the file is
+    /// compacted to its canonical sorted image (per-call checkpoints
+    /// append for cheapness — see [`DiskCache::compact`]). Errors are
+    /// demoted to a warning (a drop cannot propagate them).
+    fn drop(&mut self) {
+        if let Some(disk) = &self.disk {
+            if let Ok(mut disk) = disk.lock() {
+                if let Err(e) = disk.compact() {
+                    eprintln!("warning: simulation cache flush on drop failed: {e:#}");
+                }
+            }
+        }
     }
 }
 
@@ -334,6 +462,22 @@ mod tests {
     }
 
     #[test]
+    fn fingerprint_is_the_specified_stable_hash() {
+        // The fingerprint keys on-disk cache entries, so it must be
+        // exactly FNV-1a over the canonical config text — any other
+        // (unspecified) hash would invalidate persisted caches whenever
+        // the toolchain changes.
+        for arch in [ArchConfig::tiny(4, 4), ArchConfig::gh200_like(), ArchConfig::a100_like()] {
+            assert_eq!(
+                arch_fingerprint(&arch),
+                crate::util::fnv1a64(arch.to_text().as_bytes()),
+                "{}",
+                arch.name
+            );
+        }
+    }
+
+    #[test]
     fn tune_workload_on_shares_cache_across_architectures() {
         let a4 = ArchConfig::tiny(4, 4);
         let a2 = ArchConfig::tiny(2, 2);
@@ -354,6 +498,35 @@ mod tests {
             d.shapes[0].result.best().stats.makespan_ns.to_bits(),
             r4.shapes[0].result.best().stats.makespan_ns.to_bits()
         );
+    }
+
+    #[test]
+    fn with_cache_resumes_across_engine_instances() {
+        let path = std::env::temp_dir()
+            .join(format!("dit-engine-cache-{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let arch = ArchConfig::tiny(2, 2);
+        let w = Workload::single("s", GemmShape::new(64, 64, 64));
+        let cold = Engine::new(&arch).with_cache(&path).tune_workload(&w).unwrap();
+        assert!(cold.sim_calls > 0, "cold run simulates");
+        assert_eq!(cold.disk_hits, 0, "nothing on disk yet");
+        assert!(path.exists(), "tuning call checkpoints to disk");
+        // A brand-new engine (fresh memory cache) resumes purely from
+        // disk: zero simulations, bit-identical ranking.
+        let engine = Engine::new(&arch).with_cache(&path);
+        assert!(engine.disk_loaded() > 0);
+        let warm = engine.tune_workload(&w).unwrap();
+        assert_eq!(warm.sim_calls, 0, "everything served from disk");
+        assert!(warm.disk_hits > 0);
+        assert_eq!(warm.disk_hits, engine.disk_hits());
+        let (a, b) = (&cold.shapes[0].result, &warm.shapes[0].result);
+        assert_eq!(a.ranking.len(), b.ranking.len());
+        for (x, y) in a.ranking.iter().zip(&b.ranking) {
+            assert_eq!(x.schedule, y.schedule);
+            assert_eq!(x.stats.makespan_ns.to_bits(), y.stats.makespan_ns.to_bits());
+            assert_eq!(x.stats.spm_bytes, y.stats.spm_bytes);
+        }
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

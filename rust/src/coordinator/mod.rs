@@ -12,8 +12,13 @@
 //!   the kernel achieving the best performance" (§4.1.4);
 //! * [`engine`] — the parallel, batched, memoizing autotuner built on the
 //!   same primitives ([`engine::Engine::tune_workload`] tunes a whole
-//!   named GEMM suite, bit-identical to the serial path).
+//!   named GEMM suite, bit-identical to the serial path);
+//! * [`cache`] — the persistent half of that memo-cache: a versioned
+//!   on-disk `(arch fingerprint, shape, schedule) → RunStats` store, so
+//!   interrupted or refined tuning sweeps resume instead of
+//!   re-simulating ([`engine::Engine::with_cache`]).
 
+pub mod cache;
 pub mod engine;
 
 use anyhow::Result;

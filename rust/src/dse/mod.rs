@@ -22,6 +22,12 @@
 //! * **one engine, one memo-cache** — the simulation cache is keyed by
 //!   architecture fingerprint, so every config shares one engine and
 //!   repeated shapes/schedules across sweep waves never re-simulate;
+//! * **persistent checkpointing** — with [`DseOptions::cache_path`] set,
+//!   that cache is backed by the on-disk store
+//!   ([`crate::coordinator::cache`]), checkpointed atomically after
+//!   every evaluated config: a sweep killed mid-run resumes for free and
+//!   produces a bit-identical [`DseResult`], and a refined spec around
+//!   the frontier reuses every overlapping point;
 //! * **config-level parallelism** — candidate configs are evaluated in
 //!   deterministic cost-ordered waves, the configs of a wave concurrently;
 //! * **roofline early-prune** — before simulating a config, its workload
@@ -367,6 +373,12 @@ pub struct DseOptions {
     /// The axes the caller cares about; governs prune soundness (above)
     /// and is echoed into [`DseResult::objectives`] for reporting.
     pub objectives: Vec<Objective>,
+    /// Persistent simulation cache path ([`crate::coordinator::cache`]).
+    /// When set, the sweep's engine loads it on open and checkpoints
+    /// after every evaluated config, so an interrupted sweep resumes for
+    /// free and a refined sweep (finer axes around the frontier) reuses
+    /// every overlapping point.
+    pub cache_path: Option<std::path::PathBuf>,
 }
 
 impl Default for DseOptions {
@@ -378,6 +390,7 @@ impl Default for DseOptions {
             cost: CostModel::default_proxy(),
             energy: EnergyModel::default_table(),
             objectives: vec![Objective::Perf, Objective::Cost],
+            cache_path: None,
         }
     }
 }
@@ -451,8 +464,13 @@ pub struct DseResult {
     pub infeasible: Vec<(String, String)>,
     /// Simulations actually executed across the sweep.
     pub sim_calls: usize,
-    /// Memo-cache hits across the sweep.
+    /// In-memory memo-cache hits across the sweep.
     pub cache_hits: usize,
+    /// Persistent-cache hits across the sweep (0 without
+    /// [`DseOptions::cache_path`]).
+    pub disk_hits: usize,
+    /// Entries the persistent cache held when the sweep opened it.
+    pub disk_loaded: usize,
     pub elapsed_ms: f64,
 }
 
@@ -596,6 +614,8 @@ impl DseResult {
             .field("frontier3_size", self.frontier3().len())
             .field("sim_calls", self.sim_calls)
             .field("cache_hits", self.cache_hits)
+            .field("disk_hits", self.disk_hits)
+            .field("disk_loaded", self.disk_loaded)
             .field("points", pts)
             .field("pruned", pruned)
             .field("infeasible", infeasible)
@@ -635,8 +655,13 @@ pub fn run_sweep(spec: &SweepSpec, w: &Workload, opts: &DseOptions) -> Result<Ds
     if opts.workers > 0 {
         engine = engine.with_workers(opts.workers);
     }
+    if let Some(path) = &opts.cache_path {
+        engine = engine.with_cache(path);
+    }
+    let disk_loaded = engine.disk_loaded();
     let sim0 = engine.sim_calls();
     let hits0 = engine.cache_hits();
+    let disk0 = engine.disk_hits();
 
     let mut points: Vec<DsePoint> = Vec::new();
     let mut pruned: Vec<PrunedPoint> = Vec::new();
@@ -723,6 +748,12 @@ pub fn run_sweep(spec: &SweepSpec, w: &Workload, opts: &DseOptions) -> Result<Ds
         points[i].on_frontier3 = true;
     }
 
+    // Final checkpoint (the engine also flushed after every config); a
+    // persistence failure degrades durability, not the sweep result.
+    if let Err(e) = engine.flush_cache() {
+        eprintln!("warning: simulation cache: {e:#}");
+    }
+
     Ok(DseResult {
         spec_name: spec.name.clone(),
         workload: w.name.clone(),
@@ -732,6 +763,8 @@ pub fn run_sweep(spec: &SweepSpec, w: &Workload, opts: &DseOptions) -> Result<Ds
         infeasible,
         sim_calls: engine.sim_calls() - sim0,
         cache_hits: engine.cache_hits() - hits0,
+        disk_hits: engine.disk_hits() - disk0,
+        disk_loaded,
         elapsed_ms: t0.elapsed().as_secs_f64() * 1e3,
     })
 }

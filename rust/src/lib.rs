@@ -33,8 +33,10 @@
 //!   deterministic [`perfmodel::EnergyModel`] over the simulator's
 //!   traffic counters (pJ/byte, pJ/MAC, static W/tile).
 //! * [`coordinator`] — the end-to-end deployment driver, the
-//!   insight-guided schedule autotuner, and the parallel batched
-//!   workload-tuning engine ([`coordinator::engine`]).
+//!   insight-guided schedule autotuner, the parallel batched
+//!   workload-tuning engine ([`coordinator::engine`]), and the
+//!   persistent simulation cache ([`coordinator::cache`]): interrupted
+//!   or refined tuning sweeps resume from disk instead of re-simulating.
 //! * [`dse`] — hardware design-space exploration: sweep mesh/CE/SPM/HBM
 //!   axes, co-tune every candidate instance with the engine, and report
 //!   Pareto frontiers over achieved TFLOP/s, a silicon-cost proxy, and

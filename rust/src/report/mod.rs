@@ -117,6 +117,28 @@ pub fn workload_summary(rep: &crate::coordinator::engine::WorkloadReport) -> Tab
     t
 }
 
+/// One-line engine counter summary for a workload report: simulations
+/// executed vs. candidates served from the in-memory memo-cache vs. the
+/// persistent on-disk cache — printed under every `tune-workload` table
+/// so cache effectiveness is visible at a glance.
+pub fn workload_counters(rep: &crate::coordinator::engine::WorkloadReport) -> String {
+    format!(
+        "engine     : {} simulations, {} memo hits, {} disk hits, {} workers, {:.0} ms wall",
+        rep.sim_calls, rep.cache_hits, rep.disk_hits, rep.workers, rep.elapsed_ms
+    )
+}
+
+/// One-line engine counter summary for a DSE sweep (see
+/// [`workload_counters`]); includes how many entries the persistent
+/// cache started with, so a resumed sweep is recognizable from the log.
+pub fn dse_counters(res: &crate::dse::DseResult) -> String {
+    format!(
+        "engine     : {} simulations, {} memo hits, {} disk hits ({} entries preloaded), \
+         {:.0} ms wall",
+        res.sim_calls, res.cache_hits, res.disk_hits, res.disk_loaded, res.elapsed_ms
+    )
+}
+
 /// Render a DSE sweep (one row per evaluated configuration, frontier rows
 /// starred) — the `dse` CLI/bench table.
 pub fn dse_summary(res: &crate::dse::DseResult) -> Table {
@@ -361,6 +383,7 @@ mod tests {
                     shapes: vec![],
                     sim_calls: 0,
                     cache_hits: 0,
+                    disk_hits: 0,
                     workers: 1,
                     elapsed_ms: 0.0,
                 },
@@ -378,8 +401,13 @@ mod tests {
             infeasible: vec![],
             sim_calls: 3,
             cache_hits: 1,
+            disk_hits: 2,
+            disk_loaded: 5,
             elapsed_ms: 1.0,
         };
+        let counters = dse_counters(&res);
+        assert!(counters.contains("3 simulations"), "{counters}");
+        assert!(counters.contains("2 disk hits (5 entries preloaded)"), "{counters}");
         let md = dse_summary(&res).markdown();
         assert!(md.contains("DSE sweep 'demo'"), "{md}");
         assert!(md.contains("cheap"), "{md}");
@@ -435,9 +463,13 @@ mod tests {
             }],
             sim_calls: 1,
             cache_hits: 0,
+            disk_hits: 3,
             workers: 2,
             elapsed_ms: 1.0,
         };
+        let counters = workload_counters(&rep);
+        assert!(counters.contains("1 simulations"), "{counters}");
+        assert!(counters.contains("3 disk hits"), "{counters}");
         let md = workload_summary(&rep).markdown();
         assert!(md.contains("workload 'demo'"), "{md}");
         assert!(md.contains("qkv"), "{md}");

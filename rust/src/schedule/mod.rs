@@ -184,6 +184,30 @@ impl Schedule {
         )
     }
 
+    /// Canonical cache-key text for the persistent simulation cache
+    /// ([`crate::coordinator::cache`]). Unlike [`Schedule::name`] (a
+    /// human-readable label that elides default fields), this encodes
+    /// **every** field — two schedules map to the same key iff they are
+    /// equal — and its format is part of the on-disk cache contract:
+    /// changing it orphans persisted entries (bump the cache FORMAT
+    /// version if you must).
+    pub fn cache_key(&self) -> String {
+        format!(
+            "{}|l{}x{}|tk{}|ps{}|db{}|ol{}|rp{}",
+            self.dataflow.name(),
+            self.logical.0,
+            self.logical.1,
+            self.tk,
+            self.pipeline_stages,
+            self.double_buffer as u8,
+            self.opt_layout as u8,
+            match self.reduce_policy {
+                ReducePolicy::FirstGroup => "first",
+                ReducePolicy::RoundRobin => "rr",
+            },
+        )
+    }
+
     /// Structural validation against an architecture.
     pub fn validate(&self, arch: &ArchConfig) -> anyhow::Result<()> {
         anyhow::ensure!(self.tk > 0, "tk must be positive");
@@ -482,6 +506,35 @@ mod tests {
         assert!(plan.tn >= 16);
         assert_eq!(plan.remap.log_rows, 8);
         assert_eq!(plan.remap.log_cols, 128);
+    }
+
+    #[test]
+    fn cache_key_is_injective_over_every_field() {
+        let arch = gh200();
+        let shape = GemmShape::new(4096, 2112, 7168);
+        let base = Schedule::summa(&arch, shape);
+        // Flipping any single field must change the key (Schedule::name
+        // elides defaults like the reduce policy; the cache key may not).
+        let variants = [
+            Schedule { dataflow: Dataflow::Systolic, ..base.clone() },
+            Schedule { logical: (16, 64), ..base.clone() },
+            Schedule { tk: base.tk + 64, ..base.clone() },
+            Schedule { pipeline_stages: 2, ..base.clone() },
+            Schedule { double_buffer: !base.double_buffer, ..base.clone() },
+            Schedule { opt_layout: !base.opt_layout, ..base.clone() },
+            Schedule { reduce_policy: ReducePolicy::FirstGroup, ..base.clone() },
+        ];
+        for v in &variants {
+            assert_ne!(v.cache_key(), base.cache_key(), "{}", v.cache_key());
+        }
+        assert_eq!(base.cache_key(), base.clone().cache_key());
+        // The whole candidate space for a shape maps to distinct keys.
+        let mut keys: Vec<String> =
+            candidates(&arch, shape).iter().map(Schedule::cache_key).collect();
+        let n = keys.len();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), n, "candidate cache keys must be unique");
     }
 
     #[test]

@@ -29,6 +29,7 @@ use crate::arch::ArchConfig;
 use crate::collective::{Mask, TileCoord};
 use crate::ir::{Deployment, Op};
 use crate::layout::Run;
+use crate::util::json::Json;
 
 /// Matrix-engine execution time for one `m×n×k` MMAD, in ns.
 ///
@@ -197,6 +198,80 @@ impl RunStats {
     /// FLOPs — the energy model's compute term.
     pub fn macs(&self) -> f64 {
         self.total_flops / 2.0
+    }
+
+    /// Serialize for the persistent simulation cache
+    /// ([`crate::coordinator::cache`]). The rendering is **lossless**:
+    /// f64 fields go through the shortest-roundtrip float formatter and
+    /// the `u64` byte counters through the exact integer representation
+    /// ([`crate::util::json::Json::Int`]), so
+    /// [`RunStats::from_json`] reproduces this value bit for bit — the
+    /// property that makes a resumed sweep identical to a cold one.
+    pub fn to_json(&self) -> Json {
+        let mut steps = Json::arr();
+        for s in &self.step_end_ns {
+            steps = steps.push(*s);
+        }
+        Json::obj()
+            .field("makespan_ns", self.makespan_ns)
+            .field("useful_flops", self.useful_flops)
+            .field("total_flops", self.total_flops)
+            .field("hbm_read_bytes", self.hbm_read_bytes)
+            .field("hbm_write_bytes", self.hbm_write_bytes)
+            .field("noc_link_bytes", self.noc_link_bytes)
+            .field("spm_bytes", self.spm_bytes)
+            .field("peak_tflops", self.peak_tflops)
+            .field("hbm_peak_gbps", self.hbm_peak_gbps)
+            .field("supersteps", self.supersteps)
+            .field("compute_busy_ns", self.compute_busy_ns)
+            .field("num_tiles", self.num_tiles)
+            .field("step_end_ns", steps)
+    }
+
+    /// Inverse of [`RunStats::to_json`]. Any missing or mistyped field is
+    /// an error (callers degrade to a cache miss) — never a panic and
+    /// never a silently defaulted value.
+    pub fn from_json(j: &Json) -> anyhow::Result<RunStats> {
+        let f64_field = |key: &str| -> anyhow::Result<f64> {
+            j.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("RunStats field {key:?} missing or not a number"))
+        };
+        let u64_field = |key: &str| -> anyhow::Result<u64> {
+            j.get(key)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow::anyhow!("RunStats field {key:?} missing or not exact u64"))
+        };
+        let usize_field = |key: &str| -> anyhow::Result<usize> {
+            let v = u64_field(key)?;
+            usize::try_from(v)
+                .map_err(|_| anyhow::anyhow!("RunStats field {key:?} out of usize range"))
+        };
+        let steps = j
+            .get("step_end_ns")
+            .and_then(Json::items)
+            .ok_or_else(|| anyhow::anyhow!("RunStats field \"step_end_ns\" missing"))?;
+        let mut step_end_ns = Vec::with_capacity(steps.len());
+        for s in steps {
+            step_end_ns.push(
+                s.as_f64().ok_or_else(|| anyhow::anyhow!("non-numeric step_end_ns entry"))?,
+            );
+        }
+        Ok(RunStats {
+            makespan_ns: f64_field("makespan_ns")?,
+            useful_flops: f64_field("useful_flops")?,
+            total_flops: f64_field("total_flops")?,
+            hbm_read_bytes: u64_field("hbm_read_bytes")?,
+            hbm_write_bytes: u64_field("hbm_write_bytes")?,
+            noc_link_bytes: u64_field("noc_link_bytes")?,
+            spm_bytes: u64_field("spm_bytes")?,
+            peak_tflops: f64_field("peak_tflops")?,
+            hbm_peak_gbps: f64_field("hbm_peak_gbps")?,
+            supersteps: usize_field("supersteps")?,
+            compute_busy_ns: f64_field("compute_busy_ns")?,
+            num_tiles: usize_field("num_tiles")?,
+            step_end_ns,
+        })
     }
 }
 
@@ -543,6 +618,53 @@ mod tests {
             stats.hbm_read_bytes + stats.hbm_write_bytes
         );
         assert!((stats.macs() - stats.total_flops / 2.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn runstats_json_roundtrip_is_bit_identical() {
+        let arch = ArchConfig::tiny(4, 4);
+        let shape = GemmShape::new(128, 96, 256);
+        let stats = run(&arch, shape, &Schedule::summa(&arch, shape));
+        let text = stats.to_json().render();
+        let back = RunStats::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.makespan_ns.to_bits(), stats.makespan_ns.to_bits());
+        assert_eq!(back.useful_flops.to_bits(), stats.useful_flops.to_bits());
+        assert_eq!(back.total_flops.to_bits(), stats.total_flops.to_bits());
+        assert_eq!(back.hbm_read_bytes, stats.hbm_read_bytes);
+        assert_eq!(back.hbm_write_bytes, stats.hbm_write_bytes);
+        assert_eq!(back.noc_link_bytes, stats.noc_link_bytes);
+        assert_eq!(back.spm_bytes, stats.spm_bytes);
+        assert_eq!(back.peak_tflops.to_bits(), stats.peak_tflops.to_bits());
+        assert_eq!(back.hbm_peak_gbps.to_bits(), stats.hbm_peak_gbps.to_bits());
+        assert_eq!(back.supersteps, stats.supersteps);
+        assert_eq!(back.compute_busy_ns.to_bits(), stats.compute_busy_ns.to_bits());
+        assert_eq!(back.num_tiles, stats.num_tiles);
+        assert_eq!(back.step_end_ns.len(), stats.step_end_ns.len());
+        for (a, b) in back.step_end_ns.iter().zip(&stats.step_end_ns) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Counters above 2^53 survive exactly (the util::json Int path).
+        let mut big = stats.clone();
+        big.spm_bytes = (1 << 53) + 1;
+        big.hbm_read_bytes = u64::MAX;
+        let back = RunStats::from_json(&Json::parse(&big.to_json().render()).unwrap()).unwrap();
+        assert_eq!(back.spm_bytes, (1 << 53) + 1);
+        assert_eq!(back.hbm_read_bytes, u64::MAX);
+    }
+
+    #[test]
+    fn runstats_from_json_rejects_malformed_documents() {
+        let arch = ArchConfig::tiny(2, 2);
+        let shape = GemmShape::new(64, 64, 64);
+        let stats = run(&arch, shape, &Schedule::summa(&arch, shape));
+        let good = stats.to_json();
+        assert!(RunStats::from_json(&good).is_ok());
+        assert!(RunStats::from_json(&Json::Null).is_err(), "not an object");
+        assert!(RunStats::from_json(&Json::obj()).is_err(), "missing fields");
+        // A counter stored as a non-integer is rejected, not truncated.
+        let bad = Json::parse(&good.render().replace("\"spm_bytes\":", "\"spm_bytes\":0.5,\"x\":"))
+            .unwrap();
+        assert!(RunStats::from_json(&bad).is_err(), "non-integer counter");
     }
 
     #[test]

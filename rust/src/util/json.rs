@@ -8,14 +8,50 @@
 use std::fmt::Write as _;
 
 /// A JSON value under construction.
-#[derive(Debug, Clone, PartialEq)]
+///
+/// Numbers have two representations: [`Json::Num`] (f64) for measured /
+/// derived quantities, and [`Json::Int`] (i128) for counters that must
+/// round-trip **exactly**. An f64 only has 53 mantissa bits, so a `u64`
+/// byte counter above 2^53 stored as `Num` silently loses its low bits —
+/// the persistent simulation cache carries such counters, so integer
+/// sources (`u64`/`i64`/`usize` conversions, integer-syntax parse input)
+/// land in `Int` and keep full fidelity. The two kinds still compare
+/// equal when they denote exactly the same value (`Int(42) == Num(42.0)`)
+/// so existing callers that mix them keep working.
+#[derive(Debug, Clone)]
 pub enum Json {
     Null,
     Bool(bool),
     Num(f64),
+    Int(i128),
     Str(String),
     Arr(Vec<Json>),
     Obj(Vec<(String, Json)>),
+}
+
+impl PartialEq for Json {
+    fn eq(&self, other: &Json) -> bool {
+        match (self, other) {
+            (Json::Null, Json::Null) => true,
+            (Json::Bool(a), Json::Bool(b)) => a == b,
+            (Json::Num(a), Json::Num(b)) => a == b,
+            (Json::Int(a), Json::Int(b)) => a == b,
+            // Cross-representation: equal only when the integer is
+            // *exactly* the float's value (the round-trip check rejects
+            // integers an f64 cannot represent, e.g. 2^53 + 1). The
+            // explicit range guard matters at the extreme: `f as i128`
+            // saturates, so without it Int(i128::MAX) would compare equal
+            // to any Num >= 2^127.
+            (Json::Num(f), Json::Int(i)) | (Json::Int(i), Json::Num(f)) => {
+                let lim = 2f64.powi(127); // i128 range is [-2^127, 2^127)
+                *i as f64 == *f && *f >= -lim && *f < lim && *i == *f as i128
+            }
+            (Json::Str(a), Json::Str(b)) => a == b,
+            (Json::Arr(a), Json::Arr(b)) => a == b,
+            (Json::Obj(a), Json::Obj(b)) => a == b,
+            _ => false,
+        }
+    }
 }
 
 impl Json {
@@ -63,9 +99,44 @@ impl Json {
         }
     }
 
+    /// Numeric view. Lossy for an `Int` above 2^53 (the f64 nearest to it
+    /// is returned); use [`Json::as_u64`] / [`Json::as_i64`] when the
+    /// exact value matters.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(v) => Some(*v),
+            Json::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    /// Exact unsigned-integer view: an `Int` in `u64` range, or a `Num`
+    /// whose value is a non-negative whole number (every integral f64 is
+    /// exact for the value it actually holds). `None` otherwise — never a
+    /// silently truncated value.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Int(v) => u64::try_from(*v).ok(),
+            Json::Num(v)
+                if v.fract() == 0.0 && *v >= 0.0 && *v < 18_446_744_073_709_551_616.0 =>
+            {
+                Some(*v as u64)
+            }
+            _ => None,
+        }
+    }
+
+    /// Exact signed-integer view (see [`Json::as_u64`]).
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Json::Int(v) => i64::try_from(*v).ok(),
+            Json::Num(v)
+                if v.fract() == 0.0
+                    && *v >= -9_223_372_036_854_775_808.0
+                    && *v < 9_223_372_036_854_775_808.0 =>
+            {
+                Some(*v as i64)
+            }
             _ => None,
         }
     }
@@ -85,8 +156,10 @@ impl Json {
     }
 
     /// Parse a JSON document (the subset this writer emits, which is plain
-    /// standard JSON). Numbers become `f64`; `\uXXXX` escapes are decoded
-    /// (surrogate pairs included). Trailing non-whitespace is an error.
+    /// standard JSON). Numbers with integer syntax (no `.`/`e`/`E`)
+    /// become exact [`Json::Int`] values; everything else becomes `f64`.
+    /// `\uXXXX` escapes are decoded (surrogate pairs included). Trailing
+    /// non-whitespace is an error.
     pub fn parse(text: &str) -> Result<Json, JsonParseError> {
         let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
         p.skip_ws();
@@ -129,11 +202,17 @@ impl Json {
                     if *v == v.trunc() && v.abs() < 1e15 {
                         let _ = write!(out, "{}", *v as i64);
                     } else {
+                        // Rust's float Display is the shortest string that
+                        // round-trips to the same bits, so Num survives a
+                        // render/parse cycle exactly.
                         let _ = write!(out, "{v}");
                     }
                 } else {
                     out.push_str("null"); // JSON has no NaN/Inf
                 }
+            }
+            Json::Int(v) => {
+                let _ = write!(out, "{v}");
             }
             Json::Str(s) => {
                 out.push('"');
@@ -204,17 +283,17 @@ impl From<f64> for Json {
 }
 impl From<usize> for Json {
     fn from(v: usize) -> Json {
-        Json::Num(v as f64)
+        Json::Int(v as i128)
     }
 }
 impl From<u64> for Json {
     fn from(v: u64) -> Json {
-        Json::Num(v as f64)
+        Json::Int(v as i128)
     }
 }
 impl From<i64> for Json {
     fn from(v: i64) -> Json {
-        Json::Num(v as f64)
+        Json::Int(v as i128)
     }
 }
 impl From<bool> for Json {
@@ -302,14 +381,25 @@ impl Parser<'_> {
 
     fn number(&mut self) -> Result<Json, JsonParseError> {
         let start = self.pos;
+        let mut float_syntax = false;
         while let Some(c) = self.peek() {
             if c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E') {
+                if matches!(c, b'.' | b'e' | b'E') {
+                    float_syntax = true;
+                }
                 self.pos += 1;
             } else {
                 break;
             }
         }
         let s = std::str::from_utf8(&self.bytes[start..self.pos]).expect("ascii slice");
+        if !float_syntax {
+            // Integer syntax parses exactly (u64 counters above 2^53 must
+            // not round); anything beyond i128 falls through to f64.
+            if let Ok(v) = s.parse::<i128>() {
+                return Ok(Json::Int(v));
+            }
+        }
         s.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| JsonParseError { offset: start, msg: format!("bad number {s:?}") })
@@ -500,6 +590,69 @@ mod tests {
         assert_eq!(Json::parse("42").unwrap(), Json::Num(42.0));
         assert_eq!(Json::parse("-1.5e3").unwrap(), Json::Num(-1500.0));
         assert_eq!(Json::parse(r#""hi""#).unwrap(), Json::Str("hi".into()));
+        // Integer syntax lands in the exact representation; float syntax
+        // (even with a whole value) stays f64.
+        assert!(matches!(Json::parse("42").unwrap(), Json::Int(42)));
+        assert!(matches!(Json::parse("-7").unwrap(), Json::Int(-7)));
+        assert!(matches!(Json::parse("42.0").unwrap(), Json::Num(_)));
+        assert!(matches!(Json::parse("1e3").unwrap(), Json::Num(_)));
+    }
+
+    #[test]
+    fn cross_representation_equality_is_exact() {
+        assert_eq!(Json::Int(42), Json::Num(42.0));
+        assert_eq!(Json::Num(42.0), Json::Int(42));
+        assert_ne!(Json::Int(42), Json::Num(42.5));
+        // 2^53 + 1 is NOT representable as f64: the nearest float is 2^53,
+        // and equality must not pretend otherwise.
+        assert_ne!(Json::Int(9_007_199_254_740_993), Json::Num(9_007_199_254_740_992.0));
+        assert_eq!(Json::Int(9_007_199_254_740_992), Json::Num(9_007_199_254_740_992.0));
+        // At the i128 boundary the saturating float->int cast must not
+        // fake equality: 2^127 is outside i128 range, so Int(i128::MAX)
+        // equals no float at all.
+        assert_ne!(Json::Int(i128::MAX), Json::Num(2f64.powi(127)));
+        assert_ne!(Json::Int(i128::MAX), Json::Num(f64::INFINITY));
+        assert_eq!(Json::Int(i128::MIN), Json::Num(-(2f64.powi(127))), "-2^127 is exact");
+    }
+
+    #[test]
+    fn u64_counters_roundtrip_exactly_at_the_2_53_boundary() {
+        // Regression: these used to go through f64, so 2^53 + 1 silently
+        // collapsed to 2^53 on a render/parse cycle — fatal for the
+        // persistent cache's byte counters.
+        let boundary: u64 = 1 << 53;
+        for v in [boundary - 1, boundary, boundary + 1, u64::MAX] {
+            let j = Json::from(v);
+            let back = Json::parse(&j.render()).unwrap();
+            assert_eq!(back.as_u64(), Some(v), "{v}");
+            let pretty = Json::parse(&Json::obj().field("v", v).pretty()).unwrap();
+            assert_eq!(pretty.get("v").and_then(Json::as_u64), Some(v), "{v}");
+        }
+        assert_eq!(Json::parse("9007199254740993").unwrap().as_u64(), Some(9_007_199_254_740_993));
+        assert_eq!(Json::parse("18446744073709551615").unwrap().as_u64(), Some(u64::MAX));
+        // Signed boundary values survive too.
+        for v in [i64::MIN, -(1 << 53) - 1, i64::MAX] {
+            let back = Json::parse(&Json::from(v).render()).unwrap();
+            assert_eq!(back.as_i64(), Some(v), "{v}");
+        }
+    }
+
+    #[test]
+    fn exact_accessors_refuse_lossy_reads() {
+        // A huge Num holds an integral value (every f64 >= 2^52 is whole),
+        // so the exact accessors accept it for the value it holds...
+        assert_eq!(Json::Num(9_007_199_254_740_992.0).as_u64(), Some(1 << 53));
+        // ...but reject non-integers, negatives (for u64), and
+        // out-of-range values instead of truncating.
+        assert_eq!(Json::Num(1.5).as_u64(), None);
+        assert_eq!(Json::Num(-1.0).as_u64(), None);
+        assert_eq!(Json::Int(-1).as_u64(), None);
+        assert_eq!(Json::Int(i128::from(u64::MAX) + 1).as_u64(), None);
+        assert_eq!(Json::Int(i128::from(i64::MAX) + 1).as_i64(), None);
+        assert_eq!(Json::Num(f64::NAN).as_u64(), None);
+        assert_eq!(Json::Num(f64::INFINITY).as_i64(), None);
+        // as_f64 stays available as the (possibly lossy) numeric view.
+        assert_eq!(Json::Int(3).as_f64(), Some(3.0));
     }
 
     #[test]
@@ -550,5 +703,7 @@ mod tests {
         assert!(Json::Bool(true).as_f64().is_none());
         assert!(Json::Num(1.0).as_str().is_none());
         assert_eq!(Json::Bool(false).as_bool(), Some(false));
+        assert!(Json::Str("7".into()).as_u64().is_none());
+        assert!(Json::Null.as_i64().is_none());
     }
 }

@@ -35,6 +35,27 @@ pub fn log2(x: usize) -> u32 {
     x.trailing_zeros()
 }
 
+/// 64-bit FNV-1a over a byte string.
+///
+/// The algorithm is fixed by specification (offset basis
+/// `0xcbf29ce484222325`, prime `0x100000001b3`), so the digest is
+/// identical on every platform, Rust release, and process run — unlike
+/// `std::collections::hash_map::DefaultHasher`, whose algorithm is
+/// explicitly unspecified and may change between Rust versions. Anything
+/// persisted to disk (the simulation cache key's architecture
+/// fingerprint) must hash through this, never through `DefaultHasher`.
+#[inline]
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    const OFFSET_BASIS: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET_BASIS;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
 /// Pretty-print a byte count (`1.5 MiB` style).
 pub fn human_bytes(b: u64) -> String {
     const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
@@ -91,6 +112,23 @@ mod tests {
         assert!(!is_pow2(66));
         assert_eq!(log2(1), 0);
         assert_eq!(log2(32), 5);
+    }
+
+    #[test]
+    fn fnv1a64_known_answer_vectors() {
+        // Standard FNV-1a 64-bit test vectors (draft-eastlake-fnv): the
+        // digest is pinned by specification, so these values must hold on
+        // every platform and Rust release — that is the whole point of
+        // using FNV for the on-disk cache key.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn fnv1a64_distinguishes_and_repeats() {
+        assert_ne!(fnv1a64(b"rows = 4"), fnv1a64(b"rows = 2"));
+        assert_eq!(fnv1a64(b"rows = 4"), fnv1a64(b"rows = 4"));
     }
 
     #[test]

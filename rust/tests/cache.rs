@@ -1,0 +1,365 @@
+//! Persistent simulation-cache acceptance tests.
+//!
+//! Two properties carry the whole feature:
+//!
+//! * **corruption tolerance** — a truncated file, a wrong or unparseable
+//!   header, binary junk, a foreign architecture fingerprint, or stray
+//!   concurrent-writer temp files all degrade to a (partial) cold start
+//!   with a recorded warning. Never an error, never a panic, never a
+//!   wrong result.
+//! * **resume determinism** — a sweep killed mid-run and resumed with
+//!   `--cache` produces a bit-identical `DseResult` to a cold sweep
+//!   while re-simulating only the unfinished configs.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use dit::arch::workload::Workload;
+use dit::arch::{ArchConfig, GemmShape};
+use dit::coordinator::cache::{DiskCache, DiskKey, FORMAT, VERSION};
+use dit::coordinator::engine::{arch_fingerprint, Engine};
+use dit::dse::{self, DseOptions, DseResult, SweepSpec};
+
+static SEQ: AtomicUsize = AtomicUsize::new(0);
+
+/// A unique temp path per call (tests run concurrently in one process).
+fn temp_cache(tag: &str) -> PathBuf {
+    let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!(
+        "dit-cache-it-{tag}-{}-{seq}.jsonl",
+        std::process::id()
+    ))
+}
+
+fn tiny_spec() -> SweepSpec {
+    SweepSpec {
+        name: "cache-test".into(),
+        mesh: vec![2, 3],
+        ce: vec![(16, 8)],
+        spm_kib: vec![128, 256],
+        hbm_channel_gbps: vec![32.0],
+        hbm_channels_pct: vec![100],
+        dma_engines: vec![2],
+        base: ArchConfig::tiny(4, 4),
+    }
+}
+
+fn tiny_workload() -> Workload {
+    let mut w = Workload::new("cache-test");
+    w.push("square", GemmShape::new(64, 64, 64), 2);
+    w.push("flat", GemmShape::new(16, 128, 128), 1);
+    w
+}
+
+fn opts(cache: Option<&PathBuf>) -> DseOptions {
+    DseOptions {
+        workers: 2,
+        config_parallelism: 3,
+        cache_path: cache.cloned(),
+        ..DseOptions::default()
+    }
+}
+
+/// Every determinism-relevant field of two sweep results must agree, bit
+/// for bit. (`elapsed_ms` is wall clock and deliberately excluded.)
+fn assert_bit_identical(a: &DseResult, b: &DseResult) {
+    assert_eq!(a.points.len(), b.points.len());
+    for (x, y) in a.points.iter().zip(&b.points) {
+        assert_eq!(x.arch.name, y.arch.name);
+        assert_eq!(x.cost.to_bits(), y.cost.to_bits(), "{}", x.arch.name);
+        assert_eq!(x.tflops.to_bits(), y.tflops.to_bits(), "{}", x.arch.name);
+        assert_eq!(x.energy_j.to_bits(), y.energy_j.to_bits(), "{}", x.arch.name);
+        assert_eq!(x.tflops_per_w.to_bits(), y.tflops_per_w.to_bits(), "{}", x.arch.name);
+        assert_eq!(x.on_frontier, y.on_frontier, "{}", x.arch.name);
+        assert_eq!(x.on_frontier3, y.on_frontier3, "{}", x.arch.name);
+        assert_eq!(
+            x.report.total_time_ns().to_bits(),
+            y.report.total_time_ns().to_bits(),
+            "{}",
+            x.arch.name
+        );
+    }
+    let pa: Vec<_> = a.pruned.iter().map(|p| p.name.clone()).collect();
+    let pb: Vec<_> = b.pruned.iter().map(|p| p.name.clone()).collect();
+    assert_eq!(pa, pb, "prune decisions must match");
+    assert_eq!(a.infeasible, b.infeasible);
+}
+
+/// Acceptance: a sweep killed mid-run resumes from its checkpoint with a
+/// bit-identical result, re-simulating only what the checkpoint misses.
+///
+/// The "kill" is simulated faithfully: the engine checkpoints the cache
+/// file atomically after every evaluated config, so a killed run leaves
+/// a file holding a subset of the final entries — which is exactly what
+/// keeping a prefix of the completed file's entry lines reconstructs.
+#[test]
+fn killed_sweep_resumes_bit_identical_with_disk_hits() {
+    let full = temp_cache("resume-full");
+    let partial = temp_cache("resume-partial");
+    let spec = tiny_spec();
+    let w = tiny_workload();
+
+    // Reference cold sweep (no cache involved at all).
+    let cold = dse::run_sweep(&spec, &w, &opts(None)).unwrap();
+
+    // A complete cached run, from which we reconstruct the checkpoint a
+    // mid-run kill would have left behind: header + half the entries.
+    let done = dse::run_sweep(&spec, &w, &opts(Some(&full))).unwrap();
+    assert_eq!(done.disk_hits, 0, "first cached run starts cold");
+    assert_bit_identical(&cold, &done);
+    let text = std::fs::read_to_string(&full).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert!(lines.len() > 3, "sweep must persist several entries");
+    let keep = 1 + (lines.len() - 1) / 2;
+    let mut prefix = lines[..keep].join("\n");
+    prefix.push('\n');
+    std::fs::write(&partial, prefix).unwrap();
+
+    // Resume from the partial checkpoint.
+    let resumed = dse::run_sweep(&spec, &w, &opts(Some(&partial))).unwrap();
+    assert_eq!(resumed.disk_loaded, keep - 1, "checkpoint entries preloaded");
+    assert!(resumed.disk_hits >= 1, "resume must hit the disk cache");
+    assert!(
+        resumed.sim_calls < cold.sim_calls,
+        "resume re-simulates only the unfinished part ({} vs {})",
+        resumed.sim_calls,
+        cold.sim_calls
+    );
+    assert_eq!(
+        resumed.sim_calls + resumed.disk_hits,
+        cold.sim_calls,
+        "every candidate is either resumed from disk or re-simulated"
+    );
+    assert_bit_identical(&cold, &resumed);
+
+    // And a fully-warm third run simulates nothing at all.
+    let warm = dse::run_sweep(&spec, &w, &opts(Some(&full))).unwrap();
+    assert_eq!(warm.sim_calls, 0, "complete checkpoint serves everything");
+    assert!(warm.disk_hits > 0);
+    assert_bit_identical(&cold, &warm);
+
+    let _ = std::fs::remove_file(&full);
+    let _ = std::fs::remove_file(&partial);
+}
+
+/// A refined sweep (extra axis values around the frontier) reuses every
+/// overlapping point from the coarse sweep's cache.
+#[test]
+fn refined_sweep_reuses_overlapping_points() {
+    let path = temp_cache("refine");
+    let w = tiny_workload();
+    let mut coarse = tiny_spec();
+    coarse.mesh = vec![2];
+    let first = dse::run_sweep(&coarse, &w, &opts(Some(&path))).unwrap();
+    assert!(first.sim_calls > 0);
+
+    let mut fine = tiny_spec();
+    fine.mesh = vec![2, 3]; // superset of the coarse sweep
+    let second = dse::run_sweep(&fine, &w, &opts(Some(&path))).unwrap();
+    let cold = dse::run_sweep(&fine, &w, &opts(None)).unwrap();
+    assert!(second.disk_hits > 0, "overlapping configs come from disk");
+    assert!(
+        second.sim_calls < cold.sim_calls,
+        "refinement must reuse the coarse sweep ({} vs {})",
+        second.sim_calls,
+        cold.sim_calls
+    );
+    assert_bit_identical(&cold, &second);
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Corruption suite: every damaged-file shape degrades to a cold start
+/// (or partial load) with a warning — opening never fails or panics, and
+/// a subsequent tuning run still produces correct results.
+#[test]
+fn corrupt_cache_files_degrade_to_cold_start() {
+    let arch = ArchConfig::tiny(2, 2);
+    let w = Workload::single("s", GemmShape::new(64, 64, 64));
+    let reference = Engine::new(&arch).tune_workload(&w).unwrap();
+
+    // Build one good cache file to mutate.
+    let good = temp_cache("corrupt-good");
+    Engine::new(&arch).with_cache(&good).tune_workload(&w).unwrap();
+    let good_text = std::fs::read_to_string(&good).unwrap();
+    let n_entries = good_text.lines().count() - 1;
+    assert!(n_entries >= 2, "need several entries to truncate meaningfully");
+
+    struct Case {
+        name: &'static str,
+        content: Vec<u8>,
+        expect_loaded: usize,
+        expect_warning: bool,
+    }
+    let cases = [
+        Case {
+            name: "truncated mid-entry",
+            content: {
+                // Cut the file in the middle of its final line.
+                let cut = good_text.trim_end().len() - 20;
+                good_text.as_bytes()[..cut].to_vec()
+            },
+            expect_loaded: n_entries - 1,
+            expect_warning: true,
+        },
+        Case {
+            name: "wrong version header",
+            content: good_text
+                .replacen(&format!("\"version\":{VERSION}"), "\"version\":999", 1)
+                .into_bytes(),
+            expect_loaded: 0,
+            expect_warning: true,
+        },
+        Case {
+            name: "foreign format header",
+            content: good_text.replacen(FORMAT, "someone-elses-cache", 1).into_bytes(),
+            expect_loaded: 0,
+            expect_warning: true,
+        },
+        Case {
+            name: "unparseable header",
+            content: b"ceci n'est pas du json\n".to_vec(),
+            expect_loaded: 0,
+            expect_warning: true,
+        },
+        Case {
+            name: "empty file",
+            content: Vec::new(),
+            expect_loaded: 0,
+            expect_warning: true,
+        },
+        Case {
+            name: "binary junk (invalid utf-8)",
+            content: vec![0xff, 0xfe, 0x00, 0x80, 0xff],
+            expect_loaded: 0,
+            expect_warning: true,
+        },
+        Case {
+            name: "garbled entry among good ones",
+            content: {
+                let mut lines: Vec<&str> = good_text.lines().collect();
+                lines.insert(2, "{\"fp\":\"zz-not-hex\",\"shape\":1}");
+                (lines.join("\n") + "\n").into_bytes()
+            },
+            expect_loaded: n_entries,
+            expect_warning: true,
+        },
+    ];
+
+    for case in cases {
+        let path = temp_cache("corrupt-case");
+        std::fs::write(&path, &case.content).unwrap();
+        let cache = DiskCache::open(&path);
+        assert_eq!(cache.loaded(), case.expect_loaded, "{}", case.name);
+        assert_eq!(
+            !cache.warnings().is_empty(),
+            case.expect_warning,
+            "{}: {:?}",
+            case.name,
+            cache.warnings()
+        );
+        // The engine still tunes correctly on top of the damaged file,
+        // re-simulating whatever was lost.
+        let engine = Engine::new(&arch).with_cache(&path);
+        let rep = engine.tune_workload(&w).unwrap();
+        assert_eq!(
+            rep.sim_calls + rep.disk_hits,
+            reference.sim_calls,
+            "{}: every candidate must be served or re-simulated",
+            case.name
+        );
+        assert_eq!(rep.disk_hits, case.expect_loaded, "{}", case.name);
+        assert_eq!(
+            rep.shapes[0].result.best().stats.makespan_ns.to_bits(),
+            reference.shapes[0].result.best().stats.makespan_ns.to_bits(),
+            "{}: results must match a cold run bit for bit",
+            case.name
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+    let _ = std::fs::remove_file(&good);
+}
+
+/// Entries for a different architecture (a "foreign" fingerprint) are
+/// simply misses — never mis-hits — because the fingerprint is part of
+/// the key. This is what makes the stable-hash bugfix load-bearing: with
+/// an unstable fingerprint the same entries would go from hits to misses
+/// (or worse) across toolchains.
+#[test]
+fn foreign_fingerprint_entries_never_mishit() {
+    let path = temp_cache("foreign");
+    let w = Workload::single("s", GemmShape::new(64, 64, 64));
+    let a22 = ArchConfig::tiny(2, 2);
+    let a44 = ArchConfig::tiny(4, 4);
+    Engine::new(&a22).with_cache(&path).tune_workload(&w).unwrap();
+
+    let engine = Engine::new(&a44).with_cache(&path);
+    assert!(engine.disk_loaded() > 0, "the foreign entries do load");
+    let rep = engine.tune_workload(&w).unwrap();
+    assert_eq!(rep.disk_hits, 0, "foreign-arch entries must not hit");
+    assert!(rep.sim_calls > 0, "everything re-simulates (cold start)");
+    // Both architectures' entries now coexist in one file.
+    let cache = DiskCache::open(&path);
+    let fps: Vec<u64> = cache.fingerprint_counts().iter().map(|(fp, _)| *fp).collect();
+    assert!(fps.contains(&arch_fingerprint(&a22)));
+    assert!(fps.contains(&arch_fingerprint(&a44)));
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Stray temp files from a concurrently-killed writer neither break
+/// loading nor leak: `clear` sweeps them up.
+#[test]
+fn concurrent_writer_temp_files_are_tolerated_and_cleared() {
+    let path = temp_cache("straytmp");
+    let arch = ArchConfig::tiny(2, 2);
+    let w = Workload::single("s", GemmShape::new(64, 64, 64));
+    Engine::new(&arch).with_cache(&path).tune_workload(&w).unwrap();
+
+    // A killed concurrent writer leaves half-written temp files beside
+    // the cache; loading must ignore them entirely.
+    let name = path.file_name().unwrap().to_string_lossy().into_owned();
+    let stray1 = path.with_file_name(format!("{name}.tmp.12345.0"));
+    let stray2 = path.with_file_name(format!("{name}.tmp.12345.1"));
+    std::fs::write(&stray1, "{\"format\":\"dit-sim-cache\",\"ver").unwrap();
+    std::fs::write(&stray2, [0xffu8, 0x00]).unwrap();
+
+    let engine = Engine::new(&arch).with_cache(&path);
+    assert!(engine.disk_loaded() > 0);
+    let rep = engine.tune_workload(&w).unwrap();
+    assert_eq!(rep.sim_calls, 0, "main file unaffected by stray temps");
+    assert!(rep.disk_hits > 0);
+
+    let (removed, temps) = DiskCache::clear(&path).unwrap();
+    assert!(removed);
+    assert_eq!(temps, 2, "both stray temp files swept");
+    assert!(!stray1.exists() && !stray2.exists());
+    let _ = std::fs::remove_file(&path);
+}
+
+/// The disk key is stable text end to end: fingerprints come from the
+/// specified FNV-1a (not the toolchain-dependent DefaultHasher), so an
+/// entry written today is addressable by any future build.
+#[test]
+fn disk_keys_are_stable_text() {
+    let path = temp_cache("stablekey");
+    let arch = ArchConfig::tiny(2, 2);
+    let w = Workload::single("s", GemmShape::new(64, 64, 64));
+    Engine::new(&arch).with_cache(&path).tune_workload(&w).unwrap();
+
+    let fp = arch_fingerprint(&arch);
+    assert_eq!(fp, dit::util::fnv1a64(arch.to_text().as_bytes()), "specified hash");
+    let text = std::fs::read_to_string(&path).unwrap();
+    let hex = format!("{fp:016x}");
+    assert!(
+        text.lines().skip(1).all(|l| l.contains(&hex)),
+        "every entry carries the canonical hex fingerprint"
+    );
+    assert!(text.contains("64x64x64"), "shape keys are MxNxK text");
+
+    // The cache also answers direct DiskKey lookups built from public,
+    // stable components (what an external tool would compute).
+    let cache = DiskCache::open(&path);
+    let sched = dit::schedule::Schedule::summa(&arch, GemmShape::new(64, 64, 64));
+    let key = DiskKey { arch_fp: fp, shape: "64x64x64".into(), sched: sched.cache_key() };
+    assert!(cache.get(&key).is_some(), "summa candidate addressable by stable key");
+    let _ = std::fs::remove_file(&path);
+}
