@@ -1,13 +1,13 @@
 //! Hardware design-space exploration as a library call.
 //!
-//! Sweeps three mesh sizes of the GH200-like template at two SPM
-//! capacities, co-tunes every candidate instance over the DSE serving
-//! suite on one shared engine/memo-cache, and prints the Pareto frontier
-//! of achieved TFLOP/s vs. the silicon-cost proxy — then re-reads the
-//! same result through the energy objective: the 3-axis
-//! (cost, TFLOP/s, energy) frontier, the TFLOP/s-per-Watt winner, and a
-//! weighted scalarization that collapses all three axes into one ranked
-//! choice.
+//! Sweeps square *and rectangular* mesh geometries of the GH200-like
+//! template at two SPM capacities, co-tunes every candidate instance
+//! over the DSE serving suite on one shared engine/memo-cache, and
+//! prints the Pareto frontier of achieved TFLOP/s vs. the silicon-cost
+//! proxy — then re-reads the same result through the energy objective:
+//! the 3-axis (cost, TFLOP/s, energy) frontier, the TFLOP/s-per-Watt
+//! winner, and a weighted scalarization that collapses all three axes
+//! into one ranked choice.
 //!
 //! Run with: `cargo run --release --example dse_sweep`
 
@@ -18,8 +18,13 @@ fn main() -> anyhow::Result<()> {
     let mut spec = SweepSpec::reduced();
     // Trim the mesh axis so the demo finishes in a few seconds; the full
     // reduced sweep (8..32, `dit dse --workload serving`) adds 24x24 and
-    // 32x32.
-    spec.mesh = vec![8, 12, 16];
+    // 32x32. Alongside the squares, sweep the wide-short and tall-narrow
+    // geometries of the same 64-tile budget as 8x8 — the shapes a
+    // floorplan with HBM stacks on two edges actually offers, and the
+    // ones skinny decode GEMMs favor (more columns = more N parallelism
+    // for the same silicon).
+    spec.meshes = SweepSpec::square_meshes(&[8, 12, 16]);
+    spec.meshes.extend([(4, 16), (16, 4)]);
 
     let workload = dse::suite("serving").expect("builtin DSE suite");
     // Asking for the energy objective disables the roofline prune (it
@@ -45,6 +50,21 @@ fn main() -> anyhow::Result<()> {
             100.0 * best.utilization(),
             best.arch.peak_tflops(),
             best.cost
+        );
+    }
+    // Same 64-tile compute, three geometries. Note this is a whole-
+    // machine comparison, not floorplan-shape in isolation: the HBM rule
+    // gives pct% of the *shorter* edge per edge, so at 100% the 4x16 and
+    // 16x4 instances carry 8 channels to the 8x8's 16 (visible in the
+    // cost column) — exactly the trade a two-edge floorplan imposes.
+    if let (Some(sq), Some(wide), Some(tall)) =
+        (res.best_at_square(8), res.best_at_mesh(4, 16), res.best_at_mesh(16, 4))
+    {
+        println!(
+            "64-tile machines: 8x8/16ch {:.1} | 4x16/8ch {:.1} | 16x4/8ch {:.1} TFLOP/s",
+            sq.tflops,
+            wide.tflops,
+            tall.tflops
         );
     }
 

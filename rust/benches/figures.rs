@@ -15,7 +15,8 @@
 //! | fig11  | flat GEMM HBM bandwidth utilization                        |
 //! | fig12  | portability: SoftHier-A100/GH200 vs the matching GPUs      |
 //! | workload | transformer serving-suite batched autotuning (engine)    |
-//! | dse    | hardware design-space sweep (TFLOPS-vs-cost Pareto front)  |
+//! | dse    | hardware design-space sweep (TFLOPS-vs-cost Pareto front,  |
+//! |        | square ladder + rectangular-mesh case)                     |
 //! | energy | energy-aware 3-axis DSE (perf/cost/energy frontier)        |
 //!
 //! Absolute numbers come from the analytical-contention SoftHier model and
@@ -602,7 +603,7 @@ fn dse_bench(r: &mut Recorder) {
     );
     println!("{}", dit::report::dse_counters(&res));
     // Is the Table 1-class 32x32 instance on/above the frontier? (1 = yes)
-    let on_or_above = match res.best_at_mesh(32) {
+    let on_or_above = match res.best_at_square(32) {
         Some(p) => res.on_or_above_frontier(p) as usize as f64,
         None => 0.0,
     };
@@ -616,6 +617,31 @@ fn dse_bench(r: &mut Recorder) {
         r.rec("dse", "disk_hits", res.disk_hits as f64, true);
         r.rec("dse", "sim_calls_with_cache", res.sim_calls as f64, false);
     }
+
+    // Rectangular-mesh case: the same serving suite over the wide-short
+    // and tall-narrow geometries the square axis cannot express, plus
+    // their square twin at twice the tile budget. Exhaustive (prune off)
+    // so the evaluated count is exactly the enumeration.
+    let mut rect_spec = SweepSpec::reduced();
+    rect_spec.name = "rect".into();
+    rect_spec.meshes = vec![(8, 16), (16, 8), (16, 16)];
+    rect_spec.spm_kib = vec![384];
+    let mut rect_opts = DseOptions { prune: false, ..DseOptions::default() };
+    if let Some(path) = DSE_CACHE.get() {
+        rect_opts.cache_path = Some(path.into());
+    }
+    let rect = dit::dse::run_sweep(&rect_spec, &w, &rect_opts).expect("rectangular dse sweep");
+    print!("\n{}", dit::report::dse_summary(&rect).markdown());
+    if let (Some(wide), Some(tall)) = (rect.best_at_mesh(8, 16), rect.best_at_mesh(16, 8)) {
+        println!(
+            "rect: 8x16 {:.1} TFLOP/s vs 16x8 {:.1} TFLOP/s at the same tile budget",
+            wide.tflops,
+            tall.tflops
+        );
+    }
+    r.rec("dse", "rect_evaluated", rect.points.len() as f64, true);
+    r.rec("dse", "rect_frontier_size", rect.frontier().len() as f64, true);
+    r.rec("dse", "rect_best_tflops", rect.best().map(|p| p.tflops).unwrap_or(0.0), true);
     println!("(a DSE sweep co-tunes every hardware candidate with the same engine the\n serving path uses — deployment and hardware are searched together)");
 }
 
@@ -665,7 +691,7 @@ fn energy_bench(r: &mut Recorder) {
     r.rec(
         "energy",
         "gh200_class_tflops_per_w",
-        res.best_at_mesh(32).map(|p| p.tflops_per_w).unwrap_or(0.0),
+        res.best_at_square(32).map(|p| p.tflops_per_w).unwrap_or(0.0),
         true,
     );
     println!("(the 3-axis sweep runs exhaustively — the roofline prune only bounds\n throughput, so it is disabled whenever energy is an objective)");

@@ -111,6 +111,10 @@ pub enum Edge {
 #[derive(Debug, Clone, PartialEq)]
 pub struct HbmSpec {
     /// Channels per edge; total = 2 × per_edge (west + south, Table 1).
+    /// On a rectangular grid the west edge spans `rows` routers and the
+    /// south edge `cols`; each edge hosts the same channel count, and a
+    /// count beyond an edge's length wraps onto its routers
+    /// ([`ArchConfig::hbm_router`]).
     pub channels_per_edge: usize,
     /// Per-channel bandwidth, bytes/ns (GB/s).
     pub channel_gbps: f64,
@@ -377,6 +381,23 @@ mod tests {
     #[should_panic(expected = "out of range")]
     fn hbm_router_rejects_bad_channel() {
         ArchConfig::gh200_like().hbm_router(64);
+    }
+
+    #[test]
+    fn hbm_router_placement_rectangular() {
+        // West channels walk column 0 over `rows` routers, south
+        // channels walk the bottom row over `cols`; each edge wraps at
+        // its own length, so a wide-short grid keeps every channel on a
+        // real router.
+        let mut a = ArchConfig::tiny(4, 8);
+        a.hbm.channels_per_edge = 8;
+        a.validate().unwrap();
+        assert_eq!(a.hbm.num_channels(), 16);
+        assert_eq!(a.hbm_router(0), TileCoord::new(0, 0));
+        assert_eq!(a.hbm_router(3), TileCoord::new(3, 0));
+        assert_eq!(a.hbm_router(4), TileCoord::new(0, 0), "west wraps at rows");
+        assert_eq!(a.hbm_router(8), TileCoord::new(3, 0), "first south channel");
+        assert_eq!(a.hbm_router(15), TileCoord::new(3, 7));
     }
 
     #[test]

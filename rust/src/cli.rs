@@ -153,9 +153,9 @@ COMMANDS:
               [--csv true] [--cache FILE]                transformer, tiny)
   dse         [--workload serving|prefill|decode|tiny]  hardware design-space sweep:
               [--spec FILE] [--full true]               co-tune every config, print the
-              [--base PRESET] [--mesh 8,16,32]          Pareto frontier over the chosen
-              [--spm 256,384] [--workers N] [--wave N]  objectives
-              [--prune bool] [--csv true] [--json FILE]
+              [--base PRESET] [--mesh 8,16x4,4x16]      Pareto frontier over the chosen
+              [--spm 256,384] [--workers N] [--wave N]  objectives (RxC = rectangular
+              [--prune bool] [--csv true] [--json FILE]  mesh, N = square sugar)
               [--objectives perf,cost,energy]           3-axis frontier + projections
               [--weights 0.5,0.3,0.2]                   scalarized single winner
               [--energy-coeffs FILE]                    pJ table ([energy] section)
@@ -423,28 +423,45 @@ fn cmd_dse(args: &Args) -> Result<()> {
         spec.spm_kib = vec![base.tile.l1_bytes / 1024];
         spec.hbm_channel_gbps = vec![base.hbm.channel_gbps];
         // Preserve the base machine's channel population relative to its
-        // own mesh edge (presets have channels_per_edge == rows, i.e.
-        // 100%, but a custom config may be sparser).
+        // own shorter mesh edge — the inverse of the sweep's derivation
+        // rule (`SweepSpec::hbm_channels_per_edge`), round-to-nearest.
+        // Presets have channels_per_edge == rows == cols, i.e. 100%, but
+        // a custom config may be sparser or rectangular.
+        let edge = base.rows.min(base.cols).max(1);
         spec.hbm_channels_pct =
-            vec![(base.hbm.channels_per_edge * 100 / base.rows.max(1)).max(1)];
+            vec![((base.hbm.channels_per_edge * 100 + edge / 2) / edge).max(1)];
         spec.dma_engines = vec![base.tile.dma_engines];
         spec.base = base;
     }
-    let parse_list = |flag: &str| -> Result<Option<Vec<usize>>> {
-        match args.get(flag) {
-            None => Ok(None),
-            Some(list) => list
-                .split(',')
-                .map(|s| s.trim().parse::<usize>().with_context(|| format!("--{flag}")))
-                .collect::<Result<Vec<usize>>>()
-                .map(Some),
+    // --mesh accepts a comma list mixing square sugar and explicit
+    // geometries: `8` is 8x8, `16x4` is 16 rows x 4 columns. Zero
+    // dimensions are rejected here (matching the spec-file parser) —
+    // enumerate() silently drops validate() failures, so a `0x4` typo
+    // would otherwise vanish from the sweep without a diagnostic.
+    if let Some(list) = args.get("mesh") {
+        let mut meshes = Vec::new();
+        for tok in list.split(',') {
+            let tok = tok.trim();
+            let (rows, cols) = match tok.split_once('x') {
+                Some((r, c)) => (
+                    r.trim().parse::<usize>().with_context(|| format!("--mesh rows in {tok:?}"))?,
+                    c.trim().parse::<usize>().with_context(|| format!("--mesh cols in {tok:?}"))?,
+                ),
+                None => {
+                    let n = tok.parse::<usize>().with_context(|| format!("--mesh {tok:?}"))?;
+                    (n, n)
+                }
+            };
+            anyhow::ensure!(rows > 0 && cols > 0, "--mesh {tok:?}: dimensions must be positive");
+            meshes.push((rows, cols));
         }
-    };
-    if let Some(mesh) = parse_list("mesh")? {
-        spec.mesh = mesh;
+        spec.meshes = meshes;
     }
-    if let Some(spm) = parse_list("spm")? {
-        spec.spm_kib = spm;
+    if let Some(list) = args.get("spm") {
+        spec.spm_kib = list
+            .split(',')
+            .map(|s| s.trim().parse::<usize>().context("--spm"))
+            .collect::<Result<Vec<usize>>>()?;
     }
 
     let suite_name = args.get_or("workload", "serving");
@@ -540,7 +557,7 @@ fn cmd_dse(args: &Args) -> Result<()> {
         }
     }
     // Read the Table 1-class instance against the frontier.
-    if let Some(p) = res.best_at_mesh(32) {
+    if let Some(p) = res.best_at_square(32) {
         println!(
             "32x32 class: {} achieves {:.1} TFLOP/s at cost {:.0}; frontier interpolation there is {:.1} -> {}",
             p.arch.name,
@@ -670,6 +687,22 @@ mod tests {
         assert!(run(&argv("dse --base tiny4 --mesh 0 --workload tiny")).is_err());
         assert!(run(&argv("dse --spec /no/such/file")).is_err());
         assert!(run(&argv("dse --base tiny4 --mesh x")).is_err());
+    }
+
+    #[test]
+    fn run_dse_rectangular_mesh_smoke() {
+        // RxC entries mix freely with square sugar in one --mesh list.
+        run(&argv("dse --base tiny4 --mesh 2x4,4x2,2 --workload tiny --wave 2 --workers 2"))
+            .unwrap();
+        run(&argv("dse --base tiny4 --mesh 2x4 --workload tiny --prune false")).unwrap();
+        // Malformed geometries error before any sweep runs.
+        assert!(run(&argv("dse --base tiny4 --mesh 4x --workload tiny")).is_err());
+        assert!(run(&argv("dse --base tiny4 --mesh x4 --workload tiny")).is_err());
+        assert!(run(&argv("dse --base tiny4 --mesh 2x2x2 --workload tiny")).is_err());
+        assert!(run(&argv("dse --base tiny4 --mesh 0x4 --workload tiny")).is_err());
+        // A zero-dimension typo must error even when mixed with valid
+        // entries — not silently shrink the sweep.
+        assert!(run(&argv("dse --base tiny4 --mesh 0x4,2 --workload tiny")).is_err());
     }
 
     #[test]

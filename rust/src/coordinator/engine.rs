@@ -462,6 +462,30 @@ mod tests {
     }
 
     #[test]
+    fn fingerprint_separates_mesh_geometries_with_equal_tile_counts() {
+        // 16x4, 4x16, and 8x8 instances with identical per-tile
+        // parameters share a tile count but are different machines: the
+        // canonical config text includes rows and cols, so their
+        // fingerprints — and therefore their disk-cache keys — differ
+        // even when every other field (including the name) matches.
+        let mk = |rows, cols| {
+            let mut a = ArchConfig::tiny(rows, cols);
+            a.name = "geom".into();
+            a.hbm.channels_per_edge = 4;
+            a
+        };
+        let fps = [
+            arch_fingerprint(&mk(16, 4)),
+            arch_fingerprint(&mk(4, 16)),
+            arch_fingerprint(&mk(8, 8)),
+        ];
+        assert_eq!(mk(16, 4).num_tiles(), mk(8, 8).num_tiles());
+        assert_ne!(fps[0], fps[1], "transposed mesh is a different machine");
+        assert_ne!(fps[0], fps[2], "rectangle must not alias its square twin");
+        assert_ne!(fps[1], fps[2]);
+    }
+
+    #[test]
     fn fingerprint_is_the_specified_stable_hash() {
         // The fingerprint keys on-disk cache entries, so it must be
         // exactly FNV-1a over the canonical config text — any other

@@ -177,16 +177,29 @@ impl CostModel {
 #[derive(Debug, Clone)]
 pub struct SweepSpec {
     pub name: String,
-    /// Square mesh dimensions (rows = cols).
-    pub mesh: Vec<usize>,
+    /// The swept mesh geometries as explicit `(rows, cols)` pairs.
+    /// Square points come from the `mesh` spec axis
+    /// ([`SweepSpec::square_meshes`] — `n` is sugar for `n × n`);
+    /// rectangular points from the `mesh_rows × mesh_cols` cross
+    /// product ([`SweepSpec::mesh_grid`], optionally filtered by a
+    /// maximum `aspect` ratio) or from explicit `RxC` CLI entries.
+    /// Duplicate pairs are kept — they tune from cache.
+    pub meshes: Vec<(usize, usize)>,
     /// CE-array shapes `(ce_m, ce_n)`.
     pub ce: Vec<(usize, usize)>,
     /// Per-tile SPM capacities, KiB.
     pub spm_kib: Vec<usize>,
     /// Per-channel HBM bandwidths, GB/s.
     pub hbm_channel_gbps: Vec<f64>,
-    /// HBM channel population as a percentage of the mesh edge:
-    /// `channels_per_edge = max(1, rows × pct / 100)`.
+    /// HBM channel population as a percentage of the mesh edge. The
+    /// derived per-edge count ([`SweepSpec::hbm_channels_per_edge`]) is
+    /// `pct`% of the **shorter** mesh edge, rounded to nearest (ties
+    /// up, minimum 1), and the same count populates *both* HBM edges —
+    /// west (column 0, one router per row, top to bottom) and south
+    /// (bottom row, one router per column), matching
+    /// [`ArchConfig::hbm_router`] — so at `pct <= 100` every channel
+    /// has a dedicated edge router even on rectangular grids. Counts
+    /// beyond an edge's length wrap onto its routers.
     pub hbm_channels_pct: Vec<usize>,
     /// DMA engines per tile.
     pub dma_engines: Vec<usize>,
@@ -195,6 +208,50 @@ pub struct SweepSpec {
 }
 
 impl SweepSpec {
+    /// The square `mesh` axis sugar: each `n` expands into the `n × n`
+    /// point — the diagonal, *not* a cross product, so a square-only
+    /// spec enumerates exactly the geometry points it always did. (The
+    /// per-point HBM channel count is bit-identical too except where
+    /// the round-to-nearest bugfix in
+    /// [`SweepSpec::hbm_channels_per_edge`] deliberately corrects the
+    /// old truncation — every built-in spec's `pct × edge` is an exact
+    /// multiple of 100, so the built-ins are unchanged.)
+    /// Use [`SweepSpec::mesh_grid`] for rectangular geometries.
+    pub fn square_meshes(ns: &[usize]) -> Vec<(usize, usize)> {
+        ns.iter().map(|&n| (n, n)).collect()
+    }
+
+    /// The `mesh_rows × mesh_cols` cross product in axis order, keeping
+    /// only the pairs whose long/short edge ratio is at most `aspect`
+    /// (`None` keeps everything; `Some(1.0)` reduces the cross product
+    /// to its square diagonal).
+    pub fn mesh_grid(rows: &[usize], cols: &[usize], aspect: Option<f64>) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        for &r in rows {
+            for &c in cols {
+                let keep = match aspect {
+                    None => true,
+                    Some(a) => r.max(c) as f64 <= a * r.min(c) as f64,
+                };
+                if keep {
+                    out.push((r, c));
+                }
+            }
+        }
+        out
+    }
+
+    /// HBM channels per edge for a mesh geometry at a population
+    /// percentage: `pct`% of the **shorter** mesh edge, rounded to
+    /// nearest (ties round up), never below 1. Deriving from the
+    /// shorter edge means the count — which populates both the west and
+    /// the south edge — never oversubscribes either edge at
+    /// `pct <= 100`. (The predecessor truncated toward zero, so e.g. a
+    /// 70%-populated 8-edge got 5 channels instead of the nearest 6.)
+    pub fn hbm_channels_per_edge(rows: usize, cols: usize, pct: usize) -> usize {
+        ((rows.min(cols) * pct + 50) / 100).max(1)
+    }
+
     /// The fast default sweep: five mesh sizes (8×8 → 32×32) at two SPM
     /// capacities around the GH200-like template. The 192 KiB point forces
     /// a shallower K-panel ladder than 384 KiB, so each mesh contributes a
@@ -205,7 +262,7 @@ impl SweepSpec {
     pub fn reduced() -> SweepSpec {
         SweepSpec {
             name: "reduced".into(),
-            mesh: vec![8, 12, 16, 24, 32],
+            meshes: SweepSpec::square_meshes(&[8, 12, 16, 24, 32]),
             ce: vec![(64, 16)],
             spm_kib: vec![192, 384],
             hbm_channel_gbps: vec![64.0],
@@ -220,7 +277,7 @@ impl SweepSpec {
     pub fn full() -> SweepSpec {
         SweepSpec {
             name: "full".into(),
-            mesh: vec![8, 12, 16, 24, 32],
+            meshes: SweepSpec::square_meshes(&[8, 12, 16, 24, 32]),
             ce: vec![(32, 16), (64, 16)],
             spm_kib: vec![256, 384, 512],
             hbm_channel_gbps: vec![48.0, 64.0],
@@ -239,7 +296,10 @@ impl SweepSpec {
     /// ```text
     /// [sweep]
     /// name = "mine"
-    /// mesh = [8, 16, 32]
+    /// mesh = [8, 16, 32]        # square sugar: n expands into n x n
+    /// mesh_rows = [4, 8, 16]    # rectangular axes: the rows x cols
+    /// mesh_cols = [8, 16, 32]   # cross product joins the mesh points
+    /// aspect = 4                # optional: keep long/short edge <= 4
     /// ce_m = [64]
     /// ce_n = [16]
     /// spm_kib = [256, 384]
@@ -254,19 +314,53 @@ impl SweepSpec {
         if let Some(name) = doc.get_str("sweep", "name") {
             spec.name = name.to_string();
         }
-        let usize_list = |key: &str, dflt: &[usize]| -> Result<Vec<usize>> {
+        let opt_usize_list = |key: &str| -> Result<Option<Vec<usize>>> {
             match doc.get("sweep", key) {
-                None => Ok(dflt.to_vec()),
-                Some(Value::Int(v)) if *v > 0 => Ok(vec![*v as usize]),
+                None => Ok(None),
+                Some(Value::Int(v)) if *v > 0 => Ok(Some(vec![*v as usize])),
                 Some(Value::IntList(vs)) if !vs.is_empty() && vs.iter().all(|v| *v > 0) => {
-                    Ok(vs.iter().map(|v| *v as usize).collect())
+                    Ok(Some(vs.iter().map(|v| *v as usize).collect()))
                 }
                 Some(other) => {
                     anyhow::bail!("sweep.{key} must be a positive int or int list, got {other}")
                 }
             }
         };
-        spec.mesh = usize_list("mesh", &spec.mesh.clone())?;
+        let usize_list = |key: &str, dflt: &[usize]| -> Result<Vec<usize>> {
+            Ok(opt_usize_list(key)?.unwrap_or_else(|| dflt.to_vec()))
+        };
+        // Mesh geometry: the square `mesh` axis expands each n into the
+        // n x n point; `mesh_rows`/`mesh_cols` span their cross product,
+        // optionally filtered by `aspect` (max long/short edge ratio).
+        // Any mesh key present replaces the default square ladder.
+        let mesh_sq = opt_usize_list("mesh")?;
+        let mesh_rows = opt_usize_list("mesh_rows")?;
+        let mesh_cols = opt_usize_list("mesh_cols")?;
+        anyhow::ensure!(
+            mesh_rows.is_some() == mesh_cols.is_some(),
+            "sweep.mesh_rows and sweep.mesh_cols must be given together"
+        );
+        let aspect = match doc.get("sweep", "aspect") {
+            None => None,
+            Some(Value::Float(v)) if *v >= 1.0 => Some(*v),
+            Some(Value::Int(v)) if *v >= 1 => Some(*v as f64),
+            Some(other) => anyhow::bail!("sweep.aspect must be a number >= 1, got {other}"),
+        };
+        anyhow::ensure!(
+            aspect.is_none() || mesh_rows.is_some(),
+            "sweep.aspect only filters the mesh_rows x mesh_cols cross product"
+        );
+        if mesh_sq.is_some() || mesh_rows.is_some() {
+            let mut meshes = SweepSpec::square_meshes(mesh_sq.as_deref().unwrap_or(&[]));
+            if let (Some(rows), Some(cols)) = (&mesh_rows, &mesh_cols) {
+                meshes.extend(SweepSpec::mesh_grid(rows, cols, aspect));
+            }
+            anyhow::ensure!(
+                !meshes.is_empty(),
+                "sweep mesh axes enumerate no geometry (aspect filter too strict?)"
+            );
+            spec.meshes = meshes;
+        }
         spec.spm_kib = usize_list("spm_kib", &spec.spm_kib.clone())?;
         spec.hbm_channels_pct = usize_list("hbm_channels_pct", &spec.hbm_channels_pct.clone())?;
         spec.dma_engines = usize_list("dma_engines", &spec.dma_engines.clone())?;
@@ -300,23 +394,24 @@ impl SweepSpec {
     /// All valid architecture instances this spec spans, in axis order.
     pub fn enumerate(&self) -> Vec<ArchConfig> {
         let mut out = Vec::new();
-        for &mesh in &self.mesh {
+        for &(rows, cols) in &self.meshes {
             for &(ce_m, ce_n) in &self.ce {
                 for &spm in &self.spm_kib {
                     for &gbps in &self.hbm_channel_gbps {
                         for &pct in &self.hbm_channels_pct {
                             for &dma in &self.dma_engines {
                                 let mut a = self.base.clone();
-                                a.rows = mesh;
-                                a.cols = mesh;
+                                a.rows = rows;
+                                a.cols = cols;
                                 a.tile.ce_m = ce_m;
                                 a.tile.ce_n = ce_n;
                                 a.tile.l1_bytes = spm * 1024;
                                 a.tile.dma_engines = dma;
                                 a.hbm.channel_gbps = gbps;
-                                a.hbm.channels_per_edge = (mesh * pct / 100).max(1);
+                                a.hbm.channels_per_edge =
+                                    SweepSpec::hbm_channels_per_edge(rows, cols, pct);
                                 a.name = format!(
-                                    "dse-{mesh}x{mesh}-ce{ce_m}x{ce_n}-spm{spm}k-hbm{}x{:.0}-dma{dma}",
+                                    "dse-{rows}x{cols}-ce{ce_m}x{ce_n}-spm{spm}k-hbm{}x{:.0}-dma{dma}",
                                     a.hbm.num_channels(),
                                     gbps
                                 );
@@ -551,13 +646,25 @@ impl DseResult {
         pareto::interpolate(&self.frontier_curve(), cost)
     }
 
-    /// The fastest evaluated point on an `n × n` mesh, if any — e.g. the
-    /// Table 1-class 32×32 instance the reduced sweep includes.
-    pub fn best_at_mesh(&self, n: usize) -> Option<&DsePoint> {
+    /// The fastest evaluated point on a `rows × cols` mesh, if any.
+    ///
+    /// Filters on the exact geometry: a 16×4 point never answers for
+    /// 4×16 or 8×8 (same tile count, different machine). The square-only
+    /// predecessor of this method compared both dimensions against one
+    /// `n`, silently returning `None` for every rectangular point;
+    /// [`DseResult::best_at_square`] keeps the old call shape.
+    pub fn best_at_mesh(&self, rows: usize, cols: usize) -> Option<&DsePoint> {
         self.points
             .iter()
-            .filter(|p| p.arch.rows == n && p.arch.cols == n)
+            .filter(|p| p.arch.rows == rows && p.arch.cols == cols)
             .reduce(|a, b| if b.tflops > a.tflops { b } else { a })
+    }
+
+    /// Square convenience wrapper around [`DseResult::best_at_mesh`]:
+    /// the fastest point on an `n × n` mesh — e.g. the Table 1-class
+    /// 32×32 instance the reduced sweep includes.
+    pub fn best_at_square(&self, n: usize) -> Option<&DsePoint> {
+        self.best_at_mesh(n, n)
     }
 
     /// Does `p` sit on or above the frontier's interpolation at its cost?
@@ -810,7 +917,7 @@ mod tests {
 [tile]\nclock_ghz = 1.0\n";
         let spec = SweepSpec::from_text(text).unwrap();
         assert_eq!(spec.name, "mine");
-        assert_eq!(spec.mesh, vec![2, 4]);
+        assert_eq!(spec.meshes, vec![(2, 2), (4, 4)], "square sugar expands the diagonal");
         assert_eq!(spec.ce, vec![(16, 8)]);
         assert_eq!(spec.spm_kib, vec![128], "scalar promotes to one-element list");
         // Unset axes fall back to the reduced defaults.
@@ -843,6 +950,80 @@ mod tests {
             SweepSpec::from_text("elem_bytes = 99\n").is_err(),
             "invalid base architecture rejected via ArchConfig::validate"
         );
+    }
+
+    #[test]
+    fn spec_text_rectangular_mesh_axes() {
+        let p = SweepSpec::from_text;
+        let spec = p("[sweep]\nmesh_rows = [8, 16]\nmesh_cols = [4, 8]\naspect = 2.0\n").unwrap();
+        assert_eq!(spec.meshes, vec![(8, 4), (8, 8), (16, 8)], "16x4 filtered by aspect 2");
+        // Square sugar and the cross product compose, sugar first.
+        let spec = p("[sweep]\nmesh = [32]\nmesh_rows = [4]\nmesh_cols = [16]\n").unwrap();
+        assert_eq!(spec.meshes, vec![(32, 32), (4, 16)]);
+        // An integer aspect parses too.
+        let spec = p("[sweep]\nmesh_rows = [4, 16]\nmesh_cols = [4, 16]\naspect = 1\n").unwrap();
+        assert_eq!(spec.meshes, vec![(4, 4), (16, 16)], "aspect 1 keeps the diagonal");
+        // One-sided axes, sub-1 aspect, aspect without the axes it
+        // filters, and a filter that empties the axis are all rejected.
+        assert!(p("[sweep]\nmesh_rows = [8]\n").is_err());
+        assert!(p("[sweep]\nmesh_cols = [8]\n").is_err());
+        assert!(p("[sweep]\nmesh_rows = [8]\nmesh_cols = [8]\naspect = 0.5\n").is_err());
+        assert!(p("[sweep]\naspect = 2.0\n").is_err());
+        assert!(p("[sweep]\nmesh_rows = [16]\nmesh_cols = [2]\naspect = 2.0\n").is_err());
+    }
+
+    #[test]
+    fn mesh_grid_cross_product_and_aspect_filter() {
+        assert_eq!(SweepSpec::square_meshes(&[2, 4]), vec![(2, 2), (4, 4)]);
+        assert_eq!(
+            SweepSpec::mesh_grid(&[8, 16], &[4, 8], None),
+            vec![(8, 4), (8, 8), (16, 4), (16, 8)]
+        );
+        assert_eq!(
+            SweepSpec::mesh_grid(&[8, 16], &[4, 8], Some(2.0)),
+            vec![(8, 4), (8, 8), (16, 8)]
+        );
+        assert_eq!(SweepSpec::mesh_grid(&[8, 16], &[4, 8], Some(1.0)), vec![(8, 8)]);
+    }
+
+    #[test]
+    fn hbm_channel_derivation_rounds_to_nearest() {
+        // Truncation vs rounding disagree above the half mark: 3 x 50%
+        // is 1.5 channels (was 1, now 2), 8 x 70% is 5.6 (was 5, now 6).
+        assert_eq!(SweepSpec::hbm_channels_per_edge(3, 3, 50), 2);
+        assert_eq!(SweepSpec::hbm_channels_per_edge(8, 8, 70), 6);
+        // Below the half mark they agree: 8 x 30% = 2.4 -> 2.
+        assert_eq!(SweepSpec::hbm_channels_per_edge(8, 8, 30), 2);
+        // Exact multiples are untouched (built-in specs use 50/100 on
+        // even meshes, so square sweeps reproduce pre-fix results).
+        assert_eq!(SweepSpec::hbm_channels_per_edge(8, 8, 50), 4);
+        assert_eq!(SweepSpec::hbm_channels_per_edge(32, 32, 100), 32);
+        // Never zero, however small the percentage.
+        assert_eq!(SweepSpec::hbm_channels_per_edge(4, 4, 1), 1);
+        assert_eq!(SweepSpec::hbm_channels_per_edge(1, 1, 100), 1);
+        // Rectangular grids derive from the shorter edge — both edges
+        // get the same count, so neither oversubscribes at pct <= 100 —
+        // and the rule is orientation-symmetric.
+        assert_eq!(SweepSpec::hbm_channels_per_edge(16, 4, 100), 4);
+        assert_eq!(SweepSpec::hbm_channels_per_edge(4, 16, 100), 4);
+        assert_eq!(SweepSpec::hbm_channels_per_edge(16, 4, 50), 2);
+    }
+
+    #[test]
+    fn rectangular_points_enumerate_with_geometry_names() {
+        let spec = SweepSpec { meshes: vec![(16, 4), (4, 16)], ..SweepSpec::reduced() };
+        let configs = spec.enumerate();
+        assert_eq!(configs.len(), 4, "two geometries x two SPM capacities");
+        for a in &configs {
+            a.validate().unwrap();
+            assert_eq!(a.hbm.channels_per_edge, 4, "pct 100 of the shorter edge");
+            assert!(a.name.contains("-hbm8x64-"), "{}", a.name);
+        }
+        assert!(configs[0].name.starts_with("dse-16x4-"), "{}", configs[0].name);
+        assert!(configs[2].name.starts_with("dse-4x16-"), "{}", configs[2].name);
+        // Same tile count, different machines: the names must differ.
+        assert_ne!(configs[0].name, configs[2].name);
+        assert_eq!(configs[0].num_tiles(), configs[2].num_tiles());
     }
 
     #[test]

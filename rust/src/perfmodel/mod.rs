@@ -290,6 +290,47 @@ mod tests {
     }
 
     #[test]
+    fn workload_roofline_rectangular_axes_scale_independently() {
+        // On a rectangular mesh the two roofline ceilings move on
+        // different axes: compute scales with the tile count
+        // (rows × cols), bandwidth with the HBM channel count. The
+        // prune bound must track both, not a single square edge.
+        use crate::arch::workload::Workload;
+        let mk = |rows: usize, cols: usize, cpe: usize| {
+            let mut a = ArchConfig::gh200_like();
+            a.rows = rows;
+            a.cols = cols;
+            a.hbm.channels_per_edge = cpe;
+            a
+        };
+        let compute = Workload::single("c", GemmShape::new(8192, 8192, 8192));
+        let flat = Workload::single("f", GemmShape::new(64, 2112, 7168));
+
+        // Orientation symmetry: transposing the mesh changes neither
+        // ceiling, bit for bit.
+        for w in [&compute, &flat] {
+            assert_eq!(
+                workload_roofline_tflops(&mk(32, 8, 8), w).to_bits(),
+                workload_roofline_tflops(&mk(8, 32, 8), w).to_bits()
+            );
+        }
+
+        // Doubling the long edge doubles the compute-bound ceiling...
+        let b32 = workload_roofline_tflops(&mk(8, 32, 8), &compute);
+        let b64 = workload_roofline_tflops(&mk(8, 64, 8), &compute);
+        assert!((b64 - 2.0 * b32).abs() < 1e-6 * b64, "{b32} vs {b64}");
+        // ...but leaves the bandwidth-bound ceiling untouched...
+        let f32_ = workload_roofline_tflops(&mk(8, 32, 8), &flat);
+        let f64_ = workload_roofline_tflops(&mk(8, 64, 8), &flat);
+        assert!((f64_ - f32_).abs() < 1e-9 * f32_, "{f32_} vs {f64_}");
+        // ...while doubling the channel count does the reverse.
+        let fch = workload_roofline_tflops(&mk(8, 32, 16), &flat);
+        assert!((fch - 2.0 * f32_).abs() < 1e-6 * fch, "{f32_} vs {fch}");
+        let cch = workload_roofline_tflops(&mk(8, 32, 16), &compute);
+        assert!((cch - b32).abs() < 1e-9 * b32, "{b32} vs {cch}");
+    }
+
+    #[test]
     fn roofline_ceilings() {
         let arch = ArchConfig::gh200_like();
         let ridge = ridge_intensity(&arch);

@@ -365,8 +365,16 @@ mod tests {
         use crate::coordinator::engine::WorkloadReport;
         use crate::dse::{DsePoint, DseResult};
 
-        let mk = |name: &str, cost: f64, tflops: f64, energy_j: f64, on_frontier: bool| {
-            let mut arch = ArchConfig::tiny(2, 2);
+        fn mk(
+            name: &str,
+            rows: usize,
+            cols: usize,
+            cost: f64,
+            tflops: f64,
+            energy_j: f64,
+            on_frontier: bool,
+        ) -> DsePoint {
+            let mut arch = ArchConfig::tiny(rows, cols);
             arch.name = name.to_string();
             DsePoint {
                 arch,
@@ -388,14 +396,15 @@ mod tests {
                     elapsed_ms: 0.0,
                 },
             }
-        };
+        }
         let res = DseResult {
             spec_name: "demo".into(),
             workload: "w".into(),
             objectives: vec![crate::dse::Objective::Perf, crate::dse::Objective::Cost],
             points: vec![
-                mk("cheap", 10.0, 5.0, 0.002, true),
-                mk("dud", 20.0, 4.0, 0.003, false),
+                mk("cheap", 2, 2, 10.0, 5.0, 0.002, true),
+                mk("dud", 2, 2, 20.0, 4.0, 0.003, false),
+                mk("rect", 16, 4, 30.0, 6.0, 0.004, true),
             ],
             pruned: vec![],
             infeasible: vec![],
@@ -411,6 +420,7 @@ mod tests {
         let md = dse_summary(&res).markdown();
         assert!(md.contains("DSE sweep 'demo'"), "{md}");
         assert!(md.contains("cheap"), "{md}");
+        assert!(md.contains("16x4"), "rectangular mesh column renders rows x cols: {md}");
         assert!(md.contains('*'), "frontier rows are starred: {md}");
         assert!(md.contains("energy mJ") && md.contains("2.00"), "energy column: {md}");
         let plot = dse_plot(&res).render();

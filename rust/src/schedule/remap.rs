@@ -49,13 +49,36 @@ impl Remap {
     }
 
     /// Physical tile of logical coordinate `(lr, lc)`.
+    ///
+    /// Panics when the coordinate lies outside the logical grid. The
+    /// linear-index arithmetic would otherwise map it onto a *different,
+    /// valid* tile — the old `debug_assert!` guard made that silent
+    /// aliasing (wrong operands, wrong collective groups) the release-
+    /// build behavior instead of a crash.
     pub fn to_phys(&self, lr: usize, lc: usize) -> TileCoord {
-        debug_assert!(lr < self.log_rows && lc < self.log_cols);
+        assert!(
+            lr < self.log_rows && lc < self.log_cols,
+            "logical ({lr},{lc}) out of the {}x{} logical grid",
+            self.log_rows,
+            self.log_cols
+        );
         TileCoord::from_linear(lr * self.log_cols + lc, self.phys_cols)
     }
 
     /// Logical coordinate of a physical tile.
+    ///
+    /// Panics when `t` lies outside the physical grid (the same release-
+    /// mode aliasing hazard as [`Remap::to_phys`], in the other
+    /// direction). Physical tiles beyond an under-subscribed logical
+    /// grid still map past its last row — callers mapping a subset of
+    /// the grid rely on that.
     pub fn to_logical(&self, t: TileCoord) -> (usize, usize) {
+        assert!(
+            t.row < self.phys_rows && t.col < self.phys_cols,
+            "physical {t} out of the {}x{} grid",
+            self.phys_rows,
+            self.phys_cols
+        );
         let lin = t.linear(self.phys_cols);
         (lin / self.log_cols, lin % self.log_cols)
     }
@@ -82,7 +105,16 @@ impl Remap {
 
     /// Synthesized physical mask for a contiguous logical-linear range
     /// `[start, start + len)` (used by split-K reduction groups).
+    ///
+    /// Panics when the range runs past the grid's tile count — the
+    /// linear indices would wrap into rows that do not exist.
     pub fn linear_range_mask(&self, start: usize, len: usize) -> Option<Mask> {
+        assert!(
+            start + len <= self.num_tiles(),
+            "linear range [{start}, {}) out of the {}-tile grid",
+            start + len,
+            self.num_tiles()
+        );
         let tiles: Vec<TileCoord> = (start..start + len)
             .map(|lin| TileCoord::from_linear(lin, self.phys_cols))
             .collect();
@@ -157,6 +189,46 @@ mod tests {
         assert_eq!(m.members(4, 4), r.logical_row(1));
         // A misaligned range crossing a row boundary is not expressible.
         assert!(r.linear_range_mask(2, 4).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of the 2x8 logical grid")]
+    fn to_phys_rejects_out_of_range_logical_row() {
+        // Logical row 2 of a 2x8 view would alias onto tile (1,0) in a
+        // release build under the old debug_assert-only guard.
+        Remap::new(4, 4, 2, 8).unwrap().to_phys(2, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of the 2x8 logical grid")]
+    fn to_phys_rejects_out_of_range_logical_col() {
+        Remap::new(4, 4, 2, 8).unwrap().to_phys(0, 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of the 4x4 grid")]
+    fn to_logical_rejects_out_of_range_physical() {
+        Remap::new(4, 4, 2, 8).unwrap().to_logical(TileCoord::new(4, 0));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of the 16-tile grid")]
+    fn linear_range_mask_rejects_overflowing_range() {
+        Remap::identity(4, 4).linear_range_mask(12, 8);
+    }
+
+    #[test]
+    fn bounds_hold_on_rectangular_grids() {
+        // A 2x8 physical grid viewed as 4x4: every in-range coordinate
+        // round-trips, in both directions, without tripping the guards.
+        let r = Remap::new(2, 8, 4, 4).unwrap();
+        for lr in 0..4 {
+            for lc in 0..4 {
+                let t = r.to_phys(lr, lc);
+                assert!(t.row < 2 && t.col < 8);
+                assert_eq!(r.to_logical(t), (lr, lc));
+            }
+        }
     }
 
     #[test]

@@ -34,7 +34,7 @@ fn temp_cache(tag: &str) -> PathBuf {
 fn tiny_spec() -> SweepSpec {
     SweepSpec {
         name: "cache-test".into(),
-        mesh: vec![2, 3],
+        meshes: SweepSpec::square_meshes(&[2, 3]),
         ce: vec![(16, 8)],
         spm_kib: vec![128, 256],
         hbm_channel_gbps: vec![32.0],
@@ -149,12 +149,12 @@ fn refined_sweep_reuses_overlapping_points() {
     let path = temp_cache("refine");
     let w = tiny_workload();
     let mut coarse = tiny_spec();
-    coarse.mesh = vec![2];
+    coarse.meshes = vec![(2, 2)];
     let first = dse::run_sweep(&coarse, &w, &opts(Some(&path))).unwrap();
     assert!(first.sim_calls > 0);
 
     let mut fine = tiny_spec();
-    fine.mesh = vec![2, 3]; // superset of the coarse sweep
+    fine.meshes = vec![(2, 2), (3, 3)]; // superset of the coarse sweep
     let second = dse::run_sweep(&fine, &w, &opts(Some(&path))).unwrap();
     let cold = dse::run_sweep(&fine, &w, &opts(None)).unwrap();
     assert!(second.disk_hits > 0, "overlapping configs come from disk");
@@ -302,6 +302,52 @@ fn foreign_fingerprint_entries_never_mishit() {
     let fps: Vec<u64> = cache.fingerprint_counts().iter().map(|(fp, _)| *fp).collect();
     assert!(fps.contains(&arch_fingerprint(&a22)));
     assert!(fps.contains(&arch_fingerprint(&a44)));
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Rectangular-vs-square isolation: a 16×4 and an 8×8 instance with
+/// identical per-tile parameters (and even the same name) share a tile
+/// count but are different machines — their fingerprints differ, and a
+/// cache warmed on one serves **zero** disk hits to the other, in both
+/// directions.
+#[test]
+fn rectangular_mesh_never_aliases_square_with_same_tile_count() {
+    let path = temp_cache("rect-square");
+    let w = Workload::single("s", GemmShape::new(64, 64, 64));
+    let mk = |rows, cols| {
+        let mut a = ArchConfig::tiny(rows, cols);
+        // Same name and HBM system: only the mesh geometry differs.
+        a.name = "geom-test".into();
+        a.hbm.channels_per_edge = 4;
+        a
+    };
+    let rect = mk(16, 4);
+    let square = mk(8, 8);
+    assert_eq!(rect.num_tiles(), square.num_tiles());
+    assert_eq!(rect.tile, square.tile);
+    assert_ne!(
+        arch_fingerprint(&rect),
+        arch_fingerprint(&square),
+        "equal tile counts must not collapse to one fingerprint"
+    );
+
+    Engine::new(&rect).with_cache(&path).tune_workload(&w).unwrap();
+    let engine = Engine::new(&square).with_cache(&path);
+    assert!(engine.disk_loaded() > 0, "the 16x4 entries do load");
+    let rep = engine.tune_workload(&w).unwrap();
+    assert_eq!(rep.disk_hits, 0, "16x4 entries must never serve the 8x8 mesh");
+    assert!(rep.sim_calls > 0, "the square mesh tunes from a cold start");
+    drop(engine);
+
+    // The reverse direction, against the now-mixed file: 16x4 still hits
+    // only its own entries, completely.
+    let warm = Engine::new(&rect).with_cache(&path).tune_workload(&w).unwrap();
+    assert_eq!(warm.sim_calls, 0, "every 16x4 candidate is served from disk");
+    assert!(warm.disk_hits > 0);
+    let cache = DiskCache::open(&path);
+    let fps: Vec<u64> = cache.fingerprint_counts().iter().map(|(fp, _)| *fp).collect();
+    assert!(fps.contains(&arch_fingerprint(&rect)));
+    assert!(fps.contains(&arch_fingerprint(&square)));
     let _ = std::fs::remove_file(&path);
 }
 

@@ -13,8 +13,23 @@ use dit::dse::{self, pareto, DseOptions, SweepSpec, PRUNE_SLACK};
 fn tiny_spec() -> SweepSpec {
     SweepSpec {
         name: "tiny-test".into(),
-        mesh: vec![2, 3, 4],
+        meshes: SweepSpec::square_meshes(&[2, 3, 4]),
         ce: vec![(16, 8), (8, 8)],
+        spm_kib: vec![128, 256],
+        hbm_channel_gbps: vec![32.0],
+        hbm_channels_pct: vec![100],
+        dma_engines: vec![2],
+        base: ArchConfig::tiny(4, 4),
+    }
+}
+
+/// A rectangular sweep over tiny grids: wide-short (2×4) and tall-narrow
+/// (4×2) geometries next to the square twins bracketing their tile count.
+fn rect_spec() -> SweepSpec {
+    SweepSpec {
+        name: "rect-test".into(),
+        meshes: vec![(2, 4), (4, 2), (2, 2), (4, 4)],
+        ce: vec![(16, 8)],
         spm_kib: vec![128, 256],
         hbm_channel_gbps: vec![32.0],
         hbm_channels_pct: vec![100],
@@ -158,6 +173,138 @@ fn sweep_is_deterministic() {
     assert_eq!(r1.infeasible.len(), r2.infeasible.len());
 }
 
+/// Rectangular sweeps keep every frontier invariant: points cost-sorted,
+/// no frontier point dominated, the roofline bound holds for every
+/// geometry, and both orientations actually evaluate (the old square-only
+/// spec could not even express them).
+#[test]
+fn rectangular_frontier_invariants_and_roofline_bound() {
+    let res = dse::run_sweep(&rect_spec(), &tiny_workload(), &opts(false)).unwrap();
+    assert!(!res.points.is_empty());
+    let has = |prefix: &str| res.points.iter().any(|p| p.arch.name.starts_with(prefix));
+    assert!(has("dse-2x4-"), "wide-short geometry evaluated");
+    assert!(has("dse-4x2-"), "tall-narrow geometry evaluated");
+    for w in res.points.windows(2) {
+        assert!(w[0].cost <= w[1].cost, "points sorted by cost");
+    }
+    for p in &res.points {
+        assert!(
+            p.tflops <= p.roofline_tflops * 1.000001,
+            "{}: achieved {} exceeds roofline bound {}",
+            p.arch.name,
+            p.tflops,
+            p.roofline_tflops
+        );
+        assert!(p.tflops > 0.0, "{}", p.arch.name);
+    }
+    let frontier = res.frontier();
+    assert!(!frontier.is_empty());
+    for a in &frontier {
+        for b in &frontier {
+            if !std::ptr::eq(*a, *b) {
+                assert!(
+                    !pareto::dominates((a.cost, a.tflops), (b.cost, b.tflops)),
+                    "{} dominates {} on the frontier",
+                    a.arch.name,
+                    b.arch.name
+                );
+            }
+        }
+    }
+    assert!(res.best().unwrap().on_frontier);
+}
+
+/// Prune soundness extends to rows != cols: a pruned rectangular sweep
+/// produces exactly the exhaustive sweep's frontier, bit for bit, with a
+/// dominating witness for everything it skipped — on both a wide-short
+/// and a tall-narrow geometry.
+#[test]
+fn prune_is_sound_vs_exhaustive_on_rectangular_meshes() {
+    let spec = rect_spec();
+    let w = tiny_workload();
+    let full = dse::run_sweep(&spec, &w, &opts(false)).unwrap();
+    let pruned = dse::run_sweep(&spec, &w, &opts(true)).unwrap();
+
+    assert!(full.pruned.is_empty(), "prune disabled must evaluate everything");
+    let total = spec.enumerate().len();
+    assert_eq!(full.points.len() + full.infeasible.len(), total);
+    assert_eq!(
+        pruned.points.len() + pruned.pruned.len() + pruned.infeasible.len(),
+        total,
+        "every config is evaluated, pruned, or infeasible"
+    );
+
+    let f1: Vec<_> = full.frontier().iter().map(|p| p.arch.name.clone()).collect();
+    let f2: Vec<_> = pruned.frontier().iter().map(|p| p.arch.name.clone()).collect();
+    assert_eq!(f1, f2, "pruning must not change the rectangular frontier");
+    for (a, b) in full.frontier().iter().zip(pruned.frontier().iter()) {
+        assert_eq!(a.cost.to_bits(), b.cost.to_bits());
+        assert_eq!(a.tflops.to_bits(), b.tflops.to_bits());
+    }
+    for px in &pruned.pruned {
+        let bound = px.roofline_tflops * PRUNE_SLACK;
+        assert!(
+            pruned.points.iter().any(|p| {
+                (p.tflops > bound && p.cost <= px.cost) || (p.tflops >= bound && p.cost < px.cost)
+            }),
+            "{} pruned without a dominating witness",
+            px.name
+        );
+    }
+}
+
+/// Rectangular sweeps are as deterministic as square ones: two runs with
+/// different parallelism settings agree bit for bit.
+#[test]
+fn rectangular_sweep_is_deterministic() {
+    let spec = rect_spec();
+    let w = tiny_workload();
+    let r1 = dse::run_sweep(&spec, &w, &opts(true)).unwrap();
+    let o2 = DseOptions { workers: 4, config_parallelism: 1, ..opts(true) };
+    let r2 = dse::run_sweep(&spec, &w, &o2).unwrap();
+    assert_eq!(r1.points.len(), r2.points.len());
+    for (a, b) in r1.points.iter().zip(&r2.points) {
+        assert_eq!(a.arch.name, b.arch.name);
+        assert_eq!(a.cost.to_bits(), b.cost.to_bits());
+        assert_eq!(a.tflops.to_bits(), b.tflops.to_bits());
+        assert_eq!(a.on_frontier, b.on_frontier);
+    }
+    let p1: Vec<_> = r1.pruned.iter().map(|p| p.name.clone()).collect();
+    let p2: Vec<_> = r2.pruned.iter().map(|p| p.name.clone()).collect();
+    assert_eq!(p1, p2, "prune decisions are scheduling-independent");
+}
+
+/// Regression for the square-only `best_at_mesh` bug: a 16×4 point must
+/// be findable by its exact geometry, must not answer for its transpose
+/// or for the square mesh with the same tile count, and the square
+/// convenience wrapper keeps the old call shape.
+#[test]
+fn best_at_mesh_finds_rectangular_points() {
+    let spec = SweepSpec {
+        name: "skinny".into(),
+        meshes: vec![(16, 4), (4, 4)],
+        ce: vec![(16, 8)],
+        spm_kib: vec![256],
+        hbm_channel_gbps: vec![32.0],
+        hbm_channels_pct: vec![100],
+        dma_engines: vec![2],
+        base: ArchConfig::tiny(4, 4),
+    };
+    let w = Workload::single("one", GemmShape::new(64, 64, 64));
+    let res = dse::run_sweep(&spec, &w, &opts(false)).unwrap();
+
+    let p = res.best_at_mesh(16, 4).expect("the 16x4 point is findable");
+    assert_eq!((p.arch.rows, p.arch.cols), (16, 4));
+    assert!(res.best_at_mesh(4, 16).is_none(), "transpose was never swept");
+    assert!(res.best_at_mesh(8, 8).is_none(), "same tile count must not alias");
+    let sq = res.best_at_square(4).expect("square wrapper still works");
+    assert_eq!((sq.arch.rows, sq.arch.cols), (4, 4));
+    assert_eq!(
+        res.best_at_square(4).unwrap().tflops.to_bits(),
+        res.best_at_mesh(4, 4).unwrap().tflops.to_bits()
+    );
+}
+
 /// A sweep that contains the reference machine can never do worse than
 /// tuning that machine directly: the best sweep point is at least as fast,
 /// and the included twin config reproduces the baseline bit for bit.
@@ -166,7 +313,7 @@ fn best_config_matches_or_beats_included_baseline() {
     let base = ArchConfig::tiny(4, 4);
     let spec = SweepSpec {
         name: "baseline-inclusion".into(),
-        mesh: vec![2, 4],
+        meshes: SweepSpec::square_meshes(&[2, 4]),
         ce: vec![(base.tile.ce_m, base.tile.ce_n)],
         spm_kib: vec![base.tile.l1_bytes / 1024],
         hbm_channel_gbps: vec![base.hbm.channel_gbps],
@@ -201,7 +348,7 @@ fn duplicate_configs_tune_from_cache() {
     let base = ArchConfig::tiny(2, 2);
     let spec = SweepSpec {
         name: "dup".into(),
-        mesh: vec![2, 2], // the same config twice
+        meshes: vec![(2, 2), (2, 2)], // the same config twice
         ce: vec![(16, 8)],
         spm_kib: vec![256],
         hbm_channel_gbps: vec![32.0],
@@ -230,7 +377,7 @@ fn duplicate_configs_tune_from_cache() {
 #[test]
 fn infeasible_configs_are_reported_not_fatal() {
     let mut spec = tiny_spec();
-    spec.mesh = vec![2];
+    spec.meshes = vec![(2, 2)];
     spec.ce = vec![(16, 8)];
     spec.spm_kib = vec![4, 256]; // 4 KiB fails ArchConfig::validate (min 4096 B is 4 KiB exactly)
     let w = Workload::single("huge", GemmShape::new(1 << 10, 1 << 10, 1 << 10));

@@ -157,7 +157,7 @@ fn frontier3_point_can_lose_every_projection() {
 fn tiny_spec() -> SweepSpec {
     SweepSpec {
         name: "energy-test".into(),
-        mesh: vec![2, 3, 4],
+        meshes: SweepSpec::square_meshes(&[2, 3, 4]),
         ce: vec![(16, 8), (8, 8)],
         spm_kib: vec![128, 256],
         hbm_channel_gbps: vec![32.0],
@@ -314,7 +314,7 @@ fn energy_sweep_json_has_energy_axes() {
 #[test]
 fn default_sweep_reports_energy_metrics() {
     let spec = SweepSpec {
-        mesh: vec![2, 4],
+        meshes: SweepSpec::square_meshes(&[2, 4]),
         ce: vec![(16, 8)],
         spm_kib: vec![256],
         ..tiny_spec()
