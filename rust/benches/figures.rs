@@ -49,7 +49,7 @@ use dit::dse::{DseOptions, Objective, SweepSpec};
 use dit::perfmodel::{ridge_intensity, roofline_tflops, workloads, GpuSpec};
 use dit::report::{AsciiPlot, Table};
 use dit::schedule::{retune_tk, Dataflow, Schedule};
-use dit::sim::RunStats;
+use dit::sim::{sim_counters, RunStats};
 use dit::util::json::Json;
 
 /// Collects the machine-readable side of the bench run: gateable metrics
@@ -565,7 +565,9 @@ fn workload_bench(r: &mut Recorder) {
     let arch = ArchConfig::gh200_like();
     let engine = Engine::new(&arch);
     let suite = Workload::builtin("transformer").expect("builtin suite");
+    let (calls0, nanos0) = sim_counters();
     let rep = engine.tune_workload(&suite).expect("tune_workload");
+    record_sims_per_sec(r, "workload", calls0, nanos0);
     print!("\n{}", dit::report::workload_summary(&rep).markdown());
     println!(
         "aggregate: {:.0} TFLOP/s weighted over {} GEMM executions ({} per pass)",
@@ -582,8 +584,30 @@ fn workload_bench(r: &mut Recorder) {
     r.rec("workload", "pass_time_us", rep.total_time_ns() / 1e3, false);
 }
 
+/// Record the gated simulator-throughput metric for one bench id from the
+/// process-wide counter delta since `(calls0, nanos0)`: simulations per
+/// second of *in-simulator* time (the inverse of mean per-call latency —
+/// thread times add, so this is conservative vs wall-clock rate), plus
+/// the total in-simulator wall-clock as an ungated timing entry. A
+/// cache-warm run may execute zero simulations; it records 0 and relies
+/// on cache runs writing separate, ungated artifacts.
+fn record_sims_per_sec(r: &mut Recorder, figure: &str, calls0: u64, nanos0: u64) {
+    let (calls1, nanos1) = sim_counters();
+    let d_calls = calls1.saturating_sub(calls0);
+    let d_nanos = nanos1.saturating_sub(nanos0);
+    let sims_per_sec =
+        if d_nanos > 0 { d_calls as f64 / (d_nanos as f64 / 1e9) } else { 0.0 };
+    println!(
+        "simulator: {d_calls} simulations in {:.1} ms of sim time ({sims_per_sec:.0} sims/sec)",
+        d_nanos as f64 / 1e6
+    );
+    r.rec(figure, "sims_per_sec", sims_per_sec, true);
+    r.wall(&format!("{figure}.sim_total"), d_nanos as f64 / 1e6);
+}
+
 // --------------------------------------------------------------------
 fn dse_bench(r: &mut Recorder) {
+    let (calls0, nanos0) = sim_counters();
     let spec = SweepSpec::reduced();
     let w = dit::dse::suite("serving").expect("builtin DSE suite");
     let mut opts = DseOptions::default();
@@ -642,6 +666,7 @@ fn dse_bench(r: &mut Recorder) {
     r.rec("dse", "rect_evaluated", rect.points.len() as f64, true);
     r.rec("dse", "rect_frontier_size", rect.frontier().len() as f64, true);
     r.rec("dse", "rect_best_tflops", rect.best().map(|p| p.tflops).unwrap_or(0.0), true);
+    record_sims_per_sec(r, "dse", calls0, nanos0);
     println!("(a DSE sweep co-tunes every hardware candidate with the same engine the\n serving path uses — deployment and hardware are searched together)");
 }
 

@@ -24,6 +24,17 @@
 //! the durable fix is `--update`, which re-pins the baseline from the
 //! results. After a model change that intentionally shifts numbers,
 //! refresh with `--update` and commit the new baseline.
+//!
+//! Pins come in two classes. A plain pin records the expected value and
+//! tolerates `tolerance` relative drift in the bad direction — right for
+//! deterministic model outputs. A **floor** pin (`"floor": true`,
+//! higher-is-better only) is a hard lower bound with *no* tolerance:
+//! the result must be ≥ the pinned value, full stop. Floors gate
+//! machine-dependent throughput metrics like `sims_per_sec`, where the
+//! committed value is a deliberately conservative minimum rather than a
+//! measurement — so `--update` preserves committed floor pins verbatim
+//! instead of overwriting them with whatever this machine measured;
+//! tighten them by hand (see `scripts/repin.sh`).
 
 use std::process::ExitCode;
 
@@ -32,13 +43,15 @@ use dit::util::json::Json;
 
 const DEFAULT_TOLERANCE: f64 = 0.05;
 
-/// One named, directional metric.
+/// One named, directional metric. `floor` marks the hard-lower-bound pin
+/// class (never set on result-side metrics; only baselines carry it).
 #[derive(Debug, Clone, PartialEq)]
 struct Metric {
     figure: String,
     metric: String,
     value: f64,
     higher_is_better: bool,
+    floor: bool,
 }
 
 impl Metric {
@@ -62,7 +75,11 @@ fn metrics_of(doc: &Json) -> Result<Vec<Metric>, String> {
                 .ok_or_else(|| format!("metrics[{i}].{k} not a string"))?
                 .to_string())
         };
-        out.push(Metric {
+        let floor = match m.get("floor") {
+            None => false,
+            Some(f) => f.as_bool().ok_or_else(|| format!("metrics[{i}].floor not a bool"))?,
+        };
+        let metric = Metric {
             figure: str_field("figure")?,
             metric: str_field("metric")?,
             value: field("value")?
@@ -71,7 +88,16 @@ fn metrics_of(doc: &Json) -> Result<Vec<Metric>, String> {
             higher_is_better: field("higher_is_better")?
                 .as_bool()
                 .ok_or_else(|| format!("metrics[{i}].higher_is_better not a bool"))?,
-        });
+            floor,
+        };
+        if metric.floor && !metric.higher_is_better {
+            return Err(format!(
+                "metrics[{i}] ({}): a floor pin must be higher_is_better (a lower bound on a \
+                 lower-is-better metric gates nothing)",
+                metric.key()
+            ));
+        }
+        out.push(metric);
     }
     Ok(out)
 }
@@ -101,7 +127,12 @@ fn gate(
             let verdict = match got {
                 None => Verdict::Missing,
                 Some(v) => {
-                    let regressed = if pin.value == 0.0 {
+                    let regressed = if pin.floor {
+                        // Hard lower bound: no tolerance. The pinned value
+                        // is already conservative; any reading below it is
+                        // a real throughput regression.
+                        v < pin.value
+                    } else if pin.value == 0.0 {
                         // Degenerate pin (e.g. a 0/1 flag at 0): any drop
                         // below it is impossible, any direction-bad move is
                         // a regression only for lower-is-better pins.
@@ -141,7 +172,14 @@ fn render(rows: &[(Metric, Option<f64>, Verdict)], tolerance: f64) -> (Table, us
         }
         t.row(vec![
             pin.key(),
-            if pin.higher_is_better { "higher" } else { "lower" }.into(),
+            if pin.floor {
+                "floor"
+            } else if pin.higher_is_better {
+                "higher"
+            } else {
+                "lower"
+            }
+            .into(),
             format!("{:.4}", pin.value),
             got.map(|v| format!("{v:.4}")).unwrap_or_else(|| "MISSING".into()),
             delta,
@@ -172,23 +210,48 @@ fn load(path: &str) -> Result<Json, String> {
     Json::parse(&text).map_err(|e| format!("parsing {path}: {e}"))
 }
 
-fn write_baseline(path: &str, results: &[Metric], tolerance: f64) -> Result<(), String> {
+fn write_baseline(path: &str, pins: &[Metric], tolerance: f64) -> Result<(), String> {
     let mut metrics = Json::arr();
-    for m in results {
-        metrics = metrics.push(
-            Json::obj()
-                .field("figure", m.figure.as_str())
-                .field("metric", m.metric.as_str())
-                .field("value", m.value)
-                .field("higher_is_better", m.higher_is_better),
-        );
+    for m in pins {
+        let mut obj = Json::obj()
+            .field("figure", m.figure.as_str())
+            .field("metric", m.metric.as_str())
+            .field("value", m.value)
+            .field("higher_is_better", m.higher_is_better);
+        if m.floor {
+            obj = obj.field("floor", true);
+        }
+        metrics = metrics.push(obj);
     }
     let doc = Json::obj()
         .field("schema", 1i64)
         .field("tolerance", tolerance)
-        .field("note", "pinned bench metrics; refresh with `cargo run --bin bench_gate -- --update` after intentional model changes")
+        .field("note", "pinned bench metrics; refresh with `cargo run --bin bench_gate -- --update` after intentional model changes (floor pins are conservative hand-set lower bounds and survive --update; tighten via scripts/repin.sh)")
         .field("metrics", metrics);
     std::fs::write(path, doc.pretty()).map_err(|e| format!("writing {path}: {e}"))
+}
+
+/// The pin set `--update` writes: results re-pin every plain metric, but a
+/// committed floor pin survives verbatim — its value is a hand-set
+/// conservative bound, and overwriting it with one machine's measurement
+/// would either gut the gate (fast dev box) or flake CI (slow runner).
+/// A result metric under a floor key keeps the old pin; a floor pin whose
+/// metric vanished from the results is kept too (the Missing verdict on
+/// the next gate run is the signal to deal with it deliberately).
+fn merged_pins(old_baseline: &[Metric], results: &[Metric]) -> Vec<Metric> {
+    let mut pins: Vec<Metric> = Vec::with_capacity(results.len());
+    for m in results {
+        match old_baseline.iter().find(|p| p.floor && p.key() == m.key()) {
+            Some(floor_pin) => pins.push(floor_pin.clone()),
+            None => pins.push(m.clone()),
+        }
+    }
+    for p in old_baseline.iter().filter(|p| p.floor) {
+        if !results.iter().any(|m| m.key() == p.key()) {
+            pins.push(p.clone());
+        }
+    }
+    pins
 }
 
 /// Prove the gate mechanism catches a synthetic 10% regression (and does
@@ -199,6 +262,7 @@ fn self_check() -> Result<(), String> {
         metric: metric.into(),
         value,
         higher_is_better: higher,
+        floor: false,
     };
     let baseline =
         vec![pin("fig9", "mean_speedup", 1.0, true), pin("fig8", "store_best_us", 100.0, false)];
@@ -227,7 +291,25 @@ fn self_check() -> Result<(), String> {
     if failures != 2 {
         return Err(format!("missing metrics not flagged ({failures} failures)"));
     }
-    println!("self-check OK: 10% synthetic regressions fail, 3% drift passes, missing metrics fail");
+    // A floor pin is a hard bound: 1% under fails even though the 5%
+    // tolerance would forgive it on a plain pin; at/above the floor passes.
+    let floor_pin = Metric { floor: true, ..pin("dse", "sims_per_sec", 100.0, true) };
+    let under = vec![pin("dse", "sims_per_sec", 99.0, true)];
+    let (_, failures) =
+        render(&gate(&[floor_pin.clone()], &under, DEFAULT_TOLERANCE), DEFAULT_TOLERANCE);
+    if failures != 1 {
+        return Err(format!("1% under a floor pin not caught ({failures} failures)"));
+    }
+    let at = vec![pin("dse", "sims_per_sec", 100.0, true)];
+    let (_, failures) =
+        render(&gate(&[floor_pin], &at, DEFAULT_TOLERANCE), DEFAULT_TOLERANCE);
+    if failures != 0 {
+        return Err(format!("exactly-at-floor flagged as regression ({failures} failures)"));
+    }
+    println!(
+        "self-check OK: 10% synthetic regressions fail, 3% drift passes, missing metrics fail, \
+         floor pins are tolerance-free"
+    );
     Ok(())
 }
 
@@ -295,17 +377,24 @@ fn main() -> ExitCode {
         let results = metrics_of(&results_doc)?;
         if opts.update {
             // Preserve a committed custom tolerance unless --tolerance
-            // explicitly overrides it.
-            let old_tol = load(&opts.baseline)
-                .ok()
-                .and_then(|doc| doc.get("tolerance").and_then(|t| t.as_f64()));
+            // explicitly overrides it, and committed floor pins always.
+            let old_doc = load(&opts.baseline).ok();
+            let old_tol =
+                old_doc.as_ref().and_then(|doc| doc.get("tolerance").and_then(|t| t.as_f64()));
+            let old_pins = match &old_doc {
+                Some(doc) => metrics_of(doc)?,
+                None => Vec::new(),
+            };
             let tol = opts.tolerance.or(old_tol).unwrap_or(DEFAULT_TOLERANCE);
-            write_baseline(&opts.baseline, &results, tol)?;
+            let pins = merged_pins(&old_pins, &results);
+            let floors = pins.iter().filter(|p| p.floor).count();
+            write_baseline(&opts.baseline, &pins, tol)?;
             println!(
-                "pinned {} metrics from {} into {}",
-                results.len(),
+                "pinned {} metrics from {} into {} ({} floor pin(s) preserved)",
+                pins.len(),
                 opts.results,
-                opts.baseline
+                opts.baseline,
+                floors
             );
             return Ok(0);
         }
@@ -353,7 +442,17 @@ mod tests {
     use super::*;
 
     fn m(figure: &str, metric: &str, value: f64, higher: bool) -> Metric {
-        Metric { figure: figure.into(), metric: metric.into(), value, higher_is_better: higher }
+        Metric {
+            figure: figure.into(),
+            metric: metric.into(),
+            value,
+            higher_is_better: higher,
+            floor: false,
+        }
+    }
+
+    fn floor(figure: &str, metric: &str, value: f64) -> Metric {
+        Metric { floor: true, ..m(figure, metric, value, true) }
     }
 
     #[test]
@@ -412,6 +511,100 @@ mod tests {
         assert_eq!(gate_failures + unpinned_keys(&base, &res).len(), 2);
         // Fully pinned results produce no unpinned keys.
         assert!(unpinned_keys(&base, &res[..1]).is_empty());
+    }
+
+    #[test]
+    fn floor_pins_are_hard_lower_bounds() {
+        let base = vec![floor("dse", "sims_per_sec", 100.0)];
+        // 1% under the floor fails despite the 5% tolerance.
+        let rows = gate(&base, &[m("dse", "sims_per_sec", 99.0, true)], 0.05);
+        assert_eq!(rows[0].2, Verdict::Regressed);
+        // At or above the floor passes; headroom is expected and fine.
+        for v in [100.0, 101.0, 5000.0] {
+            let rows = gate(&base, &[m("dse", "sims_per_sec", v, true)], 0.05);
+            assert_eq!(rows[0].2, Verdict::Pass, "value {v}");
+        }
+        // Missing still fails, and the direction column names the class.
+        let rows = gate(&base, &[], 0.05);
+        assert_eq!(rows[0].2, Verdict::Missing);
+        let (table, _) = render(&rows, 0.05);
+        assert!(table.markdown().contains("floor"), "{}", table.markdown());
+    }
+
+    #[test]
+    fn floor_pins_parse_and_reject_lower_is_better() {
+        let doc = Json::obj().field(
+            "metrics",
+            Json::arr().push(
+                Json::obj()
+                    .field("figure", "dse")
+                    .field("metric", "sims_per_sec")
+                    .field("value", 5.0)
+                    .field("higher_is_better", true)
+                    .field("floor", true),
+            ),
+        );
+        let pins = metrics_of(&doc).unwrap();
+        assert!(pins[0].floor);
+        // floor + lower-is-better is a baseline authoring error.
+        let bad = Json::obj().field(
+            "metrics",
+            Json::arr().push(
+                Json::obj()
+                    .field("figure", "f")
+                    .field("metric", "t_us")
+                    .field("value", 5.0)
+                    .field("higher_is_better", false)
+                    .field("floor", true),
+            ),
+        );
+        let err = metrics_of(&bad).unwrap_err();
+        assert!(err.contains("floor"), "{err}");
+        // Absent floor field defaults to a plain pin.
+        let plain = Json::obj().field(
+            "metrics",
+            Json::arr().push(
+                Json::obj()
+                    .field("figure", "f")
+                    .field("metric", "x")
+                    .field("value", 1.0)
+                    .field("higher_is_better", true),
+            ),
+        );
+        assert!(!metrics_of(&plain).unwrap()[0].floor);
+    }
+
+    #[test]
+    fn update_preserves_floor_pins_verbatim() {
+        let old = vec![floor("dse", "sims_per_sec", 5.0), m("fig9", "mean_speedup", 1.3, true)];
+        let results = vec![
+            m("dse", "sims_per_sec", 12345.0, true), // this machine is fast — don't pin that
+            m("fig9", "mean_speedup", 1.4, true),    // plain pin tracks the results
+        ];
+        let pins = merged_pins(&old, &results);
+        assert_eq!(pins.len(), 2);
+        let spin = pins.iter().find(|p| p.metric == "sims_per_sec").unwrap();
+        assert!(spin.floor && spin.value == 5.0, "floor pin overwritten: {spin:?}");
+        let speed = pins.iter().find(|p| p.metric == "mean_speedup").unwrap();
+        assert!(!speed.floor && speed.value == 1.4);
+        // A floor pin absent from the results survives the merge too.
+        let pins = merged_pins(&old, &results[1..]);
+        assert!(pins.iter().any(|p| p.floor && p.metric == "sims_per_sec"));
+        // And a floor flag roundtrips through the written baseline.
+        let mut arr = Json::arr();
+        for p in &merged_pins(&old, &results) {
+            let mut obj = Json::obj()
+                .field("figure", p.figure.as_str())
+                .field("metric", p.metric.as_str())
+                .field("value", p.value)
+                .field("higher_is_better", p.higher_is_better);
+            if p.floor {
+                obj = obj.field("floor", true);
+            }
+            arr = arr.push(obj);
+        }
+        let parsed = metrics_of(&Json::obj().field("metrics", arr)).unwrap();
+        assert_eq!(parsed, merged_pins(&old, &results));
     }
 
     #[test]

@@ -42,6 +42,36 @@ impl TileCoord {
     pub fn hops_to(&self, other: TileCoord) -> usize {
         self.row.abs_diff(other.row) + self.col.abs_diff(other.col)
     }
+
+    /// Dense id of the directed mesh link `self -> to`, where `to` is one
+    /// of the four mesh neighbours: `4 * linear + direction`, direction
+    /// 0 = north (row−1), 1 = south (row+1), 2 = west (col−1),
+    /// 3 = east (col+1). With [`num_links`] slots every directed link of
+    /// a `rows × cols` mesh owns a unique index — the flat-array resource
+    /// model in [`crate::sim`] indexes its busy-horizon table with this
+    /// (edge tiles simply own a few slots no route ever touches).
+    #[inline]
+    pub fn link_to(&self, to: TileCoord, cols: usize) -> usize {
+        let dir = if to.col == self.col && to.row + 1 == self.row {
+            0
+        } else if to.col == self.col && to.row == self.row + 1 {
+            1
+        } else if to.row == self.row && to.col + 1 == self.col {
+            2
+        } else if to.row == self.row && to.col == self.col + 1 {
+            3
+        } else {
+            panic!("link_to: {self} -> {to} is not a unit mesh step")
+        };
+        4 * self.linear(cols) + dir
+    }
+}
+
+/// Number of dense directed-link slots ([`TileCoord::link_to`]) a
+/// `rows × cols` mesh needs: four outgoing directions per tile.
+#[inline]
+pub fn num_links(rows: usize, cols: usize) -> usize {
+    4 * rows * cols
 }
 
 impl std::fmt::Display for TileCoord {
@@ -71,6 +101,15 @@ impl Mask {
     /// Enumerate members on a `rows × cols` grid, row-major order.
     pub fn members(&self, rows: usize, cols: usize) -> Vec<TileCoord> {
         let mut out = Vec::new();
+        self.members_into(rows, cols, &mut out);
+        out
+    }
+
+    /// [`Mask::members`] into a caller-provided buffer (cleared first,
+    /// same row-major order) — the allocation-free form the simulator's
+    /// per-collective-op hot path uses with its arena scratch.
+    pub fn members_into(&self, rows: usize, cols: usize, out: &mut Vec<TileCoord>) {
+        out.clear();
         for i in 0..rows {
             if (i & self.m_row) != self.s_row {
                 continue;
@@ -81,7 +120,6 @@ impl Mask {
                 }
             }
         }
-        out
     }
 
     /// Member count on a grid without materializing the member list.
@@ -351,6 +389,69 @@ mod tests {
                 m_col: rng.below(16) as usize,
             };
             assert_eq!(mask.count(rows, cols), mask.members(rows, cols).len());
+        });
+    }
+
+    #[test]
+    fn link_ids_are_dense_and_injective() {
+        // Every directed unit step on a rectangular mesh gets a distinct
+        // id inside the `num_links` range (the flat resource table's
+        // soundness condition).
+        let (rows, cols) = (3usize, 5usize);
+        let mut seen = vec![false; num_links(rows, cols)];
+        for r in 0..rows {
+            for c in 0..cols {
+                let t = TileCoord::new(r, c);
+                let mut claim = |n: TileCoord| {
+                    let id = t.link_to(n, cols);
+                    assert!(id < num_links(rows, cols), "{t} -> {n} id {id} out of range");
+                    assert!(!seen[id], "{t} -> {n} reuses id {id}");
+                    seen[id] = true;
+                };
+                if r > 0 {
+                    claim(TileCoord::new(r - 1, c));
+                }
+                if r + 1 < rows {
+                    claim(TileCoord::new(r + 1, c));
+                }
+                if c > 0 {
+                    claim(TileCoord::new(r, c - 1));
+                }
+                if c + 1 < cols {
+                    claim(TileCoord::new(r, c + 1));
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not a unit mesh step")]
+    fn link_to_rejects_non_neighbours() {
+        TileCoord::new(0, 0).link_to(TileCoord::new(2, 0), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a unit mesh step")]
+    fn link_to_rejects_diagonals() {
+        TileCoord::new(1, 1).link_to(TileCoord::new(2, 2), 4);
+    }
+
+    #[test]
+    fn members_into_matches_members() {
+        check("members_into == members", 100, |rng| {
+            let rows = rng.range(1, 16);
+            let cols = rng.range(1, 16);
+            let mask = Mask {
+                s_row: rng.below(16) as usize,
+                m_row: rng.below(16) as usize,
+                s_col: rng.below(16) as usize,
+                m_col: rng.below(16) as usize,
+            };
+            // A dirty reused buffer must come back identical to a fresh
+            // allocation (the simulator reuses one across ops).
+            let mut buf = vec![TileCoord::new(9, 9); 3];
+            mask.members_into(rows, cols, &mut buf);
+            assert_eq!(buf, mask.members(rows, cols));
         });
     }
 

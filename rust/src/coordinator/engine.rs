@@ -27,12 +27,12 @@ use std::sync::Mutex;
 use anyhow::Result;
 
 use super::cache::{DiskCache, DiskKey};
-use super::{simulate_schedule, AutotuneResult, Scored};
+use super::{simulate_schedule_in, AutotuneResult, Scored};
 use crate::arch::workload::Workload;
 use crate::arch::{ArchConfig, GemmShape};
 use crate::ir::Deployment;
 use crate::schedule::{candidates, Schedule};
-use crate::sim::RunStats;
+use crate::sim::{RunStats, SimArena};
 
 // The worker pool shares these across threads by reference; if a future
 // refactor makes any of them thread-unsafe this fails to compile.
@@ -324,15 +324,23 @@ impl Engine {
         let next = AtomicUsize::new(0);
         std::thread::scope(|s| {
             for _ in 0..workers {
-                s.spawn(|| loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= jobs.len() {
-                        break;
+                s.spawn(|| {
+                    // One simulation arena per worker: the resource tables
+                    // and route scratch are reused across every job this
+                    // thread evaluates (output is identical to a fresh
+                    // arena per call — pinned by the golden tests).
+                    let mut arena = SimArena::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= jobs.len() {
+                            break;
+                        }
+                        let job = &jobs[i];
+                        let stats =
+                            simulate_schedule_in(arch, job.shape, &job.sched, &mut arena).ok();
+                        self.sim_calls.fetch_add(1, Ordering::Relaxed);
+                        *results[i].lock().unwrap() = Some(stats);
                     }
-                    let job = &jobs[i];
-                    let stats = simulate_schedule(arch, job.shape, &job.sched).ok();
-                    self.sim_calls.fetch_add(1, Ordering::Relaxed);
-                    *results[i].lock().unwrap() = Some(stats);
                 });
             }
         });

@@ -27,7 +27,7 @@ use crate::arch::{ArchConfig, GemmShape};
 use crate::codegen::generate;
 pub use crate::ir::Deployment;
 use crate::schedule::{candidates, Schedule};
-use crate::sim::{simulate, RunStats};
+use crate::sim::{simulate_in, RunStats, SimArena};
 
 /// Lower a schedule for performance simulation (arch element width).
 pub fn deploy(arch: &ArchConfig, shape: GemmShape, sched: &Schedule) -> Result<Deployment> {
@@ -88,10 +88,20 @@ pub fn deploy_chunked(
 /// Simulate a (possibly chunked) deployment: chunks execute sequentially,
 /// so makespans add and traffic accumulates.
 pub fn simulate_chunked(arch: &ArchConfig, deps: &[Deployment]) -> Result<RunStats> {
+    simulate_chunked_in(arch, deps, &mut SimArena::new())
+}
+
+/// [`simulate_chunked`] reusing the caller's [`SimArena`] — the hot path
+/// for tuning loops that simulate thousands of deployments.
+pub fn simulate_chunked_in(
+    arch: &ArchConfig,
+    deps: &[Deployment],
+    arena: &mut SimArena,
+) -> Result<RunStats> {
     anyhow::ensure!(!deps.is_empty(), "no deployments");
     let mut acc: Option<RunStats> = None;
     for dep in deps {
-        let s = simulate(arch, dep)?;
+        let s = simulate_in(arch, dep, arena)?;
         acc = Some(match acc {
             None => s,
             Some(mut a) => {
@@ -119,8 +129,19 @@ pub fn simulate_schedule(
     shape: GemmShape,
     sched: &Schedule,
 ) -> Result<RunStats> {
+    simulate_schedule_in(arch, shape, sched, &mut SimArena::new())
+}
+
+/// [`simulate_schedule`] reusing the caller's [`SimArena`]: identical
+/// output, no per-call allocation of the simulator's resource tables.
+pub fn simulate_schedule_in(
+    arch: &ArchConfig,
+    shape: GemmShape,
+    sched: &Schedule,
+    arena: &mut SimArena,
+) -> Result<RunStats> {
     let deps = deploy_chunked(arch, shape, sched)?;
-    simulate_chunked(arch, &deps)
+    simulate_chunked_in(arch, &deps, arena)
 }
 
 /// One scored autotuning candidate.
@@ -148,8 +169,9 @@ impl AutotuneResult {
 /// skipped — the tuner only returns deployable schedules.
 pub fn autotune(arch: &ArchConfig, shape: GemmShape) -> Result<AutotuneResult> {
     let mut ranking = Vec::new();
+    let mut arena = SimArena::new(); // one arena across the candidate scan
     for sched in candidates(arch, shape) {
-        let Ok(stats) = simulate_schedule(arch, shape, &sched) else { continue };
+        let Ok(stats) = simulate_schedule_in(arch, shape, &sched, &mut arena) else { continue };
         ranking.push(Scored { schedule: sched, stats });
     }
     anyhow::ensure!(!ranking.is_empty(), "no deployable schedule candidate for {shape}");

@@ -599,6 +599,20 @@ impl DseResult {
             .iter()
             .map(|p| objectives.iter().map(|o| o.value(p)).collect())
             .collect();
+        // A NaN objective would silently poison the min-max normalization
+        // inside scalarize (every comparison involving it is false), so a
+        // design whose stats go non-finite must fail loudly here. The
+        // simulator guarantees finite RunStats (zero-HBM runs included),
+        // making this unreachable unless that contract breaks.
+        for (p, pt) in self.points.iter().zip(&pts) {
+            for (o, v) in objectives.iter().zip(pt) {
+                anyhow::ensure!(
+                    !v.is_nan(),
+                    "NaN {o:?} objective for {} — simulator stats must stay finite",
+                    p.arch.name
+                );
+            }
+        }
         Ok(pareto::scalarize(&pts, &senses, weights))
     }
 

@@ -22,14 +22,39 @@
 //! program order) and produces [`RunStats`]: makespan, TFLOP/s,
 //! utilization, HBM/NoC traffic, and per-superstep timing for the
 //! pipeline-stage analyses of Fig. 8.
+//!
+//! # Hot-path design (flat indexed resources + arenas)
+//!
+//! `simulate` is the inner loop under every autotune and DSE sweep, so its
+//! resource model is built on flat arrays instead of hashed collections:
+//!
+//! * directed links live in a `Vec<f64>` indexed by the dense link id
+//!   [`TileCoord::link_to`] (`4 * tile_linear + direction`), sized once
+//!   per mesh — no `HashMap<LinkId, f64>` churn per reservation;
+//! * multicast/reduce tree dedup uses an epoch-stamped bitset
+//!   (`seen[link] == epoch`), cleared in O(0) by bumping the epoch;
+//! * per-`hbm_transfer` channel grouping accumulates into per-channel
+//!   arrays reset via a touched list — no per-op `HashMap` + sort;
+//! * route/tree/member scratch `Vec`s live in a [`SimArena`] the caller
+//!   owns, so back-to-back simulations ([`simulate_in`]) reuse every
+//!   buffer. The autotuners hold one arena per worker thread.
+//!
+//! The rewrite is bit-identical to the original hashed model — the frozen
+//! [`reference`] twin and `tests/properties.rs` pin `RunStats` equality
+//! `to_bits`-exact across meshes and schedules. Process-wide throughput
+//! counters ([`sim_counters`]) feed the gated `sims_per_sec` bench metric.
 
-use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
 
 use crate::arch::ArchConfig;
-use crate::collective::{Mask, TileCoord};
+use crate::collective::{num_links, Mask, TileCoord};
 use crate::ir::{Deployment, Op};
 use crate::layout::Run;
 use crate::util::json::Json;
+
+#[doc(hidden)]
+pub mod reference;
 
 /// Matrix-engine execution time for one `m×n×k` MMAD, in ns.
 ///
@@ -55,43 +80,77 @@ pub fn engine_time_ns(arch: &ArchConfig, m: usize, n: usize, k: usize) -> f64 {
     flops / (peak_flops_per_ns * eff)
 }
 
-/// Directed mesh link identifier.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-struct LinkId {
-    from: TileCoord,
-    to: TileCoord,
+// ---- simulator throughput instrumentation --------------------------------
+
+static SIM_CALLS: AtomicU64 = AtomicU64::new(0);
+static SIM_NANOS: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide simulator throughput counters: completed [`simulate`] /
+/// [`simulate_in`] calls and accumulated in-simulator wall nanoseconds
+/// (summed across threads, so the quotient is the *mean per-call latency*,
+/// not end-to-end wall throughput). The bench harness samples this around
+/// a tuning run to report the gated `sims_per_sec` metric without counting
+/// codegen, planning, or ranking time.
+pub fn sim_counters() -> (u64, u64) {
+    (SIM_CALLS.load(Ordering::Relaxed), SIM_NANOS.load(Ordering::Relaxed))
 }
 
-/// Mutable resource state for one run.
+/// `DIT_SIM_DEBUG` probe, latched on first use: the per-superstep trace
+/// used to re-read the environment on every `simulate` call, and the DMA
+/// variant below on every DMA *leg* — a getenv syscall inside the hottest
+/// loop of the whole tuner.
+fn debug_enabled() -> bool {
+    static FLAG: OnceLock<bool> = OnceLock::new();
+    *FLAG.get_or_init(|| std::env::var("DIT_SIM_DEBUG").is_ok())
+}
+
+/// `DIT_SIM_DEBUG_DMA` probe, latched on first use (see
+/// [`debug_enabled`]).
+fn debug_dma_enabled() -> bool {
+    static FLAG: OnceLock<bool> = OnceLock::new();
+    *FLAG.get_or_init(|| std::env::var("DIT_SIM_DEBUG_DMA").is_ok())
+}
+
+// ---- flat resource model -------------------------------------------------
+
+/// Mutable resource state for one run, all flat arrays indexed by dense
+/// ids so the hot path never hashes.
+#[derive(Default)]
 struct Resources {
-    /// Directed link -> busy horizon (ns).
-    links: HashMap<LinkId, f64>,
+    /// Dense directed-link id ([`TileCoord::link_to`]) -> busy horizon
+    /// (ns). Sized to [`num_links`] once per mesh.
+    links: Vec<f64>,
     /// HBM channel -> busy horizon.
     channels: Vec<f64>,
-    /// (tile linear, engine) -> DMA queue horizon.
-    dma: Vec<Vec<f64>>,
+    /// `tile_linear * dma_engines + engine` -> DMA queue horizon.
+    dma: Vec<f64>,
+    dma_engines: usize,
+    cols: usize,
     link_gbps: f64,
     hop_ns: f64,
 }
 
 impl Resources {
-    fn new(arch: &ArchConfig) -> Resources {
-        Resources {
-            links: HashMap::new(),
-            channels: vec![0.0; arch.hbm.num_channels()],
-            dma: vec![vec![0.0; arch.tile.dma_engines]; arch.num_tiles()],
-            link_gbps: arch.noc.link_gbps(),
-            hop_ns: arch.noc.hop_ns,
-        }
+    /// Size (or re-size) for `arch` and zero every horizon.
+    fn reset(&mut self, arch: &ArchConfig) {
+        self.links.clear();
+        self.links.resize(num_links(arch.rows, arch.cols), 0.0);
+        self.channels.clear();
+        self.channels.resize(arch.hbm.num_channels(), 0.0);
+        self.dma.clear();
+        self.dma.resize(arch.num_tiles() * arch.tile.dma_engines, 0.0);
+        self.dma_engines = arch.tile.dma_engines;
+        self.cols = arch.cols;
+        self.link_gbps = arch.noc.link_gbps();
+        self.hop_ns = arch.noc.hop_ns;
     }
 
-    /// X-first (column-coordinate first) dimension-ordered route.
-    fn route(from: TileCoord, to: TileCoord) -> Vec<LinkId> {
-        Self::route_ordered(from, to, true)
-    }
-
-    fn route_ordered(from: TileCoord, to: TileCoord, col_first: bool) -> Vec<LinkId> {
-        let mut path = Vec::with_capacity(from.hops_to(to));
+    /// Write the dimension-ordered route `from -> to` into `out` as dense
+    /// link ids (cleared first; same step order as the pre-flat model:
+    /// column-coordinate first when `col_first`).
+    fn route_into(&self, out: &mut Vec<usize>, from: TileCoord, to: TileCoord, col_first: bool) {
+        out.clear();
+        let cols = self.cols;
         let mut cur = from;
         let step_col = |cur: TileCoord| {
             TileCoord::new(cur.row, if to.col > cur.col { cur.col + 1 } else { cur.col - 1 })
@@ -102,21 +161,20 @@ impl Resources {
         if col_first {
             while cur.col != to.col {
                 let next = step_col(cur);
-                path.push(LinkId { from: cur, to: next });
+                out.push(cur.link_to(next, cols));
                 cur = next;
             }
         }
         while cur.row != to.row {
             let next = step_row(cur);
-            path.push(LinkId { from: cur, to: next });
+            out.push(cur.link_to(next, cols));
             cur = next;
         }
         while cur.col != to.col {
             let next = step_col(cur);
-            path.push(LinkId { from: cur, to: next });
+            out.push(cur.link_to(next, cols));
             cur = next;
         }
-        path
     }
 
     /// Reserve a set of links for a transfer of `bytes` starting no earlier
@@ -128,17 +186,77 @@ impl Resources {
     /// packets pipeline through partially-busy paths), so the arrival is
     /// governed by the most-backlogged link plus hop latency plus the
     /// serialization of the payload — not by a whole-path mutual lock.
-    fn reserve(&mut self, links: &[LinkId], max_hops: usize, bytes: u64, t0: f64) -> (f64, f64) {
+    fn reserve(&mut self, links: &[usize], max_hops: usize, bytes: u64, t0: f64) -> (f64, f64) {
         let serial = bytes as f64 / self.link_gbps;
         let mut worst = t0;
-        for l in links {
-            let busy = self.links.entry(*l).or_insert(0.0);
+        for &l in links {
+            let busy = &mut self.links[l];
             let start = busy.max(t0);
             worst = worst.max(start);
             *busy = start + serial;
         }
         let arrival = worst + max_hops as f64 * self.hop_ns + serial;
         (worst, arrival)
+    }
+}
+
+/// Reusable scratch buffers: route/tree/member vectors, the epoch-stamped
+/// link set for collective-tree dedup, and the per-channel DMA-leg
+/// accumulators.
+#[derive(Default)]
+struct Scratch {
+    /// One XY route, as dense link ids.
+    route: Vec<usize>,
+    /// Union tree of a multicast/reduction, each link exactly once.
+    tree: Vec<usize>,
+    /// Collective group member list.
+    members: Vec<TileCoord>,
+    /// `seen[link] == epoch` marks membership in the current tree; the
+    /// epoch bump at every collective op clears the whole set in O(0).
+    seen: Vec<u64>,
+    epoch: u64,
+    /// Per-channel (bytes, run-count) accumulators for one `hbm_transfer`,
+    /// zeroed back via `chan_touched` after each op.
+    chan_bytes: Vec<u64>,
+    chan_runs: Vec<u64>,
+    chan_touched: Vec<usize>,
+}
+
+impl Scratch {
+    /// Grow (never shrink) to `arch`'s mesh and channel count. Epoch
+    /// stamps survive across runs — the epoch only ever increases, so a
+    /// stale stamp can never alias the current tree.
+    fn reset(&mut self, arch: &ArchConfig) {
+        let nl = num_links(arch.rows, arch.cols);
+        if self.seen.len() < nl {
+            self.seen.resize(nl, 0);
+        }
+        let nc = arch.hbm.num_channels();
+        if self.chan_bytes.len() < nc {
+            self.chan_bytes.resize(nc, 0);
+            self.chan_runs.resize(nc, 0);
+        }
+        self.chan_touched.clear();
+    }
+}
+
+/// Reusable simulation arena: the flat resource tables plus scratch
+/// buffers, reset (not reallocated) by every [`simulate_in`] call.
+///
+/// Hold one per thread that simulates in a loop — the serial autotuner
+/// keeps one for its whole candidate scan and the parallel engine keeps
+/// one per worker — so the hot path stays allocation-free after the first
+/// call. A fresh arena per call ([`simulate`]) is always correct, just
+/// slower.
+#[derive(Default)]
+pub struct SimArena {
+    res: Resources,
+    scratch: Scratch,
+}
+
+impl SimArena {
+    pub fn new() -> SimArena {
+        SimArena::default()
     }
 }
 
@@ -179,8 +297,15 @@ impl RunStats {
         self.tflops() / self.peak_tflops
     }
 
-    /// Achieved HBM bandwidth (GB/s) averaged over the run.
+    /// Achieved HBM bandwidth (GB/s) averaged over the run. Always
+    /// finite: a run with no HBM traffic reports 0 GB/s (and a
+    /// non-positive makespan — impossible for simulator output, which
+    /// clamps to ≥ 1e-9 ns, but reachable on hand-built stats — reports
+    /// 0 rather than ±inf/NaN).
     pub fn hbm_gbps(&self) -> f64 {
+        if self.makespan_ns <= 0.0 {
+            return 0.0;
+        }
         (self.hbm_read_bytes + self.hbm_write_bytes) as f64 / self.makespan_ns
     }
 
@@ -190,8 +315,12 @@ impl RunStats {
     }
 
     /// Operational intensity actually achieved (FLOP per HBM byte).
+    /// Always finite: an SPM-resident run with zero HBM bytes reports
+    /// FLOPs-per-single-byte — a huge but finite stand-in for "infinite
+    /// intensity" that keeps roofline plots, report tables, and Pareto
+    /// scalarization NaN-free (0/0 used to poison all three).
     pub fn intensity(&self) -> f64 {
-        self.useful_flops / (self.hbm_read_bytes + self.hbm_write_bytes) as f64
+        self.useful_flops / (self.hbm_read_bytes + self.hbm_write_bytes).max(1) as f64
     }
 
     /// Multiply-accumulates executed (padding included): one MAC is two
@@ -275,9 +404,26 @@ impl RunStats {
     }
 }
 
-/// Simulate a deployment on an architecture.
+/// Simulate a deployment on an architecture with a private, throwaway
+/// arena. Correct everywhere; callers that simulate in a loop should hold
+/// a [`SimArena`] and use [`simulate_in`] instead.
 pub fn simulate(arch: &ArchConfig, dep: &Deployment) -> anyhow::Result<RunStats> {
-    let mut res = Resources::new(arch);
+    simulate_in(arch, dep, &mut SimArena::new())
+}
+
+/// Simulate a deployment reusing the caller's [`SimArena`]: identical
+/// output to [`simulate`] (the arena is fully reset, and mesh/channel
+/// resizes are handled), but the route/tree/resource buffers are reused
+/// across calls — the allocation-free hot path under autotuning and DSE.
+pub fn simulate_in(
+    arch: &ArchConfig,
+    dep: &Deployment,
+    arena: &mut SimArena,
+) -> anyhow::Result<RunStats> {
+    let t_wall = std::time::Instant::now();
+    arena.res.reset(arch);
+    arena.scratch.reset(arch);
+    let SimArena { res, scratch } = arena;
     let mut stats = RunStats {
         makespan_ns: 0.0,
         useful_flops: dep.useful_flops(),
@@ -301,7 +447,7 @@ pub fn simulate(arch: &ArchConfig, dep: &Deployment) -> anyhow::Result<RunStats>
     let n_steps = dep.supersteps();
     let mut t_step = 0.0f64; // global superstep start
     let mut t_prev = 0.0f64; // previous superstep start (DMA prefetch window)
-    let debug = std::env::var("DIT_SIM_DEBUG").is_ok();
+    let debug = debug_enabled();
 
     // Multicast groups resolved once per op via mask membership.
     for step in 0..n_steps {
@@ -342,30 +488,34 @@ pub fn simulate(arch: &ArchConfig, dep: &Deployment) -> anyhow::Result<RunStats>
                         // (double-buffered DMA descriptor queues): the
                         // channel may start serving during the previous
                         // step; delivery is still barrier-synchronized.
-                        hbm_transfer(arch, &mut res, &mut stats, tile, tile_lin, runs, t_prev, true)
+                        hbm_transfer(
+                            arch, res, scratch, &mut stats, tile, tile_lin, runs, t_prev, true,
+                        )
                     }
                     Op::DmaOut { runs, .. } => {
                         let bytes = runs.iter().map(|r| r.bytes).sum::<u64>();
                         stats.hbm_write_bytes += bytes;
                         stats.spm_bytes += bytes; // read out of the tile's L1
-                        hbm_transfer(arch, &mut res, &mut stats, tile, tile_lin, runs, t_step, false)
+                        hbm_transfer(
+                            arch, res, scratch, &mut stats, tile, tile_lin, runs, t_step, false,
+                        )
                     }
                     Op::Multicast { group, bytes, .. } => {
-                        multicast_transfer(arch, &mut res, &mut stats, tile, group, *bytes, t_step)
+                        multicast_transfer(arch, res, scratch, &mut stats, tile, group, *bytes, t_step)
                     }
                     Op::Send { to, bytes, .. } => {
-                        let path = Resources::route(tile, *to);
-                        let hops = path.len();
+                        res.route_into(&mut scratch.route, tile, *to, true);
+                        let hops = scratch.route.len();
                         stats.noc_link_bytes += *bytes * hops as u64;
                         stats.spm_bytes += *bytes * 2; // read at source, write at sink
-                        let (_, end) = res.reserve(&path, hops, *bytes, t_step);
+                        let (_, end) = res.reserve(&scratch.route, hops, *bytes, t_step);
                         end
                     }
                     Op::Reduce { group, root, bytes, .. } => {
                         // Emitted by every member; charge the tree once,
                         // from the member that *is* the root.
                         if tile == *root {
-                            reduce_transfer(arch, &mut res, &mut stats, group, *root, *bytes, t_step)
+                            reduce_transfer(arch, res, scratch, &mut stats, group, *root, *bytes, t_step)
                         } else {
                             t_step
                         }
@@ -396,6 +546,8 @@ pub fn simulate(arch: &ArchConfig, dep: &Deployment) -> anyhow::Result<RunStats>
     }
 
     stats.makespan_ns = t_step.max(1e-9);
+    SIM_CALLS.fetch_add(1, Ordering::Relaxed);
+    SIM_NANOS.fetch_add(t_wall.elapsed().as_nanos() as u64, Ordering::Relaxed);
     Ok(stats)
 }
 
@@ -417,13 +569,15 @@ fn op_kind(op: &Op) -> &'static str {
 /// Per channel: queue behind the channel's horizon, pay per-request
 /// overhead per burst (strided layouts bleed here) and stream the bytes at
 /// channel bandwidth × efficiency; then traverse the mesh from the
-/// channel's edge router (read) or to it (write). The op completes when
-/// the slowest channel leg completes. The tile's DMA engines round-robin
-/// over the channel legs.
+/// channel's edge router (read) or to it (write) — a write's channel
+/// service starts only once the payload has arrived at the router. The op
+/// completes when the slowest channel leg completes. The tile's DMA
+/// engines round-robin over the channel legs.
 #[allow(clippy::too_many_arguments)]
 fn hbm_transfer(
     arch: &ArchConfig,
     res: &mut Resources,
+    scratch: &mut Scratch,
     stats: &mut RunStats,
     tile: TileCoord,
     tile_lin: usize,
@@ -431,32 +585,32 @@ fn hbm_transfer(
     t0: f64,
     is_read: bool,
 ) -> f64 {
-    // Group runs by channel. Legs are processed in ascending channel
-    // order: HashMap iteration order varies per instance, and the leg →
-    // DMA-engine round-robin below is order-sensitive — unordered
-    // iteration would make two simulations of the same deployment
-    // disagree (the parallel autotuning engine requires simulate() to be
-    // a pure function of its inputs).
-    let mut per_chan: HashMap<usize, (u64, u64)> = HashMap::new(); // ch -> (bytes, nruns)
+    // Group runs by channel in the reusable accumulators. Legs are
+    // processed in ascending channel order: the leg → DMA-engine
+    // round-robin below is order-sensitive, and simulate() must be a pure
+    // function of its inputs (the parallel autotuning engine requires two
+    // simulations of the same deployment to agree bit for bit).
+    let Scratch { route, chan_bytes, chan_runs, chan_touched, .. } = scratch;
     for r in runs {
-        let e = per_chan.entry(r.channel).or_insert((0, 0));
-        e.0 += r.bytes;
-        e.1 += 1;
+        if chan_runs[r.channel] == 0 {
+            chan_touched.push(r.channel);
+        }
+        chan_bytes[r.channel] += r.bytes;
+        chan_runs[r.channel] += 1;
     }
-    let mut legs: Vec<(usize, (u64, u64))> = per_chan.into_iter().collect();
-    legs.sort_unstable_by_key(|(ch, _)| *ch);
+    chan_touched.sort_unstable();
+    let debug_dma = debug_dma_enabled();
     let mut op_end = t0;
-    let n_engines = res.dma[tile_lin].len();
-    for (idx, (ch, (bytes, nruns))) in legs.into_iter().enumerate() {
+    let n_engines = res.dma_engines;
+    for (idx, &ch) in chan_touched.iter().enumerate() {
+        let bytes = chan_bytes[ch];
+        let nruns = chan_runs[ch];
         // DMA engine availability.
         let engine = idx % n_engines;
-        let t_engine = res.dma[tile_lin][engine].max(t0);
+        let t_engine = res.dma[tile_lin * n_engines + engine].max(t0);
         // Channel service.
         let service = nruns as f64 * arch.hbm.request_overhead_ns
             + bytes as f64 / (arch.hbm.channel_gbps * arch.hbm.stream_efficiency);
-        let ch_start = res.channels[ch].max(t_engine);
-        let ch_end = ch_start + service;
-        res.channels[ch] = ch_end;
         // Mesh leg between the channel's router and the tile. Memory
         // traffic is dimension-ordered so it travels the channel's own
         // dedicated lane (its row for west channels, its column for south
@@ -468,12 +622,31 @@ fn hbm_transfer(
         let is_west = ch < arch.hbm.channels_per_edge;
         let (from, to) = if is_read { (router, tile) } else { (tile, router) };
         let col_first = is_west == is_read;
-        let path = Resources::route_ordered(from, to, col_first);
-        let hops = path.len();
+        res.route_into(route, from, to, col_first);
+        let hops = route.len();
         stats.noc_link_bytes += bytes * hops as u64;
-        let (_, arr) = res.reserve(&path, hops, bytes, if is_read { ch_end } else { t_engine });
-        let leg_end = if is_read { arr } else { arr.max(ch_end) };
-        if std::env::var("DIT_SIM_DEBUG_DMA").is_ok() && leg_end - t0 > 3000.0 {
+        let (leg_end, ch_start, ch_end) = if is_read {
+            // Read: the channel serves first, then the payload crosses
+            // the mesh from the edge router to the tile.
+            let ch_start = res.channels[ch].max(t_engine);
+            let ch_end = ch_start + service;
+            res.channels[ch] = ch_end;
+            let (_, arr) = res.reserve(route, hops, bytes, ch_end);
+            (arr, ch_start, ch_end)
+        } else {
+            // Write: the payload must reach the edge router before the
+            // channel can serve a single byte, so channel service queues
+            // behind the NoC arrival. (It used to start at DMA-engine
+            // availability, letting a congested store path overlap its
+            // own mesh traversal with channel service — bytes served
+            // before they could exist at the router.)
+            let (_, arr) = res.reserve(route, hops, bytes, t_engine);
+            let ch_start = res.channels[ch].max(arr);
+            let ch_end = ch_start + service;
+            res.channels[ch] = ch_end;
+            (ch_end, ch_start, ch_end)
+        };
+        if debug_dma && leg_end - t0 > 3000.0 {
             eprintln!(
                 "  dma {} ch{ch} {bytes}B x{nruns}: tile {tile} queue {:.0} service {service:.0} noc {:.0} total {:.0}",
                 if is_read { "r" } else { "w" },
@@ -482,37 +655,49 @@ fn hbm_transfer(
                 leg_end - t0,
             );
         }
-        res.dma[tile_lin][engine] = leg_end;
+        res.dma[tile_lin * n_engines + engine] = leg_end;
         op_end = op_end.max(leg_end);
     }
+    // Leave the accumulators zeroed for the next transfer.
+    for &ch in chan_touched.iter() {
+        chan_bytes[ch] = 0;
+        chan_runs[ch] = 0;
+    }
+    chan_touched.clear();
     op_end
 }
 
 /// Hardware multicast: build the XY tree root→members, charge every tree
 /// link exactly once (this is the collective advantage over unicast).
+#[allow(clippy::too_many_arguments)]
 fn multicast_transfer(
     arch: &ArchConfig,
     res: &mut Resources,
+    scratch: &mut Scratch,
     stats: &mut RunStats,
     root: TileCoord,
     group: &Mask,
     bytes: u64,
     t0: f64,
 ) -> f64 {
-    let members = group.members(arch.rows, arch.cols);
-    let mut seen: std::collections::HashSet<LinkId> = std::collections::HashSet::new();
-    let mut tree: Vec<LinkId> = Vec::new();
+    group.members_into(arch.rows, arch.cols, &mut scratch.members);
+    scratch.epoch += 1;
+    let epoch = scratch.epoch;
+    let Scratch { route, tree, members, seen, .. } = scratch;
+    tree.clear();
     let mut max_hops = 0usize;
-    for m in &members {
-        if *m == root {
+    for &m in members.iter() {
+        if m == root {
             continue;
         }
-        for l in Resources::route(root, *m) {
-            if seen.insert(l) {
+        res.route_into(route, root, m, true);
+        for &l in route.iter() {
+            if seen[l] != epoch {
+                seen[l] = epoch;
                 tree.push(l);
             }
         }
-        max_hops = max_hops.max(root.hops_to(*m));
+        max_hops = max_hops.max(root.hops_to(m));
     }
     if tree.is_empty() {
         return t0; // self-only group
@@ -520,31 +705,37 @@ fn multicast_transfer(
     stats.noc_link_bytes += bytes * tree.len() as u64;
     // SPM endpoints: one read at the root, one write per other member.
     stats.spm_bytes += bytes * members.len() as u64;
-    let (_, end) = res.reserve(&tree, max_hops, bytes, t0);
+    let (_, end) = res.reserve(tree, max_hops, bytes, t0);
     end
 }
 
 /// Hardware reduction: the reversed tree members→root with in-network
 /// combining; each link carries the payload once.
+#[allow(clippy::too_many_arguments)]
 fn reduce_transfer(
     arch: &ArchConfig,
     res: &mut Resources,
+    scratch: &mut Scratch,
     stats: &mut RunStats,
     group: &Mask,
     root: TileCoord,
     bytes: u64,
     t0: f64,
 ) -> f64 {
-    let members = group.members(arch.rows, arch.cols);
-    let mut seen: std::collections::HashSet<LinkId> = std::collections::HashSet::new();
-    let mut tree: Vec<LinkId> = Vec::new();
+    group.members_into(arch.rows, arch.cols, &mut scratch.members);
+    scratch.epoch += 1;
+    let epoch = scratch.epoch;
+    let Scratch { route, tree, members, seen, .. } = scratch;
+    tree.clear();
     let mut max_hops = 0usize;
-    for m in &members {
-        if *m == root {
+    for &m in members.iter() {
+        if m == root {
             continue;
         }
-        for l in Resources::route(*m, root) {
-            if seen.insert(l) {
+        res.route_into(route, m, root, true);
+        for &l in route.iter() {
+            if seen[l] != epoch {
+                seen[l] = epoch;
                 tree.push(l);
             }
         }
@@ -557,7 +748,7 @@ fn reduce_transfer(
     // SPM endpoints: one read per contributing member, one result write
     // at the root (in-network combining touches no intermediate SPM).
     stats.spm_bytes += bytes * (members.len() as u64 + 1);
-    let (_, end) = res.reserve(&tree, max_hops, bytes, t0);
+    let (_, end) = res.reserve(tree, max_hops, bytes, t0);
     end
 }
 
@@ -571,6 +762,24 @@ mod tests {
     fn run(arch: &ArchConfig, shape: GemmShape, sched: &Schedule) -> RunStats {
         let dep = generate(arch, shape, sched, arch.elem_bytes).unwrap();
         simulate(arch, &dep).unwrap()
+    }
+
+    fn blank_stats() -> RunStats {
+        RunStats {
+            makespan_ns: 0.0,
+            useful_flops: 0.0,
+            total_flops: 0.0,
+            hbm_read_bytes: 0,
+            hbm_write_bytes: 0,
+            noc_link_bytes: 0,
+            spm_bytes: 0,
+            peak_tflops: 1.0,
+            hbm_peak_gbps: 1.0,
+            supersteps: 0,
+            compute_busy_ns: 0.0,
+            num_tiles: 0,
+            step_end_ns: Vec::new(),
+        }
     }
 
     #[test]
@@ -599,6 +808,146 @@ mod tests {
         assert_eq!(a.hbm_read_bytes, b.hbm_read_bytes);
         assert_eq!(a.noc_link_bytes, b.noc_link_bytes);
         assert_eq!(a.spm_bytes, b.spm_bytes);
+    }
+
+    #[test]
+    fn arena_reuse_is_bit_identical_across_meshes() {
+        // One arena reused across different mesh geometries and schedules
+        // (exercising every resize path) must match a fresh arena per
+        // call bit for bit — reuse may never leak horizons, stale epochs,
+        // or channel accumulators between runs.
+        let mut arena = SimArena::new();
+        let shape = GemmShape::new(128, 96, 256);
+        for (rows, cols) in [(4usize, 4usize), (2, 4), (4, 2), (4, 4)] {
+            let arch = ArchConfig::tiny(rows, cols);
+            for sched in [Schedule::summa(&arch, shape), Schedule::baseline(&arch, shape)] {
+                let dep = generate(&arch, shape, &sched, arch.elem_bytes).unwrap();
+                let fresh = simulate(&arch, &dep).unwrap();
+                let reused = simulate_in(&arch, &dep, &mut arena).unwrap();
+                assert_eq!(
+                    fresh.makespan_ns.to_bits(),
+                    reused.makespan_ns.to_bits(),
+                    "{rows}x{cols} {}",
+                    sched.name()
+                );
+                assert_eq!(fresh.noc_link_bytes, reused.noc_link_bytes);
+                assert_eq!(fresh.spm_bytes, reused.spm_bytes);
+                assert_eq!(fresh.compute_busy_ns.to_bits(), reused.compute_busy_ns.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn sim_counters_accumulate() {
+        let arch = ArchConfig::tiny(2, 2);
+        let shape = GemmShape::new(64, 64, 64);
+        let (calls0, _) = sim_counters();
+        run(&arch, shape, &Schedule::summa(&arch, shape));
+        let (calls1, nanos1) = sim_counters();
+        assert!(calls1 > calls0, "simulate must count itself");
+        assert!(nanos1 > 0);
+    }
+
+    #[test]
+    fn debug_probes_latch_once() {
+        // The env probes are read exactly once per process (they used to
+        // be a getenv per simulate call / per DMA leg); flipping the
+        // variable afterwards must change neither the probe nor the
+        // simulated output.
+        let arch = ArchConfig::tiny(2, 2);
+        let shape = GemmShape::new(64, 64, 64);
+        let before_stats = run(&arch, shape, &Schedule::summa(&arch, shape));
+        let before = (debug_enabled(), debug_dma_enabled());
+        std::env::set_var("DIT_SIM_DEBUG", "1");
+        std::env::set_var("DIT_SIM_DEBUG_DMA", "1");
+        assert_eq!((debug_enabled(), debug_dma_enabled()), before, "probes must latch");
+        let after_stats = run(&arch, shape, &Schedule::summa(&arch, shape));
+        std::env::remove_var("DIT_SIM_DEBUG");
+        std::env::remove_var("DIT_SIM_DEBUG_DMA");
+        assert_eq!((debug_enabled(), debug_dma_enabled()), before, "probes must stay latched");
+        assert_eq!(before_stats.makespan_ns.to_bits(), after_stats.makespan_ns.to_bits());
+        assert_eq!(before_stats.spm_bytes, after_stats.spm_bytes);
+    }
+
+    #[test]
+    fn write_channel_queues_behind_noc_arrival() {
+        // Regression for the DmaOut ordering bug: channel service used to
+        // start at DMA-engine availability — *before* the payload could
+        // have crossed the mesh to the edge router — so a congested store
+        // path never delayed channel occupancy.
+        let arch = ArchConfig::tiny(4, 4);
+        let bytes = 1u64 << 16;
+        let runs = [Run { channel: 0, offset: 0, bytes }];
+        let tile = TileCoord::new(0, 3); // 3 hops east of channel 0's router (0,0)
+        let write = |congest: bool| {
+            let mut arena = SimArena::new();
+            arena.res.reset(&arch);
+            arena.scratch.reset(&arch);
+            let SimArena { res, scratch } = &mut arena;
+            if congest {
+                // Pre-load the exact store route (west writes go
+                // row-first) with a large earlier transfer.
+                res.route_into(&mut scratch.route, tile, TileCoord::new(0, 0), false);
+                let hops = scratch.route.len();
+                res.reserve(&scratch.route, hops, 1 << 22, 0.0);
+            }
+            let mut stats = blank_stats();
+            let end = hbm_transfer(
+                &arch,
+                res,
+                scratch,
+                &mut stats,
+                tile,
+                tile.linear(arch.cols),
+                &runs,
+                0.0,
+                false,
+            );
+            (end, res.channels[0])
+        };
+        let (free_end, free_ch) = write(false);
+        let (cong_end, cong_ch) = write(true);
+        // Even uncongested, the channel cannot finish before NoC arrival
+        // plus its own service time.
+        let serial = bytes as f64 / arch.noc.link_gbps();
+        let noc_arrival = 3.0 * arch.noc.hop_ns + serial;
+        let service = arch.hbm.request_overhead_ns
+            + bytes as f64 / (arch.hbm.channel_gbps * arch.hbm.stream_efficiency);
+        assert!(
+            (free_ch - (noc_arrival + service)).abs() < 1e-6,
+            "channel horizon {free_ch} != arrival {noc_arrival} + service {service}"
+        );
+        assert_eq!(free_end, free_ch, "a write completes when its channel service does");
+        // A congested store path delays when the channel starts serving.
+        assert!(
+            cong_ch > free_ch + 1.0,
+            "congestion must delay channel occupancy: {cong_ch} vs {free_ch}"
+        );
+        assert!(cong_end > free_end);
+    }
+
+    #[test]
+    fn zero_hbm_stats_are_finite() {
+        // SPM-resident deployments produce zero HBM bytes; intensity and
+        // bandwidth must stay finite (0/0 used to propagate NaN into
+        // report tables and Pareto scalarization).
+        let mut s = blank_stats();
+        s.makespan_ns = 1000.0;
+        s.useful_flops = 1e9;
+        assert!(s.intensity().is_finite());
+        assert_eq!(s.intensity(), 1e9, "zero HBM bytes read as FLOPs per single byte");
+        assert_eq!(s.hbm_gbps(), 0.0);
+        assert!(s.hbm_utilization().is_finite());
+        // Hand-built stats with a zero makespan must not divide by zero
+        // either.
+        s.makespan_ns = 0.0;
+        assert_eq!(s.hbm_gbps(), 0.0);
+        // Simulator output is never zero-makespan, and stays finite even
+        // for an empty deployment.
+        let arch = ArchConfig::tiny(2, 2);
+        let shape = GemmShape::new(64, 64, 64);
+        let stats = run(&arch, shape, &Schedule::summa(&arch, shape));
+        assert!(stats.intensity().is_finite() && stats.hbm_gbps().is_finite());
     }
 
     #[test]

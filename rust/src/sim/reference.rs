@@ -1,0 +1,323 @@
+//! Frozen reference implementation of the simulator resource model.
+//!
+//! This is the pre-flat-index model (hashed directed-link map, per-op
+//! `HashSet` tree dedup, per-transfer channel `HashMap`) kept as an
+//! *executable golden*: `tests/properties.rs` asserts that the optimized
+//! arena simulator in the parent module produces bit-identical `RunStats`
+//! against this twin across meshes, shapes, and schedules. A dual
+//! implementation is a stronger pin than committed constants — it holds
+//! on any machine and any future schedule, not just the tuples someone
+//! happened to record.
+//!
+//! Two deliberate differences from the historical code it snapshots:
+//! the `DmaOut` ordering bug is fixed here too (write-channel service
+//! queues behind NoC arrival — both models pin the *corrected* physics,
+//! and the fix itself has its own regression test in the parent module),
+//! and the debug `eprintln!` traces are stripped (they never affected the
+//! returned stats).
+//!
+//! Do not optimize or refactor this module; it exists to stay still.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::arch::ArchConfig;
+use crate::collective::{Mask, TileCoord};
+use crate::ir::{Deployment, Op};
+use crate::layout::Run;
+
+use super::{engine_time_ns, RunStats};
+
+/// Directed mesh link identifier (the hashed pre-flat form).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct LinkId {
+    from: TileCoord,
+    to: TileCoord,
+}
+
+struct Resources {
+    /// Directed link -> busy horizon (ns).
+    links: HashMap<LinkId, f64>,
+    /// HBM channel -> busy horizon.
+    channels: Vec<f64>,
+    /// (tile linear, engine) -> DMA queue horizon.
+    dma: Vec<Vec<f64>>,
+    link_gbps: f64,
+    hop_ns: f64,
+}
+
+impl Resources {
+    fn new(arch: &ArchConfig) -> Resources {
+        Resources {
+            links: HashMap::new(),
+            channels: vec![0.0; arch.hbm.num_channels()],
+            dma: vec![vec![0.0; arch.tile.dma_engines]; arch.num_tiles()],
+            link_gbps: arch.noc.link_gbps(),
+            hop_ns: arch.noc.hop_ns,
+        }
+    }
+
+    /// X-first (column-coordinate first) dimension-ordered route.
+    fn route(from: TileCoord, to: TileCoord) -> Vec<LinkId> {
+        Self::route_ordered(from, to, true)
+    }
+
+    fn route_ordered(from: TileCoord, to: TileCoord, col_first: bool) -> Vec<LinkId> {
+        let mut path = Vec::with_capacity(from.hops_to(to));
+        let mut cur = from;
+        let step_col = |cur: TileCoord| {
+            TileCoord::new(cur.row, if to.col > cur.col { cur.col + 1 } else { cur.col - 1 })
+        };
+        let step_row = |cur: TileCoord| {
+            TileCoord::new(if to.row > cur.row { cur.row + 1 } else { cur.row - 1 }, cur.col)
+        };
+        if col_first {
+            while cur.col != to.col {
+                let next = step_col(cur);
+                path.push(LinkId { from: cur, to: next });
+                cur = next;
+            }
+        }
+        while cur.row != to.row {
+            let next = step_row(cur);
+            path.push(LinkId { from: cur, to: next });
+            cur = next;
+        }
+        while cur.col != to.col {
+            let next = step_col(cur);
+            path.push(LinkId { from: cur, to: next });
+            cur = next;
+        }
+        path
+    }
+
+    fn reserve(&mut self, links: &[LinkId], max_hops: usize, bytes: u64, t0: f64) -> (f64, f64) {
+        let serial = bytes as f64 / self.link_gbps;
+        let mut worst = t0;
+        for l in links {
+            let busy = self.links.entry(*l).or_insert(0.0);
+            let start = busy.max(t0);
+            worst = worst.max(start);
+            *busy = start + serial;
+        }
+        let arrival = worst + max_hops as f64 * self.hop_ns + serial;
+        (worst, arrival)
+    }
+}
+
+/// Simulate a deployment with the frozen hashed resource model. Same
+/// contract as [`super::simulate`]; exists only for the golden
+/// bit-identity tests (and is therefore excluded from the throughput
+/// counters).
+pub fn simulate(arch: &ArchConfig, dep: &Deployment) -> anyhow::Result<RunStats> {
+    let mut res = Resources::new(arch);
+    let mut stats = RunStats {
+        makespan_ns: 0.0,
+        useful_flops: dep.useful_flops(),
+        total_flops: 0.0,
+        hbm_read_bytes: 0,
+        hbm_write_bytes: 0,
+        noc_link_bytes: 0,
+        spm_bytes: 0,
+        peak_tflops: arch.peak_tflops(),
+        hbm_peak_gbps: arch.hbm.total_gbps(),
+        supersteps: dep.supersteps(),
+        compute_busy_ns: 0.0,
+        num_tiles: arch.num_tiles(),
+        step_end_ns: Vec::with_capacity(dep.supersteps()),
+    };
+
+    let barrier_ns = (arch.rows + arch.cols) as f64 * arch.noc.hop_ns;
+
+    let n_steps = dep.supersteps();
+    let mut t_step = 0.0f64;
+    let mut t_prev = 0.0f64;
+
+    for step in 0..n_steps {
+        let mut step_end = t_step;
+
+        for prog in &dep.programs {
+            let Some(ss) = prog.steps.get(step) else { continue };
+            let tile = prog.tile;
+            let tile_lin = tile.linear(arch.cols);
+
+            let mut engine_t = t_step;
+            for op in &ss.ops {
+                if let Op::Mmad { m, n, k, .. } = op {
+                    let dt = engine_time_ns(arch, *m, *n, *k);
+                    engine_t += dt;
+                    stats.compute_busy_ns += dt;
+                    stats.total_flops += 2.0 * (*m as f64) * (*n as f64) * (*k as f64);
+                    stats.spm_bytes += ((m * k + k * n + 2 * m * n) * arch.elem_bytes) as u64;
+                }
+            }
+            step_end = step_end.max(engine_t);
+
+            for op in &ss.ops {
+                let end = match op {
+                    Op::DmaIn { runs, .. } => {
+                        let bytes = runs.iter().map(|r| r.bytes).sum::<u64>();
+                        stats.hbm_read_bytes += bytes;
+                        stats.spm_bytes += bytes;
+                        hbm_transfer(arch, &mut res, &mut stats, tile, tile_lin, runs, t_prev, true)
+                    }
+                    Op::DmaOut { runs, .. } => {
+                        let bytes = runs.iter().map(|r| r.bytes).sum::<u64>();
+                        stats.hbm_write_bytes += bytes;
+                        stats.spm_bytes += bytes;
+                        hbm_transfer(arch, &mut res, &mut stats, tile, tile_lin, runs, t_step, false)
+                    }
+                    Op::Multicast { group, bytes, .. } => {
+                        multicast_transfer(arch, &mut res, &mut stats, tile, group, *bytes, t_step)
+                    }
+                    Op::Send { to, bytes, .. } => {
+                        let path = Resources::route(tile, *to);
+                        let hops = path.len();
+                        stats.noc_link_bytes += *bytes * hops as u64;
+                        stats.spm_bytes += *bytes * 2;
+                        let (_, end) = res.reserve(&path, hops, *bytes, t_step);
+                        end
+                    }
+                    Op::Reduce { group, root, bytes, .. } => {
+                        if tile == *root {
+                            reduce_transfer(arch, &mut res, &mut stats, group, *root, *bytes, t_step)
+                        } else {
+                            t_step
+                        }
+                    }
+                    Op::RecvMulticast { .. } | Op::Recv { .. } => t_step,
+                    Op::Mmad { .. } => continue,
+                };
+                step_end = step_end.max(end);
+            }
+        }
+
+        t_prev = t_step;
+        t_step = step_end + barrier_ns;
+        stats.step_end_ns.push(t_step);
+    }
+
+    stats.makespan_ns = t_step.max(1e-9);
+    Ok(stats)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn hbm_transfer(
+    arch: &ArchConfig,
+    res: &mut Resources,
+    stats: &mut RunStats,
+    tile: TileCoord,
+    tile_lin: usize,
+    runs: &[Run],
+    t0: f64,
+    is_read: bool,
+) -> f64 {
+    // Ascending channel order: the leg → engine round-robin is
+    // order-sensitive and HashMap iteration order is not deterministic.
+    let mut per_chan: HashMap<usize, (u64, u64)> = HashMap::new(); // ch -> (bytes, nruns)
+    for r in runs {
+        let e = per_chan.entry(r.channel).or_insert((0, 0));
+        e.0 += r.bytes;
+        e.1 += 1;
+    }
+    let mut legs: Vec<(usize, (u64, u64))> = per_chan.into_iter().collect();
+    legs.sort_unstable_by_key(|(ch, _)| *ch);
+    let mut op_end = t0;
+    let n_engines = res.dma[tile_lin].len();
+    for (idx, (ch, (bytes, nruns))) in legs.into_iter().enumerate() {
+        let engine = idx % n_engines;
+        let t_engine = res.dma[tile_lin][engine].max(t0);
+        let service = nruns as f64 * arch.hbm.request_overhead_ns
+            + bytes as f64 / (arch.hbm.channel_gbps * arch.hbm.stream_efficiency);
+        let router = arch.hbm_router(ch);
+        let is_west = ch < arch.hbm.channels_per_edge;
+        let (from, to) = if is_read { (router, tile) } else { (tile, router) };
+        let col_first = is_west == is_read;
+        let path = Resources::route_ordered(from, to, col_first);
+        let hops = path.len();
+        stats.noc_link_bytes += bytes * hops as u64;
+        let leg_end = if is_read {
+            let ch_start = res.channels[ch].max(t_engine);
+            let ch_end = ch_start + service;
+            res.channels[ch] = ch_end;
+            let (_, arr) = res.reserve(&path, hops, bytes, ch_end);
+            arr
+        } else {
+            // Write-channel service queues behind NoC arrival (the
+            // DmaOut ordering fix, mirrored in the optimized model).
+            let (_, arr) = res.reserve(&path, hops, bytes, t_engine);
+            let ch_start = res.channels[ch].max(arr);
+            let ch_end = ch_start + service;
+            res.channels[ch] = ch_end;
+            ch_end
+        };
+        res.dma[tile_lin][engine] = leg_end;
+        op_end = op_end.max(leg_end);
+    }
+    op_end
+}
+
+fn multicast_transfer(
+    arch: &ArchConfig,
+    res: &mut Resources,
+    stats: &mut RunStats,
+    root: TileCoord,
+    group: &Mask,
+    bytes: u64,
+    t0: f64,
+) -> f64 {
+    let members = group.members(arch.rows, arch.cols);
+    let mut seen: HashSet<LinkId> = HashSet::new();
+    let mut tree: Vec<LinkId> = Vec::new();
+    let mut max_hops = 0usize;
+    for m in &members {
+        if *m == root {
+            continue;
+        }
+        for l in Resources::route(root, *m) {
+            if seen.insert(l) {
+                tree.push(l);
+            }
+        }
+        max_hops = max_hops.max(root.hops_to(*m));
+    }
+    if tree.is_empty() {
+        return t0; // self-only group
+    }
+    stats.noc_link_bytes += bytes * tree.len() as u64;
+    stats.spm_bytes += bytes * members.len() as u64;
+    let (_, end) = res.reserve(&tree, max_hops, bytes, t0);
+    end
+}
+
+fn reduce_transfer(
+    arch: &ArchConfig,
+    res: &mut Resources,
+    stats: &mut RunStats,
+    group: &Mask,
+    root: TileCoord,
+    bytes: u64,
+    t0: f64,
+) -> f64 {
+    let members = group.members(arch.rows, arch.cols);
+    let mut seen: HashSet<LinkId> = HashSet::new();
+    let mut tree: Vec<LinkId> = Vec::new();
+    let mut max_hops = 0usize;
+    for m in &members {
+        if *m == root {
+            continue;
+        }
+        for l in Resources::route(*m, root) {
+            if seen.insert(l) {
+                tree.push(l);
+            }
+        }
+        max_hops = max_hops.max(m.hops_to(root));
+    }
+    if tree.is_empty() {
+        return t0;
+    }
+    stats.noc_link_bytes += bytes * tree.len() as u64;
+    stats.spm_bytes += bytes * (members.len() as u64 + 1);
+    let (_, end) = res.reserve(&tree, max_hops, bytes, t0);
+    end
+}

@@ -11,8 +11,77 @@ use dit::coordinator;
 use dit::functional::{max_abs_diff, mmad_f32, run_gemm};
 use dit::ir::{validate, IrError, Op};
 use dit::schedule::{candidates, Schedule};
+use dit::sim;
 use dit::util::quickprop::check;
 use dit::util::rng::Rng;
+
+/// Assert two `RunStats` are bit-identical: `to_bits` on every f64
+/// (including the whole per-superstep timeline) and exact equality on
+/// every counter. Tolerance-free by design — the golden fidelity tests
+/// below pin the flat-arena simulator to the frozen reference model.
+fn assert_runstats_bits_eq(a: &dit::sim::RunStats, b: &dit::sim::RunStats, ctx: &str) {
+    assert_eq!(a.makespan_ns.to_bits(), b.makespan_ns.to_bits(), "{ctx}: makespan_ns");
+    assert_eq!(a.useful_flops.to_bits(), b.useful_flops.to_bits(), "{ctx}: useful_flops");
+    assert_eq!(a.total_flops.to_bits(), b.total_flops.to_bits(), "{ctx}: total_flops");
+    assert_eq!(a.hbm_read_bytes, b.hbm_read_bytes, "{ctx}: hbm_read_bytes");
+    assert_eq!(a.hbm_write_bytes, b.hbm_write_bytes, "{ctx}: hbm_write_bytes");
+    assert_eq!(a.noc_link_bytes, b.noc_link_bytes, "{ctx}: noc_link_bytes");
+    assert_eq!(a.spm_bytes, b.spm_bytes, "{ctx}: spm_bytes");
+    assert_eq!(a.peak_tflops.to_bits(), b.peak_tflops.to_bits(), "{ctx}: peak_tflops");
+    assert_eq!(a.hbm_peak_gbps.to_bits(), b.hbm_peak_gbps.to_bits(), "{ctx}: hbm_peak_gbps");
+    assert_eq!(a.supersteps, b.supersteps, "{ctx}: supersteps");
+    assert_eq!(
+        a.compute_busy_ns.to_bits(),
+        b.compute_busy_ns.to_bits(),
+        "{ctx}: compute_busy_ns"
+    );
+    assert_eq!(a.num_tiles, b.num_tiles, "{ctx}: num_tiles");
+    assert_eq!(a.step_end_ns.len(), b.step_end_ns.len(), "{ctx}: step count");
+    for (i, (x, y)) in a.step_end_ns.iter().zip(&b.step_end_ns).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: step_end_ns[{i}]");
+    }
+}
+
+/// Golden refactor-fidelity pin: the flat-arena simulator (fresh arena
+/// *and* one shared arena reused across the whole matrix, exercising every
+/// resize path) is bit-identical to the frozen hashed reference model
+/// (`sim::reference`) across square and rectangular meshes, two shapes,
+/// and four schedule families (multicast-heavy SUMMA, the unicast
+/// baseline, split-K reduction trees, flat remap). An executable
+/// reference is a stronger pin than committed constants: it holds on any
+/// machine and for any future schedule added to this matrix.
+#[test]
+fn golden_runstats_flat_arena_matches_reference_model() {
+    let mut arena = sim::SimArena::new();
+    let mut checked = 0usize;
+    for (rows, cols) in [(4usize, 4usize), (2, 4), (4, 2)] {
+        let arch = ArchConfig::tiny(rows, cols);
+        for shape in [GemmShape::new(128, 128, 256), GemmShape::new(96, 160, 128)] {
+            let scheds = [
+                Schedule::summa(&arch, shape),
+                Schedule::baseline(&arch, shape),
+                Schedule::splitk(&arch, shape, 2),
+                Schedule::flat_remap(&arch, shape, 2),
+            ];
+            for sched in scheds {
+                // Some (mesh, shape, schedule) combos are legitimately
+                // undeployable (e.g. logical grid exceeds the mesh);
+                // the fidelity property only concerns deployable ones.
+                let Ok(dep) = generate(&arch, shape, &sched, arch.elem_bytes) else {
+                    continue;
+                };
+                let ctx = format!("{rows}x{cols} {shape} {}", sched.name());
+                let want = sim::reference::simulate(&arch, &dep).unwrap();
+                let flat = sim::simulate(&arch, &dep).unwrap();
+                assert_runstats_bits_eq(&flat, &want, &format!("{ctx} [fresh arena]"));
+                let reused = sim::simulate_in(&arch, &dep, &mut arena).unwrap();
+                assert_runstats_bits_eq(&reused, &want, &format!("{ctx} [shared arena]"));
+                checked += 1;
+            }
+        }
+    }
+    assert!(checked >= 12, "golden matrix shrank to {checked} deployable cases");
+}
 
 /// Any random (shape, schedule-candidate) pair on a small grid computes
 /// the same GEMM as the plain CPU reference.
