@@ -18,6 +18,7 @@
 //! | dse    | hardware design-space sweep (TFLOPS-vs-cost Pareto front,  |
 //! |        | square ladder + rectangular-mesh case)                     |
 //! | energy | energy-aware 3-axis DSE (perf/cost/energy frontier)        |
+//! | tiered | analytic-first tiered tuning calibration vs exhaustive     |
 //!
 //! Absolute numbers come from the analytical-contention SoftHier model and
 //! the calibrated GPU baselines (see DESIGN.md §Substitutions); the point
@@ -43,7 +44,7 @@ use std::time::Instant;
 
 use dit::arch::workload::Workload;
 use dit::arch::{ArchConfig, GemmShape};
-use dit::coordinator::engine::Engine;
+use dit::coordinator::engine::{Engine, TunePolicy};
 use dit::coordinator::{autotune, simulate_schedule};
 use dit::dse::{DseOptions, Objective, SweepSpec};
 use dit::perfmodel::{ridge_intensity, roofline_tflops, workloads, GpuSpec};
@@ -139,7 +140,7 @@ fn main() {
         Some(rest) => !rest.starts_with(|c: char| c.is_ascii_digit()),
         None => false,
     };
-    let figs: [(&str, fn(&mut Recorder)); 14] = [
+    let figs: [(&str, fn(&mut Recorder)); 15] = [
         ("table1", table1),
         ("fig1", fig1),
         ("fig7a", fig7a),
@@ -154,6 +155,7 @@ fn main() {
         ("workload", workload_bench),
         ("dse", dse_bench),
         ("energy", energy_bench),
+        ("tiered", tiered_bench),
     ];
     // A filter that selects nothing is a typo (or a stale CI list): fail
     // loudly rather than emit an empty artifact with exit code 0.
@@ -720,6 +722,69 @@ fn energy_bench(r: &mut Recorder) {
         true,
     );
     println!("(the 3-axis sweep runs exhaustively — the roofline prune only bounds\n throughput, so it is disabled whenever energy is an objective)");
+}
+
+// --------------------------------------------------------------------
+/// The calibration contract, measured: one small sweep runs twice —
+/// exhaustively and under the tiered policy — and the gate pins how far
+/// the tiered winners drift from the exhaustive ones (`calibration_pct`,
+/// a ceiling), how much simulation the analytic ranking avoids
+/// (`sims_saved_pct`, a hand-set floor: >= 80% means >= 5x fewer
+/// simulator calls), and the combined simulation volume of both runs
+/// (`sim_total`, a ceiling against candidate-space blowup). The prune
+/// stays off so both sweeps evaluate the identical config set, and no
+/// persistent cache attaches, so the artifact is fully deterministic.
+fn tiered_bench(r: &mut Recorder) {
+    let mut spec = SweepSpec::reduced();
+    spec.name = "tiered".into();
+    spec.meshes = vec![(8, 8), (8, 16), (16, 8)];
+    spec.spm_kib = vec![384];
+    let w = dit::dse::suite("serving").expect("builtin DSE suite");
+    let exh_opts = DseOptions { prune: false, ..DseOptions::default() };
+    let exh = dit::dse::run_sweep(&spec, &w, &exh_opts).expect("exhaustive sweep");
+    let tier_opts = DseOptions {
+        prune: false,
+        policy: TunePolicy::Tiered { top_k: 1, explore: 1 },
+        ..DseOptions::default()
+    };
+    let tier = dit::dse::run_sweep(&spec, &w, &tier_opts).expect("tiered sweep");
+
+    assert_eq!(exh.points.len(), tier.points.len(), "sweeps must evaluate the same configs");
+    let mut t = Table::new(
+        "Tiered tuning: calibration against the exhaustive sweep",
+        &["config", "exhaustive us/pass", "tiered us/pass", "drift %"],
+    );
+    // The tiered winner per shape is the best of a *subset* of the
+    // exhaustive candidate set, so per-config pass time can only drift
+    // up; the pinned number is the worst drift across configs.
+    let mut calibration_pct = 0.0f64;
+    for (e, ti) in exh.points.iter().zip(&tier.points) {
+        assert_eq!(e.arch.name, ti.arch.name, "point order must match across sweeps");
+        let (et, tt) = (e.report.total_time_ns(), ti.report.total_time_ns());
+        let drift = 100.0 * (tt - et) / et;
+        calibration_pct = calibration_pct.max(drift);
+        t.row(vec![
+            e.arch.name.clone(),
+            format!("{:.1}", et / 1e3),
+            format!("{:.1}", tt / 1e3),
+            format!("{drift:+.2}"),
+        ]);
+    }
+    print!("\n{}", t.markdown());
+    let sims_saved_pct = 100.0 * (1.0 - tier.sim_calls as f64 / exh.sim_calls as f64);
+    let sim_total = (exh.sim_calls + tier.sim_calls) as f64;
+    println!(
+        "tiered: {} simulations vs {} exhaustive ({:.1}% saved; {} candidates skipped \
+         pre-cache, {} analytic rankings)",
+        tier.sim_calls, exh.sim_calls, sims_saved_pct, tier.sims_saved, tier.analytic_rank_calls
+    );
+    println!(
+        "(the analytic model earns its keep only while the tiered winner stays within a\n \
+         few percent of the exhaustive one — the gate pins exactly that drift)"
+    );
+    r.rec("tiered", "calibration_pct", calibration_pct, false);
+    r.rec("tiered", "sims_saved_pct", sims_saved_pct, true);
+    r.rec("tiered", "sim_total", sim_total, false);
 }
 
 // --------------------------------------------------------------------

@@ -14,16 +14,17 @@
 # would pin fig7*/fig8/fig11/fig12 metrics CI never produces and every
 # later gate run would fail them as MISSING.
 #
-# Throughput floor pins ("floor": true — *.sims_per_sec) are preserved
-# VERBATIM by --update: they are tolerance-free hard lower bounds on
-# machine-dependent simulator throughput, and re-pinning them to a fast
-# dev box would make the gate flake on slower CI runners. Tighten them
-# only by hand-editing bench_baseline.json to a value every runner
-# clears comfortably.
+# Floor pins ("floor": true — *.sims_per_sec and the tiered
+# sims_saved_pct contract) are preserved VERBATIM by --update: they are
+# tolerance-free hard lower bounds (machine-dependent throughput, or a
+# deliberate policy contract), and re-pinning them from one run would
+# either make the gate flake on slower CI runners or silently relax the
+# contract. Tighten them only by hand-editing bench_baseline.json to a
+# value every runner clears comfortably.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-cargo bench --bench figures -- table1 fig1 fig9 fig10 workload dse energy \
+cargo bench --bench figures -- table1 fig1 fig9 fig10 workload dse energy tiered \
     --json BENCH_results.json
 cargo run --release --bin bench_gate -- --update
 cargo run --release --bin bench_gate -- \

@@ -18,7 +18,7 @@ use anyhow::{bail, Context, Result};
 use crate::arch::workload::Workload;
 use crate::arch::{ArchConfig, GemmShape};
 use crate::coordinator;
-use crate::coordinator::engine::Engine;
+use crate::coordinator::engine::{Engine, TunePolicy, DEFAULT_EXPLORE, DEFAULT_TOP_K};
 use crate::dse::{DseOptions, Objective, SweepSpec};
 use crate::report::Table;
 use crate::schedule::{candidates, Dataflow, Schedule};
@@ -136,6 +136,36 @@ pub fn parse_schedule(args: &Args, arch: &ArchConfig, shape: GemmShape) -> Resul
     Ok(s)
 }
 
+/// Parse the tiered-tuning flags shared by `tune-workload` and `dse`:
+/// `--tiered bool` switches the engine to the analytic-first policy;
+/// `--top-k N` / `--explore N` size the simulated head and the
+/// deterministic exploration band (defaults 4 and 2). The knobs are
+/// rejected without `--tiered true` so a typo cannot silently run
+/// exhaustively.
+pub fn parse_policy(args: &Args) -> Result<TunePolicy> {
+    let tiered: bool = match args.get("tiered") {
+        Some(v) => v.parse().context("--tiered")?,
+        None => false,
+    };
+    if !tiered {
+        anyhow::ensure!(
+            args.get("top-k").is_none() && args.get("explore").is_none(),
+            "--top-k/--explore only apply with --tiered true"
+        );
+        return Ok(TunePolicy::Exhaustive);
+    }
+    let top_k: usize = match args.get("top-k") {
+        Some(v) => v.parse().context("--top-k")?,
+        None => DEFAULT_TOP_K,
+    };
+    let explore: usize = match args.get("explore") {
+        Some(v) => v.parse().context("--explore")?,
+        None => DEFAULT_EXPLORE,
+    };
+    anyhow::ensure!(top_k >= 1, "--top-k must be at least 1");
+    Ok(TunePolicy::Tiered { top_k, explore })
+}
+
 const HELP: &str = "\
 dit — Design in Tiles: automated GEMM deployment on tile-based many-PE accelerators
 
@@ -151,11 +181,17 @@ COMMANDS:
   tune-workload --preset P [--suite NAME]               batch-tune a GEMM suite
               [--shapes MxNxK,MxNxK,...] [--workers N]  (suites: prefill, decode,
               [--csv true] [--cache FILE]                transformer, tiny)
+              [--tiered true] [--top-k N] [--explore N] analytic-first tiering: rank
+                                                        candidates closed-form, simulate
+                                                        only the top-k + exploration band
   dse         [--workload serving|prefill|decode|tiny]  hardware design-space sweep:
               [--spec FILE] [--full true]               co-tune every config, print the
               [--base PRESET] [--mesh 8,16x4,4x16]      Pareto frontier over the chosen
               [--spm 256,384] [--workers N] [--wave N]  objectives (RxC = rectangular
               [--prune bool] [--csv true] [--json FILE]  mesh, N = square sugar)
+              [--prune-slack 0.05]                      roofline prune safety margin,
+                                                        a fraction in [0, 0.5]
+              [--tiered true] [--top-k N] [--explore N] tiered per-config inner loop
               [--objectives perf,cost,energy]           3-axis frontier + projections
               [--weights 0.5,0.3,0.2]                   scalarized single winner
               [--energy-coeffs FILE]                    pJ table ([energy] section)
@@ -172,7 +208,9 @@ EXAMPLES:
   dit simulate --preset gh200 --shape 4096x2112x7168 --schedule summa
   dit autotune --preset gh200 --shape 64x2112x7168
   dit tune-workload --preset gh200 --suite transformer
+  dit tune-workload --preset gh200 --suite transformer --tiered true --top-k 4
   dit dse      --workload serving
+  dit dse      --workload serving --tiered true        # analytic-first inner loop
   dit dse      --workload serving --objectives perf,cost,energy --weights 0.5,0.2,0.3
   dit dse      --workload serving --cache sweep.cache   # re-run resumes from disk
   dit cache    stats --cache sweep.cache
@@ -357,7 +395,7 @@ fn cmd_tune_workload(args: &Args) -> Result<()> {
             })?
         }
     };
-    let mut engine = Engine::new(&arch);
+    let mut engine = Engine::new(&arch).with_policy(parse_policy(args)?);
     if let Some(n) = args.get("workers") {
         engine = engine.with_workers(n.parse().context("--workers")?);
     }
@@ -479,6 +517,10 @@ fn cmd_dse(args: &Args) -> Result<()> {
     if let Some(v) = args.get("prune") {
         opts.prune = v.parse().context("--prune")?;
     }
+    if let Some(v) = args.get("prune-slack") {
+        opts.prune_slack = v.parse().context("--prune-slack")?;
+    }
+    opts.policy = parse_policy(args)?;
     if let Some(path) = args.get("cache") {
         opts.cache_path = Some(path.into());
     }
@@ -766,6 +808,33 @@ mod tests {
         assert!(run(&argv("cache")).is_err(), "stats without --cache");
         assert!(run(&argv("cache nuke --cache x")).is_err(), "unknown action");
         assert!(run(&argv("cache --cache x")).is_err(), "missing action");
+    }
+
+    #[test]
+    fn run_tiered_smoke() {
+        // Tiered tuning end to end on tiny grids, via both commands.
+        run(&argv(
+            "tune-workload --preset tiny4 --shapes 128x128x256 --tiered true --top-k 2 \
+             --explore 1 --workers 2",
+        ))
+        .unwrap();
+        run(&argv("dse --base tiny4 --mesh 2,4 --workload tiny --tiered true --wave 2"))
+            .unwrap();
+        run(&argv("dse --base tiny4 --mesh 2 --workload tiny --prune-slack 0.1")).unwrap();
+        // Knob validation: bad values and orphaned knobs error cleanly.
+        assert!(run(&argv("tune-workload --preset tiny4 --shapes 8x8x8 --tiered maybe")).is_err());
+        assert!(
+            run(&argv("tune-workload --preset tiny4 --shapes 8x8x8 --top-k 2")).is_err(),
+            "--top-k without --tiered true is a likely typo"
+        );
+        assert!(run(&argv(
+            "tune-workload --preset tiny4 --shapes 8x8x8 --tiered true --top-k 0"
+        ))
+        .is_err());
+        assert!(run(&argv("dse --base tiny4 --mesh 2 --workload tiny --prune-slack 0.9"))
+            .is_err());
+        assert!(run(&argv("dse --base tiny4 --mesh 2 --workload tiny --prune-slack nan"))
+            .is_err());
     }
 
     #[test]

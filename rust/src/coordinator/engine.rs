@@ -69,6 +69,54 @@ struct CacheKey {
     sched: Schedule,
 }
 
+/// How the engine spends its simulation budget per shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TunePolicy {
+    /// Simulate every candidate (the original behavior; the default).
+    Exhaustive,
+    /// Rank the candidate space with the closed-form model
+    /// ([`crate::perfmodel::analytic`]) and simulate only the analytic
+    /// top `top_k` plus `explore` deterministically-drawn extras from the
+    /// remainder — the exploration band that keeps the tuner honest when
+    /// the model misranks. Falls back to exhaustive for a shape when the
+    /// analytic spread is too flat to trust (relative spread below
+    /// [`FLAT_SPREAD`]) or when `top_k + explore` already covers the
+    /// candidate set.
+    Tiered { top_k: usize, explore: usize },
+}
+
+impl Default for TunePolicy {
+    fn default() -> Self {
+        TunePolicy::Exhaustive
+    }
+}
+
+/// Default analytic head size for [`TunePolicy::Tiered`].
+pub const DEFAULT_TOP_K: usize = 4;
+/// Default exploration-band size for [`TunePolicy::Tiered`].
+pub const DEFAULT_EXPLORE: usize = 2;
+/// Relative analytic spread below which tiering falls back to exhaustive:
+/// when every candidate is priced within 5% of the best, ranking noise
+/// would dominate the selection.
+pub const FLAT_SPREAD: f64 = 0.05;
+
+impl TunePolicy {
+    /// The tiered policy at its default knob settings.
+    pub fn tiered_default() -> TunePolicy {
+        TunePolicy::Tiered { top_k: DEFAULT_TOP_K, explore: DEFAULT_EXPLORE }
+    }
+}
+
+/// One shape's candidate selection under the engine's policy.
+struct Selection {
+    /// Candidates to simulate and rank, in enumeration order.
+    cands: Vec<Schedule>,
+    /// Size of the full candidate enumeration.
+    total: usize,
+    /// Analytic estimates computed while selecting.
+    rank_calls: usize,
+}
+
 /// Per-shape tuning outcome inside a workload report.
 #[derive(Debug, Clone)]
 pub struct ShapeResult {
@@ -94,6 +142,14 @@ pub struct WorkloadReport {
     /// ([`Engine::with_cache`]) during this call. Zero when no cache is
     /// attached.
     pub disk_hits: usize,
+    /// Candidate simulations skipped by the tiering filter during this
+    /// call ([`TunePolicy::Tiered`]) — counted against the full candidate
+    /// enumeration, before any cache is consulted. Zero under
+    /// [`TunePolicy::Exhaustive`].
+    pub sims_saved: usize,
+    /// Closed-form latency estimates computed while ranking candidates
+    /// during this call. Zero under [`TunePolicy::Exhaustive`].
+    pub analytic_rank_calls: usize,
     /// Worker threads used for this call.
     pub workers: usize,
     /// Wall-clock tuning time, milliseconds.
@@ -136,6 +192,7 @@ pub struct Engine {
     arch: ArchConfig,
     arch_fp: u64,
     workers: usize,
+    policy: TunePolicy,
     cache: Mutex<HashMap<CacheKey, Option<RunStats>>>,
     /// Persistent second-level cache. Lock order: `cache` before `disk`
     /// (both phase 1 and phase 3 follow it), never the reverse.
@@ -143,6 +200,8 @@ pub struct Engine {
     sim_calls: AtomicUsize,
     cache_hits: AtomicUsize,
     disk_hits: AtomicUsize,
+    sims_saved: AtomicUsize,
+    analytic_rank_calls: AtomicUsize,
 }
 
 impl Engine {
@@ -155,17 +214,29 @@ impl Engine {
             arch: arch.clone(),
             arch_fp: arch_fingerprint(arch),
             workers: workers.clamp(2, 16),
+            policy: TunePolicy::Exhaustive,
             cache: Mutex::new(HashMap::new()),
             disk: None,
             sim_calls: AtomicUsize::new(0),
             cache_hits: AtomicUsize::new(0),
             disk_hits: AtomicUsize::new(0),
+            sims_saved: AtomicUsize::new(0),
+            analytic_rank_calls: AtomicUsize::new(0),
         }
     }
 
     /// Override the worker-pool size (minimum 1).
     pub fn with_workers(mut self, n: usize) -> Engine {
         self.workers = n.max(1);
+        self
+    }
+
+    /// Set the tuning policy ([`TunePolicy::Exhaustive`] by default).
+    /// Tiering changes only *which* candidates are simulated — cache keys,
+    /// enumeration order, and the ranking sort are untouched, so tiered
+    /// and exhaustive runs share memo- and disk-cache entries freely.
+    pub fn with_policy(mut self, policy: TunePolicy) -> Engine {
+        self.policy = policy;
         self
     }
 
@@ -205,6 +276,22 @@ impl Engine {
     /// [`Engine::with_cache`]).
     pub fn disk_hits(&self) -> usize {
         self.disk_hits.load(Ordering::Relaxed)
+    }
+
+    /// The engine's tuning policy.
+    pub fn policy(&self) -> TunePolicy {
+        self.policy
+    }
+
+    /// Total candidate simulations skipped by tiering over the engine's
+    /// lifetime (0 under [`TunePolicy::Exhaustive`]).
+    pub fn sims_saved(&self) -> usize {
+        self.sims_saved.load(Ordering::Relaxed)
+    }
+
+    /// Total closed-form ranking estimates over the engine's lifetime.
+    pub fn analytic_rank_calls(&self) -> usize {
+        self.analytic_rank_calls.load(Ordering::Relaxed)
     }
 
     /// Cached simulation entries currently held in memory.
@@ -262,9 +349,73 @@ impl Engine {
         self.tune_on(arch, fp, w)
     }
 
-    /// Shared implementation: enumerate candidates per item, simulate all
-    /// not-yet-cached candidates on the worker pool, and assemble a
-    /// per-item ranking plus aggregate statistics.
+    /// One shape's candidate selection under the engine's policy. The
+    /// selection is a pure function of `(arch, shape, policy)` — it never
+    /// consults the memo- or disk-cache — so a tiered run's output is
+    /// deterministic regardless of what happens to be cached, and phase 4
+    /// can rank exactly the selected set.
+    fn select_candidates(&self, arch: &ArchConfig, arch_fp: u64, shape: GemmShape) -> Selection {
+        let cands = candidates(arch, shape);
+        let total = cands.len();
+        let TunePolicy::Tiered { top_k, explore } = self.policy else {
+            return Selection { cands, total, rank_calls: 0 };
+        };
+        let top_k = top_k.max(1); // a head of zero would tune nothing
+        if top_k + explore >= total {
+            return Selection { cands, total, rank_calls: 0 };
+        }
+        let est: Vec<f64> = cands
+            .iter()
+            .map(|s| {
+                crate::perfmodel::analytic::estimate_ns(arch, shape, s)
+                    .unwrap_or(f64::INFINITY)
+            })
+            .collect();
+        // Flat-spread fallback: when the model prices every deployable
+        // candidate within FLAT_SPREAD of the best, its ranking is noise —
+        // simulate the whole set rather than trust it.
+        let lo = est.iter().copied().filter(|v| v.is_finite()).fold(f64::INFINITY, f64::min);
+        let hi =
+            est.iter().copied().filter(|v| v.is_finite()).fold(f64::NEG_INFINITY, f64::max);
+        if !lo.is_finite() || hi - lo < FLAT_SPREAD * lo {
+            return Selection { cands, total, rank_calls: total };
+        }
+        // Head: the analytic top-k, ties broken by enumeration index (a
+        // total, deterministic order).
+        let mut order: Vec<usize> = (0..total).collect();
+        order.sort_by(|&a, &b| est[a].total_cmp(&est[b]).then(a.cmp(&b)));
+        let mut keep = vec![false; total];
+        for &i in order.iter().take(top_k) {
+            keep[i] = true;
+        }
+        // Exploration band: a deterministic pseudo-random draw from the
+        // deployable remainder, keyed on (arch fingerprint, shape,
+        // schedule key) — the same stable identifiers the disk cache uses,
+        // so the band is bit-stable across runs, processes, and cache
+        // states.
+        let mut rest: Vec<usize> =
+            order.iter().copied().skip(top_k).filter(|&i| est[i].is_finite()).collect();
+        rest.sort_by_key(|&i| {
+            let tag = format!("{arch_fp:016x}|{shape}|{}", cands[i].cache_key());
+            (crate::util::fnv1a64(tag.as_bytes()), i)
+        });
+        for &i in rest.iter().take(explore) {
+            keep[i] = true;
+        }
+        // Filtering preserves enumeration order, so downstream phases see
+        // the same order exhaustive tuning would.
+        let cands: Vec<Schedule> = cands
+            .into_iter()
+            .zip(&keep)
+            .filter_map(|(s, &k)| k.then_some(s))
+            .collect();
+        Selection { cands, total, rank_calls: total }
+    }
+
+    /// Shared implementation: select candidates per item (all of them, or
+    /// the analytic head + exploration band under [`TunePolicy::Tiered`]),
+    /// simulate all selected not-yet-cached candidates on the worker pool,
+    /// and assemble a per-item ranking plus aggregate statistics.
     fn tune_on(&self, arch: &ArchConfig, arch_fp: u64, w: &Workload) -> Result<WorkloadReport> {
         let t0 = std::time::Instant::now();
 
@@ -274,11 +425,24 @@ impl Engine {
             sched: Schedule,
         }
 
-        // Phase 1 — plan (serial, deterministic): one job per candidate
-        // not already cached, deduplicated across repeated shapes. A miss
-        // in memory falls through to the persistent cache (when attached):
-        // a disk hit promotes the entry into memory, so every later lookup
-        // — including phase 4's ranking assembly — sees one store.
+        // Phase 0 — select (serial, deterministic, cache-independent):
+        // fix each item's candidate set once; phases 1 and 4 both walk
+        // exactly this set, so tiered output cannot depend on what an
+        // earlier (possibly exhaustive) run happened to leave in a cache.
+        let selections: Vec<Selection> =
+            w.items.iter().map(|i| self.select_candidates(arch, arch_fp, i.shape)).collect();
+        let saved_this_call: usize =
+            selections.iter().map(|s| s.total - s.cands.len()).sum();
+        let ranked_this_call: usize = selections.iter().map(|s| s.rank_calls).sum();
+        self.sims_saved.fetch_add(saved_this_call, Ordering::Relaxed);
+        self.analytic_rank_calls.fetch_add(ranked_this_call, Ordering::Relaxed);
+
+        // Phase 1 — plan (serial, deterministic): one job per selected
+        // candidate not already cached, deduplicated across repeated
+        // shapes. A miss in memory falls through to the persistent cache
+        // (when attached): a disk hit promotes the entry into memory, so
+        // every later lookup — including phase 4's ranking assembly — sees
+        // one store.
         let mut jobs: Vec<Job> = Vec::new();
         let mut hits_this_call = 0usize;
         let mut disk_hits_this_call = 0usize;
@@ -286,10 +450,11 @@ impl Engine {
             let mut cache = self.cache.lock().unwrap();
             let disk = self.disk.as_ref().map(|d| d.lock().unwrap());
             let mut pending: HashSet<CacheKey> = HashSet::new();
-            for item in &w.items {
+            for (item, sel) in w.items.iter().zip(&selections) {
                 let shape_text = item.shape.to_string();
-                for sched in candidates(arch, item.shape) {
-                    let key = CacheKey { arch_fp, shape: item.shape, sched: sched.clone() };
+                for sched in &sel.cands {
+                    let key =
+                        CacheKey { arch_fp, shape: item.shape, sched: sched.clone() };
                     if cache.contains_key(&key) || pending.contains(&key) {
                         hits_this_call += 1;
                         continue;
@@ -307,7 +472,7 @@ impl Engine {
                         }
                     }
                     pending.insert(key.clone());
-                    jobs.push(Job { key, shape: item.shape, sched });
+                    jobs.push(Job { key, shape: item.shape, sched: sched.clone() });
                 }
             }
         }
@@ -380,15 +545,17 @@ impl Engine {
         }
 
         // Phase 4 — assemble per-item rankings entirely from the cache,
-        // in candidate-enumeration order + the same stable sort the serial
-        // autotuner uses. This is what makes parallel == serial, bit for
-        // bit.
+        // walking exactly the phase-0 selection in enumeration order + the
+        // same stable sort the serial autotuner uses. This is what makes
+        // parallel == serial (and a tiered run independent of cache
+        // history: cached-but-unselected candidates never leak into the
+        // ranking), bit for bit.
         let cache = self.cache.lock().unwrap();
         let mut shapes = Vec::with_capacity(w.items.len());
-        for item in &w.items {
+        for (item, sel) in w.items.iter().zip(&selections) {
             let mut ranking = Vec::new();
-            for sched in candidates(arch, item.shape) {
-                let key = CacheKey { arch_fp, shape: item.shape, sched };
+            for sched in &sel.cands {
+                let key = CacheKey { arch_fp, shape: item.shape, sched: sched.clone() };
                 if let Some(Some(stats)) = cache.get(&key) {
                     ranking.push(Scored { schedule: key.sched, stats: stats.clone() });
                 }
@@ -415,6 +582,8 @@ impl Engine {
             sim_calls: jobs.len(),
             cache_hits: hits_this_call,
             disk_hits: disk_hits_this_call,
+            sims_saved: saved_this_call,
+            analytic_rank_calls: ranked_this_call,
             workers,
             elapsed_ms: t0.elapsed().as_secs_f64() * 1e3,
         })
@@ -455,6 +624,55 @@ mod tests {
             assert_eq!(p.schedule, s.schedule);
             assert_eq!(p.stats.makespan_ns.to_bits(), s.stats.makespan_ns.to_bits());
         }
+    }
+
+    #[test]
+    fn tiered_simulates_fewer_candidates() {
+        let arch = ArchConfig::tiny(4, 4);
+        let shape = GemmShape::new(128, 128, 256);
+        let exhaustive = Engine::new(&arch).with_workers(2);
+        let tiered =
+            Engine::new(&arch).with_workers(2).with_policy(TunePolicy::tiered_default());
+        let full = exhaustive.tune(shape).unwrap();
+        let head = tiered.tune(shape).unwrap();
+        assert!(
+            tiered.sim_calls() < exhaustive.sim_calls(),
+            "tiered {} !< exhaustive {}",
+            tiered.sim_calls(),
+            exhaustive.sim_calls()
+        );
+        assert_eq!(
+            tiered.sims_saved(),
+            exhaustive.sim_calls() - tiered.sim_calls(),
+            "saved + simulated must cover the full candidate set"
+        );
+        assert!(tiered.analytic_rank_calls() >= full.ranking.len());
+        assert_eq!(exhaustive.sims_saved(), 0);
+        assert_eq!(exhaustive.analytic_rank_calls(), 0);
+        // The tiered ranking is a subset of the exhaustive one, in the
+        // same simulated order with bit-identical stats.
+        let mut it = full.ranking.iter();
+        for t in &head.ranking {
+            let m = it
+                .find(|s| s.schedule == t.schedule)
+                .expect("tiered result missing from exhaustive ranking");
+            assert_eq!(t.stats.makespan_ns.to_bits(), m.stats.makespan_ns.to_bits());
+        }
+    }
+
+    #[test]
+    fn tiered_report_counts_selection() {
+        let arch = ArchConfig::tiny(4, 4);
+        let shape = GemmShape::new(128, 128, 256);
+        let engine =
+            Engine::new(&arch).with_policy(TunePolicy::Tiered { top_k: 2, explore: 1 });
+        let w = Workload::single("s", shape);
+        let rep = engine.tune_workload(&w).unwrap();
+        let total = crate::schedule::candidates(&arch, shape).len();
+        assert!(rep.sims_saved > 0, "nothing saved on a {total}-candidate shape");
+        assert_eq!(rep.sim_calls + rep.sims_saved, total);
+        assert_eq!(rep.analytic_rank_calls, total);
+        assert!(rep.shapes[0].result.ranking.len() <= 3);
     }
 
     #[test]

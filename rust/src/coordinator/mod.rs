@@ -57,21 +57,7 @@ pub fn deploy_chunked(
     if crate::schedule::l1_estimate(arch, shape, sched) <= l1 {
         return Ok(vec![deploy(arch, shape, sched)?]);
     }
-    // Choose the chunking whose re-derived K-panel depth is largest (the
-    // matrix-engine fill efficiency grows with tk), breaking ties toward
-    // fewer chunks (less A re-fetch traffic).
-    let mut best: Option<(usize, usize, crate::schedule::Schedule)> = None; // (chunks, tk, sched)
-    for chunks in [2usize, 4, 8, 16, 32, 64] {
-        let chunk_n = shape.n.div_ceil(chunks);
-        let chunk_shape = GemmShape::new(shape.m, chunk_n, shape.k);
-        let tuned = crate::schedule::retune_tk(arch, chunk_shape, sched);
-        if crate::schedule::l1_estimate(arch, chunk_shape, &tuned) <= l1
-            && best.as_ref().map(|(_, tk, _)| tuned.tk > *tk).unwrap_or(true)
-        {
-            best = Some((chunks, tuned.tk, tuned));
-        }
-    }
-    let Some((chunks, _, tuned)) = best else {
+    let Some((chunks, tuned)) = chunking_for(arch, shape, sched) else {
         anyhow::bail!("no chunking makes {} fit L1 for {}", shape, sched.name())
     };
     let chunk_n = shape.n.div_ceil(chunks);
@@ -83,6 +69,33 @@ pub fn deploy_chunked(
         remaining -= n;
     }
     Ok(deps)
+}
+
+/// The chunking [`deploy_chunked`] would pick for an over-L1 working set:
+/// `(chunks, retuned schedule)`, or `None` if no column split in the
+/// ladder fits. Shared with [`crate::perfmodel::analytic`] so the analytic
+/// latency estimate models exactly the multi-pass deployment the
+/// simulator would run. Chooses the chunking whose re-derived K-panel
+/// depth is largest (the matrix-engine fill efficiency grows with tk),
+/// breaking ties toward fewer chunks (less A re-fetch traffic).
+pub fn chunking_for(
+    arch: &ArchConfig,
+    shape: GemmShape,
+    sched: &Schedule,
+) -> Option<(usize, Schedule)> {
+    let l1 = arch.tile.l1_bytes as u64;
+    let mut best: Option<(usize, usize, Schedule)> = None; // (chunks, tk, sched)
+    for chunks in [2usize, 4, 8, 16, 32, 64] {
+        let chunk_n = shape.n.div_ceil(chunks);
+        let chunk_shape = GemmShape::new(shape.m, chunk_n, shape.k);
+        let tuned = crate::schedule::retune_tk(arch, chunk_shape, sched);
+        if crate::schedule::l1_estimate(arch, chunk_shape, &tuned) <= l1
+            && best.as_ref().map(|(_, tk, _)| tuned.tk > *tk).unwrap_or(true)
+        {
+            best = Some((chunks, tuned.tk, tuned));
+        }
+    }
+    best.map(|(chunks, _, tuned)| (chunks, tuned))
 }
 
 /// Simulate a (possibly chunked) deployment: chunks execute sequentially,

@@ -49,16 +49,18 @@ use anyhow::{Context, Result};
 
 use crate::arch::workload::Workload;
 use crate::arch::ArchConfig;
-use crate::coordinator::engine::{Engine, WorkloadReport};
+use crate::coordinator::engine::{Engine, TunePolicy, WorkloadReport};
 use crate::dse::pareto::Sense;
 use crate::perfmodel::{workload_roofline_tflops, EnergyModel};
 use crate::util::cfgtext::{Doc, Value};
 use crate::util::json::Json;
 
-/// Safety slack applied to the roofline bound before pruning: a config is
-/// only discarded when even `slack × bound` cannot reach the measured
-/// frontier, so modest model error cannot prune a truly optimal config.
-pub const PRUNE_SLACK: f64 = 1.05;
+/// Default safety slack applied to the roofline bound before pruning, as
+/// a fraction: a config is only discarded when even `(1 + slack) × bound`
+/// cannot reach the measured frontier, so modest model error cannot prune
+/// a truly optimal config. Overridable per sweep via
+/// [`DseOptions::prune_slack`].
+pub const DEFAULT_PRUNE_SLACK: f64 = 0.05;
 
 /// One axis of the multi-objective search.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -461,6 +463,17 @@ pub struct DseOptions {
     /// only bounds throughput, so pruning could drop an energy-optimal
     /// config.
     pub prune: bool,
+    /// Safety slack on the roofline prune bound, as a fraction in
+    /// `[0, 0.5]` (default [`DEFAULT_PRUNE_SLACK`]): a config is pruned
+    /// only when even `(1 + prune_slack) × roofline` cannot reach the
+    /// measured frontier. Was hard-coded at 5% before this knob existed.
+    pub prune_slack: f64,
+    /// Per-shape tuning policy for the sweep's engine
+    /// ([`TunePolicy::Exhaustive`] by default): the tiered policy ranks
+    /// each config's candidate schedules with the closed-form model and
+    /// simulates only the analytic head + exploration band, which is what
+    /// makes paper-scale meshes tractable in the inner loop.
+    pub policy: TunePolicy,
     /// Cost-model weights.
     pub cost: CostModel,
     /// Energy coefficient table (every point gets energy metrics from it).
@@ -482,10 +495,12 @@ impl Default for DseOptions {
             workers: 0,
             config_parallelism: 4,
             prune: true,
+            prune_slack: DEFAULT_PRUNE_SLACK,
             cost: CostModel::default_proxy(),
             energy: EnergyModel::default_table(),
             objectives: vec![Objective::Perf, Objective::Cost],
             cache_path: None,
+            policy: TunePolicy::Exhaustive,
         }
     }
 }
@@ -494,6 +509,17 @@ impl DseOptions {
     /// Is the roofline prune sound for the requested objectives?
     fn prune_effective(&self) -> bool {
         self.prune && !self.objectives.contains(&Objective::Energy)
+    }
+
+    /// Reject nonsensical knob values before a long sweep runs. Called by
+    /// [`run_sweep`]; exposed so the CLI can fail fast on bad flags.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.prune_slack.is_finite() && (0.0..=0.5).contains(&self.prune_slack),
+            "prune slack must be a fraction in [0, 0.5], got {}",
+            self.prune_slack
+        );
+        Ok(())
     }
 }
 
@@ -566,6 +592,12 @@ pub struct DseResult {
     pub disk_hits: usize,
     /// Entries the persistent cache held when the sweep opened it.
     pub disk_loaded: usize,
+    /// Candidate simulations skipped by the tiered tuning policy across
+    /// the sweep (0 under [`TunePolicy::Exhaustive`]).
+    pub sims_saved: usize,
+    /// Closed-form ranking estimates computed across the sweep (0 under
+    /// [`TunePolicy::Exhaustive`]).
+    pub analytic_rank_calls: usize,
     pub elapsed_ms: f64,
 }
 
@@ -737,6 +769,8 @@ impl DseResult {
             .field("cache_hits", self.cache_hits)
             .field("disk_hits", self.disk_hits)
             .field("disk_loaded", self.disk_loaded)
+            .field("sims_saved", self.sims_saved)
+            .field("analytic_rank_calls", self.analytic_rank_calls)
             .field("points", pts)
             .field("pruned", pruned)
             .field("infeasible", infeasible)
@@ -751,6 +785,7 @@ impl DseResult {
 /// frontiers.
 pub fn run_sweep(spec: &SweepSpec, w: &Workload, opts: &DseOptions) -> Result<DseResult> {
     anyhow::ensure!(!w.items.is_empty(), "DSE workload is empty");
+    opts.validate()?;
     let prune = opts.prune_effective();
     let t0 = Instant::now();
 
@@ -772,7 +807,7 @@ pub fn run_sweep(spec: &SweepSpec, w: &Workload, opts: &DseOptions) -> Result<Ds
     );
     cands.sort_by(|x, y| x.1.total_cmp(&y.1).then_with(|| x.0.name.cmp(&y.0.name)));
 
-    let mut engine = Engine::new(&spec.base);
+    let mut engine = Engine::new(&spec.base).with_policy(opts.policy);
     if opts.workers > 0 {
         engine = engine.with_workers(opts.workers);
     }
@@ -783,6 +818,8 @@ pub fn run_sweep(spec: &SweepSpec, w: &Workload, opts: &DseOptions) -> Result<Ds
     let sim0 = engine.sim_calls();
     let hits0 = engine.cache_hits();
     let disk0 = engine.disk_hits();
+    let saved0 = engine.sims_saved();
+    let rank0 = engine.analytic_rank_calls();
 
     let mut points: Vec<DsePoint> = Vec::new();
     let mut pruned: Vec<PrunedPoint> = Vec::new();
@@ -798,7 +835,7 @@ pub fn run_sweep(spec: &SweepSpec, w: &Workload, opts: &DseOptions) -> Result<Ds
         let mut batch: Vec<usize> = Vec::new();
         while idx < cands.len() && batch.len() < wave {
             let (a, cost, ub) = &cands[idx];
-            let bound = ub * PRUNE_SLACK;
+            let bound = ub * (1.0 + opts.prune_slack);
             let hopeless = prune
                 && points.iter().any(|p| {
                     (p.tflops > bound && p.cost <= *cost) || (p.tflops >= bound && p.cost < *cost)
@@ -886,6 +923,8 @@ pub fn run_sweep(spec: &SweepSpec, w: &Workload, opts: &DseOptions) -> Result<Ds
         cache_hits: engine.cache_hits() - hits0,
         disk_hits: engine.disk_hits() - disk0,
         disk_loaded,
+        sims_saved: engine.sims_saved() - saved0,
+        analytic_rank_calls: engine.analytic_rank_calls() - rank0,
         elapsed_ms: t0.elapsed().as_secs_f64() * 1e3,
     })
 }

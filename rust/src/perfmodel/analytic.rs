@@ -1,0 +1,253 @@
+//! Closed-form per-schedule latency estimate (GOMA direction).
+//!
+//! The simulator is the source of truth, but it costs milliseconds per
+//! candidate; this module prices a candidate in nanoseconds of host time
+//! so the tuner can rank the whole candidate space analytically and
+//! simulate only the promising head (see
+//! [`crate::coordinator::engine::TunePolicy::Tiered`]).
+//!
+//! The estimate mirrors the simulator's structure rather than curve-
+//! fitting it: per-superstep compute time reuses the *exact* matrix-engine
+//! model ([`crate::sim::engine_time_ns`]), HBM phase time follows the
+//! channel model (per-run request overhead + streamed bytes at
+//! `channel_gbps · stream_efficiency`, runs-per-fetch from the §3.2
+//! layout: one burst per panel under the optimized layout, one run per
+//! row under the base layout) and the rectangular HBM-edge rule (channels
+//! on the west and south edges, mean-route hop latency), and the NoC
+//! phase prices the dataflow's per-step collective on one link plus the
+//! mesh span. Double buffering overlaps the three phases (`max`);
+//! single buffering serializes them (`+`). Working sets that exceed L1
+//! are priced through the same column-chunking the deployment path uses
+//! ([`crate::coordinator::chunking_for`]), so an estimate exists exactly
+//! when the schedule is deployable.
+//!
+//! Calibration contract: the tiered tuner's winner must stay within ε of
+//! the exhaustive winner's *simulated* makespan — asserted by
+//! `tests/tiered.rs` and pinned by the `tiered` bench id in CI. The model
+//! only has to *rank* well; absolute error is reported, not required.
+
+use crate::arch::{ArchConfig, GemmShape};
+use crate::schedule::{Dataflow, Schedule};
+use crate::sim::engine_time_ns;
+
+/// Analytic phase breakdown for one schedule on one problem, in ns.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AnalyticLatency {
+    /// Serial matrix-engine time over all K-panels.
+    pub compute_ns: f64,
+    /// On-chip collective time (broadcasts/forwards + split-K reduction).
+    pub noc_ns: f64,
+    /// HBM channel time (operand fetches + C stores).
+    pub hbm_ns: f64,
+    /// Overlap-combined end-to-end estimate — the ranking key.
+    pub total_ns: f64,
+}
+
+impl AnalyticLatency {
+    fn zero() -> AnalyticLatency {
+        AnalyticLatency { compute_ns: 0.0, noc_ns: 0.0, hbm_ns: 0.0, total_ns: 0.0 }
+    }
+
+    fn accumulate(&mut self, part: AnalyticLatency) {
+        self.compute_ns += part.compute_ns;
+        self.noc_ns += part.noc_ns;
+        self.hbm_ns += part.hbm_ns;
+        self.total_ns += part.total_ns;
+    }
+}
+
+/// Estimate the end-to-end latency of `sched` on `shape`, chunking the
+/// problem into column slices exactly as [`crate::coordinator::deploy_chunked`]
+/// would when the working set exceeds L1. Returns `None` when the
+/// schedule is invalid or no chunking fits — the same candidates the
+/// simulation path rejects.
+pub fn estimate(arch: &ArchConfig, shape: GemmShape, sched: &Schedule) -> Option<AnalyticLatency> {
+    if sched.validate(arch).is_err() {
+        return None;
+    }
+    let l1 = arch.tile.l1_bytes as u64;
+    if crate::schedule::l1_estimate(arch, shape, sched) <= l1 {
+        return Some(estimate_resident(arch, shape, sched));
+    }
+    let (chunks, tuned) = crate::coordinator::chunking_for(arch, shape, sched)?;
+    let chunk_n = shape.n.div_ceil(chunks);
+    let mut total = AnalyticLatency::zero();
+    let mut remaining = shape.n;
+    while remaining > 0 {
+        let n = remaining.min(chunk_n);
+        total.accumulate(estimate_resident(arch, GemmShape::new(shape.m, n, shape.k), &tuned));
+        remaining -= n;
+    }
+    Some(total)
+}
+
+/// [`estimate`] reduced to the ranking key.
+pub fn estimate_ns(arch: &ArchConfig, shape: GemmShape, sched: &Schedule) -> Option<f64> {
+    estimate(arch, shape, sched).map(|l| l.total_ns)
+}
+
+/// Estimate one L1-resident pass (no chunking).
+fn estimate_resident(arch: &ArchConfig, shape: GemmShape, sched: &Schedule) -> AnalyticLatency {
+    let plan = sched.plan(arch, shape);
+    let (p, q) = sched.logical;
+    let splits = plan.splits as f64;
+    let kp = plan.kp as f64;
+    let stages = sched.pipeline_stages.max(1);
+    let e = arch.elem_bytes as f64;
+    let a_b = (plan.tm * plan.tk) as f64 * e;
+    let b_b = (plan.tk * plan.tn) as f64 * e;
+    let c_b = (plan.tm * plan.tn) as f64 * e;
+
+    // Phase 1: the matrix engine. Same model the simulator charges.
+    let compute_step = engine_time_ns(arch, plan.tm, plan.tn, plan.tk);
+
+    // Mesh geometry terms: a cross-mesh span (worst-case broadcast walk,
+    // also the per-superstep barrier cost) and the mean HBM route from an
+    // edge router to a tile.
+    let hop = arch.noc.hop_ns;
+    let span = (arch.rows + arch.cols) as f64 * hop;
+    let route = (arch.rows + arch.cols) as f64 / 2.0 * hop;
+    let link = arch.noc.link_gbps();
+
+    // HBM channel service per fetched panel: each rectangular run pays the
+    // request overhead, then the bytes stream at the efficiency-derated
+    // channel rate. The optimized layout (§3.2) lands every panel as one
+    // placement-tile burst; the base row-major layout pays one run per row.
+    let ch_bw = arch.hbm.channel_gbps * arch.hbm.stream_efficiency;
+    let req = arch.hbm.request_overhead_ns;
+    let chans = arch.hbm.num_channels() as f64;
+    let (a_runs, b_runs, c_runs) = if sched.opt_layout {
+        (1.0, 1.0, 1.0)
+    } else {
+        (plan.tm as f64, plan.tk as f64, plan.tm as f64)
+    };
+    let a_serve = a_runs * req + a_b / ch_bw;
+    let b_serve = b_runs * req + b_b / ch_bw;
+    let c_serve = c_runs * req + c_b / ch_bw;
+
+    // Per-superstep fetch population and NoC collective, by dataflow.
+    // `extra` counts the non-steady supersteps (pipeline fill/drain).
+    let (n_a, n_b, noc_step, extra) = match sched.dataflow {
+        // Every tile fetches both operands itself; no collectives.
+        Dataflow::Baseline => {
+            let tiles = (p * q * plan.splits) as f64;
+            (tiles, tiles, 0.0, 0.0)
+        }
+        // Edge tiles feed the array; interiors forward one hop per step.
+        Dataflow::Systolic => {
+            let fwd = a_b.max(b_b) / link + hop;
+            (p as f64, q as f64, fwd, (p + q).saturating_sub(2) as f64)
+        }
+        // Row broadcast of A and column broadcast of B ride disjoint link
+        // sets, so one panel's broadcast bounds the step. Pipeline bands
+        // each fetch their own B copy; drained stages add offset steps.
+        Dataflow::Summa | Dataflow::SplitKSumma { .. } => {
+            let bcast = a_b.max(b_b) / link + span;
+            let drain = ((stages - 1) * (plan.kp / stages).max(1)) as f64;
+            (splits * p as f64, splits * (q * stages) as f64, bcast, 2.0 + drain)
+        }
+        // Group owners fetch; scatter + intra-group traffic share links,
+        // so both panels are priced on the step's critical link.
+        Dataflow::SystolicOverSumma { .. } | Dataflow::SummaOverSystolic { .. } => {
+            let bcast = (a_b + b_b) / link + span;
+            (splits * p as f64, splits * q as f64, bcast, 2.0)
+        }
+    };
+
+    // Phase 3: HBM per superstep. The optimized layout round-robins every
+    // matrix over all channels (west + south edges — the rectangular
+    // HBM-edge rule); the base layout pins A and B to one channel each,
+    // which serialize independently and overlap with each other.
+    let hbm_step = if sched.opt_layout {
+        (n_a * a_serve + n_b * b_serve) / chans + route
+    } else {
+        (n_a * a_serve).max(n_b * b_serve) + route
+    };
+
+    // Overlap model: double buffering runs fetch / collective / compute
+    // concurrently, so the slowest phase paces the steady state; single
+    // buffering serializes all three. Every superstep ends on a barrier.
+    let step_time = if sched.double_buffer {
+        compute_step.max(noc_step).max(hbm_step)
+    } else {
+        compute_step + noc_step + hbm_step
+    };
+    let steps = kp + extra;
+    let barrier = span;
+
+    // Epilogue: split-K reduction (tree over the K-groups), then one C
+    // store per output tile.
+    let reduce = if plan.splits > 1 { c_b / link + span } else { 0.0 };
+    let stores = (p * q) as f64;
+    let store = if sched.opt_layout {
+        stores * c_serve / chans + route
+    } else {
+        stores * c_serve + route
+    };
+
+    AnalyticLatency {
+        compute_ns: kp * compute_step,
+        noc_ns: steps * noc_step + reduce,
+        hbm_ns: kp * hbm_step + store,
+        total_ns: steps * (step_time + barrier) + reduce + store,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::candidates;
+
+    #[test]
+    fn estimates_are_finite_positive_and_deterministic() {
+        let arch = ArchConfig::tiny(4, 4);
+        for shape in [GemmShape::new(128, 128, 256), GemmShape::new(16, 512, 512)] {
+            for sched in candidates(&arch, shape) {
+                let a = estimate(&arch, shape, &sched).expect("candidate must be estimable");
+                let b = estimate(&arch, shape, &sched).unwrap();
+                assert!(a.total_ns.is_finite() && a.total_ns > 0.0, "{}", sched.name());
+                assert!(a.compute_ns > 0.0 && a.hbm_ns > 0.0);
+                assert_eq!(a.total_ns.to_bits(), b.total_ns.to_bits(), "nondeterministic");
+            }
+        }
+    }
+
+    #[test]
+    fn optimized_summa_beats_base_layout_baseline() {
+        // The directional claim the tiering relies on: collectives + the
+        // optimized layout are priced far below per-tile row-major DMA.
+        let arch = ArchConfig::tiny(4, 4);
+        let shape = GemmShape::new(128, 128, 256);
+        let summa = Schedule { opt_layout: true, ..Schedule::summa(&arch, shape) };
+        let base = Schedule { opt_layout: false, ..Schedule::baseline(&arch, shape) };
+        let s = estimate_ns(&arch, shape, &summa).unwrap();
+        let b = estimate_ns(&arch, shape, &base).unwrap();
+        assert!(s < b, "summa {s} !< baseline {b}");
+    }
+
+    #[test]
+    fn estimable_iff_deployable() {
+        // `estimate` must exist exactly when `deploy_chunked` succeeds,
+        // including shapes that only fit L1 after column chunking.
+        let arch = ArchConfig::tiny(4, 4);
+        for shape in [
+            GemmShape::new(128, 128, 256),
+            GemmShape::new(16, 512, 512),
+            GemmShape::new(128, 4096, 128),
+        ] {
+            for sched in candidates(&arch, shape) {
+                let deployable = crate::coordinator::deploy_chunked(&arch, shape, &sched).is_ok();
+                let estimable = estimate(&arch, shape, &sched).is_some();
+                assert_eq!(deployable, estimable, "{} {}", shape, sched.name());
+            }
+        }
+    }
+
+    #[test]
+    fn oversize_shape_is_unestimable() {
+        let arch = ArchConfig::tiny(4, 4);
+        let shape = GemmShape::new(1 << 20, 1 << 20, 1 << 20);
+        let sched = Schedule::summa(&arch, shape);
+        assert!(estimate(&arch, shape, &sched).is_none());
+    }
+}

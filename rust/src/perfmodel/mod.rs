@@ -19,8 +19,10 @@
 //! The point of the model is to preserve the paper's *ratios* (who wins,
 //! by how much, where the crossover sits), not absolute GPU truth.
 
+pub mod analytic;
 pub mod energy;
 
+pub use analytic::AnalyticLatency;
 pub use energy::EnergyModel;
 
 use crate::arch::{ArchConfig, GemmShape};

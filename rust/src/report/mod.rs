@@ -123,8 +123,10 @@ pub fn workload_summary(rep: &crate::coordinator::engine::WorkloadReport) -> Tab
 /// so cache effectiveness is visible at a glance.
 pub fn workload_counters(rep: &crate::coordinator::engine::WorkloadReport) -> String {
     format!(
-        "engine     : {} simulations, {} memo hits, {} disk hits, {} workers, {:.0} ms wall",
-        rep.sim_calls, rep.cache_hits, rep.disk_hits, rep.workers, rep.elapsed_ms
+        "engine     : {} simulations, {} saved by tiering, {} memo hits, {} disk hits, \
+         {} workers, {:.0} ms wall",
+        rep.sim_calls, rep.sims_saved, rep.cache_hits, rep.disk_hits, rep.workers,
+        rep.elapsed_ms
     )
 }
 
@@ -133,9 +135,10 @@ pub fn workload_counters(rep: &crate::coordinator::engine::WorkloadReport) -> St
 /// cache started with, so a resumed sweep is recognizable from the log.
 pub fn dse_counters(res: &crate::dse::DseResult) -> String {
     format!(
-        "engine     : {} simulations, {} memo hits, {} disk hits ({} entries preloaded), \
-         {:.0} ms wall",
-        res.sim_calls, res.cache_hits, res.disk_hits, res.disk_loaded, res.elapsed_ms
+        "engine     : {} simulations, {} saved by tiering, {} memo hits, {} disk hits \
+         ({} entries preloaded), {:.0} ms wall",
+        res.sim_calls, res.sims_saved, res.cache_hits, res.disk_hits, res.disk_loaded,
+        res.elapsed_ms
     )
 }
 
@@ -392,6 +395,8 @@ mod tests {
                     sim_calls: 0,
                     cache_hits: 0,
                     disk_hits: 0,
+                    sims_saved: 0,
+                    analytic_rank_calls: 0,
                     workers: 1,
                     elapsed_ms: 0.0,
                 },
@@ -412,6 +417,8 @@ mod tests {
             cache_hits: 1,
             disk_hits: 2,
             disk_loaded: 5,
+            sims_saved: 4,
+            analytic_rank_calls: 12,
             elapsed_ms: 1.0,
         };
         let counters = dse_counters(&res);
@@ -474,6 +481,8 @@ mod tests {
             sim_calls: 1,
             cache_hits: 0,
             disk_hits: 3,
+            sims_saved: 2,
+            analytic_rank_calls: 6,
             workers: 2,
             elapsed_ms: 1.0,
         };

@@ -6,7 +6,7 @@
 use dit::arch::workload::Workload;
 use dit::arch::{ArchConfig, GemmShape};
 use dit::coordinator::engine::Engine;
-use dit::dse::{self, pareto, DseOptions, SweepSpec, PRUNE_SLACK};
+use dit::dse::{self, pareto, DseOptions, SweepSpec, DEFAULT_PRUNE_SLACK};
 
 /// A 12-config sweep over tiny grids: three meshes × two CE shapes × two
 /// SPM capacities of the tiny template.
@@ -135,7 +135,7 @@ fn prune_is_sound_vs_exhaustive_sweep() {
     // No pruned config could have joined the frontier: some evaluated
     // point beats even its slack-inflated ceiling at no greater cost.
     for px in &pruned.pruned {
-        let bound = px.roofline_tflops * PRUNE_SLACK;
+        let bound = px.roofline_tflops * (1.0 + DEFAULT_PRUNE_SLACK);
         assert!(
             pruned.points.iter().any(|p| {
                 (p.tflops > bound && p.cost <= px.cost) || (p.tflops >= bound && p.cost < px.cost)
@@ -149,6 +149,38 @@ fn prune_is_sound_vs_exhaustive_sweep() {
             assert!(!twin.on_frontier, "{} was pruned but is Pareto-optimal", px.name);
         }
     }
+}
+
+/// The prune-slack knob is validated before a sweep runs: out-of-range or
+/// non-finite fractions are rejected, in-range ones accepted, and a wider
+/// slack can only shrink the pruned set (it makes the bound harder to
+/// beat).
+#[test]
+fn prune_slack_is_validated_and_monotone() {
+    let spec = tiny_spec();
+    let w = tiny_workload();
+    for bad in [-0.01, 0.51, f64::NAN, f64::INFINITY] {
+        let o = DseOptions { prune_slack: bad, ..opts(true) };
+        let err = dse::run_sweep(&spec, &w, &o).unwrap_err().to_string();
+        assert!(err.contains("prune slack"), "{bad}: {err}");
+    }
+    let tight = dse::run_sweep(&spec, &w, &DseOptions { prune_slack: 0.0, ..opts(true) })
+        .unwrap();
+    let wide = dse::run_sweep(&spec, &w, &DseOptions { prune_slack: 0.5, ..opts(true) })
+        .unwrap();
+    assert!(
+        wide.pruned.len() <= tight.pruned.len(),
+        "wider slack pruned more: {} > {}",
+        wide.pruned.len(),
+        tight.pruned.len()
+    );
+    // Both stay sound: same frontier as the current-default sweep.
+    let base = dse::run_sweep(&spec, &w, &opts(true)).unwrap();
+    let names = |r: &dse::DseResult| {
+        r.frontier().iter().map(|p| p.arch.name.clone()).collect::<Vec<_>>()
+    };
+    assert_eq!(names(&tight), names(&base));
+    assert_eq!(names(&wide), names(&base));
 }
 
 /// Two sweeps over the same spec produce identical results, bit for bit,
@@ -242,7 +274,7 @@ fn prune_is_sound_vs_exhaustive_on_rectangular_meshes() {
         assert_eq!(a.tflops.to_bits(), b.tflops.to_bits());
     }
     for px in &pruned.pruned {
-        let bound = px.roofline_tflops * PRUNE_SLACK;
+        let bound = px.roofline_tflops * (1.0 + DEFAULT_PRUNE_SLACK);
         assert!(
             pruned.points.iter().any(|p| {
                 (p.tflops > bound && p.cost <= px.cost) || (p.tflops >= bound && p.cost < px.cost)

@@ -1,0 +1,164 @@
+//! The tiered-tuning calibration contract, asserted end to end:
+//!
+//! 1. **Calibration** — on every built-in-suite shape, across square and
+//!    rectangular meshes, the tiered winner's *simulated* makespan stays
+//!    within `EPSILON` of the exhaustive winner's (the candidate families
+//!    covered include baseline, SUMMA, split-K, and the flat-GEMM remap —
+//!    the tiny suite's square/ragged/flat shapes enumerate all of them).
+//! 2. **Determinism** — the exploration band is a pure function of
+//!    (architecture, shape, policy): two fresh tiered engines produce
+//!    bit-identical selections, rankings, and makespans, regardless of
+//!    worker count.
+//! 3. **Cache interop** — tiering changes which candidates simulate, not
+//!    how they are keyed: a tiered run populates the persistent cache
+//!    with entries an exhaustive run reuses verbatim (and vice versa),
+//!    so checkpoints stay valid across policy changes.
+
+use dit::arch::workload::Workload;
+use dit::arch::ArchConfig;
+use dit::coordinator::engine::{Engine, TunePolicy};
+
+/// Maximum relative drift of the tiered winner's simulated makespan above
+/// the exhaustive winner's (the contract the bench baseline also pins).
+const EPSILON: f64 = 0.10;
+
+/// Square plus both rectangular orientations: the tiering policy must
+/// hold wherever the rectangular HBM-edge rule changes the estimates.
+fn meshes() -> [ArchConfig; 3] {
+    [ArchConfig::tiny(4, 4), ArchConfig::tiny(2, 4), ArchConfig::tiny(4, 2)]
+}
+
+#[test]
+fn tiered_winner_tracks_exhaustive_within_epsilon() {
+    let w = Workload::builtin("tiny").unwrap();
+    for arch in meshes() {
+        let exh = Engine::new(&arch).tune_workload(&w).unwrap();
+        let tier = Engine::new(&arch)
+            .with_policy(TunePolicy::tiered_default())
+            .tune_workload(&w)
+            .unwrap();
+        assert!(
+            tier.sim_calls < exh.sim_calls,
+            "{}: tiering saved nothing ({} vs {} sims)",
+            arch.name,
+            tier.sim_calls,
+            exh.sim_calls
+        );
+        for (e, t) in exh.shapes.iter().zip(&tier.shapes) {
+            let eb = e.result.best().stats.makespan_ns;
+            let tb = t.result.best().stats.makespan_ns;
+            // The tiered winner comes from a subset of the exhaustive
+            // candidate set, so it can never be faster...
+            assert!(
+                tb >= eb,
+                "{} on {}: tiered winner {tb} ns beats exhaustive {eb} ns",
+                e.shape,
+                arch.name
+            );
+            // ...and the contract is that it is never much slower.
+            assert!(
+                tb <= eb * (1.0 + EPSILON),
+                "{} on {}: tiered winner {tb} ns drifts more than {:.0}% above \
+                 exhaustive {eb} ns",
+                e.shape,
+                arch.name,
+                EPSILON * 100.0
+            );
+        }
+    }
+}
+
+#[test]
+fn exploration_band_is_deterministic() {
+    let w = Workload::builtin("tiny").unwrap();
+    for arch in meshes() {
+        let run = |workers: usize| {
+            Engine::new(&arch)
+                .with_workers(workers)
+                .with_policy(TunePolicy::tiered_default())
+                .tune_workload(&w)
+                .unwrap()
+        };
+        let a = run(1);
+        let b = run(3);
+        assert_eq!(a.sim_calls, b.sim_calls, "{}", arch.name);
+        assert_eq!(a.sims_saved, b.sims_saved, "{}", arch.name);
+        for (x, y) in a.shapes.iter().zip(&b.shapes) {
+            assert_eq!(x.result.ranking.len(), y.result.ranking.len(), "{}", x.shape);
+            for (p, q) in x.result.ranking.iter().zip(&y.result.ranking) {
+                assert_eq!(p.schedule, q.schedule, "{} on {}", x.shape, arch.name);
+                assert_eq!(
+                    p.stats.makespan_ns.to_bits(),
+                    q.stats.makespan_ns.to_bits(),
+                    "{} on {}",
+                    x.shape,
+                    arch.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn tiered_shares_the_disk_cache_with_exhaustive() {
+    let path =
+        std::env::temp_dir().join(format!("dit-tiered-cache-{}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let arch = ArchConfig::tiny(4, 4);
+    let w = Workload::builtin("tiny").unwrap();
+
+    // Cold tiered run: simulates its selection, checkpoints it to disk.
+    let cold_engine =
+        Engine::new(&arch).with_policy(TunePolicy::tiered_default()).with_cache(&path);
+    let cold = cold_engine.tune_workload(&w).unwrap();
+    assert!(cold.sim_calls > 0, "cold tiered run simulates");
+    assert_eq!(cold.disk_hits, 0, "nothing on disk yet");
+    assert!(cold.sims_saved > 0, "tiering saved something");
+    assert!(path.exists(), "tiered run checkpoints like any other");
+    drop(cold_engine);
+
+    // A fresh tiered engine resumes entirely from those entries: the
+    // selection is cache-independent, so it re-selects the same set and
+    // finds every member on disk.
+    let warm_engine =
+        Engine::new(&arch).with_policy(TunePolicy::tiered_default()).with_cache(&path);
+    assert!(warm_engine.disk_loaded() > 0);
+    let warm = warm_engine.tune_workload(&w).unwrap();
+    assert_eq!(warm.sim_calls, 0, "warm tiered rerun must be fully disk-served");
+    assert!(warm.disk_hits > 0);
+    assert_eq!(
+        warm.sims_saved, cold.sims_saved,
+        "saved counts are pre-cache, so they do not depend on cache state"
+    );
+    for (c, h) in cold.shapes.iter().zip(&warm.shapes) {
+        assert_eq!(c.result.ranking.len(), h.result.ranking.len(), "{}", c.shape);
+        for (x, y) in c.result.ranking.iter().zip(&h.result.ranking) {
+            assert_eq!(x.schedule, y.schedule);
+            assert_eq!(x.stats.makespan_ns.to_bits(), y.stats.makespan_ns.to_bits());
+        }
+    }
+    drop(warm_engine);
+
+    // An exhaustive engine on the same path reuses the tiered entries
+    // verbatim (same keys), so it only simulates the unselected
+    // remainder — and its output is bit-identical to a cache-less
+    // exhaustive run.
+    let exh_cold = Engine::new(&arch).tune_workload(&w).unwrap();
+    let exh_engine = Engine::new(&arch).with_cache(&path);
+    let exh_cached = exh_engine.tune_workload(&w).unwrap();
+    assert!(exh_cached.disk_hits > 0, "exhaustive run must hit the tiered entries");
+    assert_eq!(
+        exh_cached.sim_calls,
+        exh_cold.sim_calls - cold.sim_calls,
+        "exhaustive-after-tiered simulates exactly the unselected remainder"
+    );
+    for (a, b) in exh_cold.shapes.iter().zip(&exh_cached.shapes) {
+        assert_eq!(a.result.ranking.len(), b.result.ranking.len(), "{}", a.shape);
+        for (x, y) in a.result.ranking.iter().zip(&b.result.ranking) {
+            assert_eq!(x.schedule, y.schedule);
+            assert_eq!(x.stats.makespan_ns.to_bits(), y.stats.makespan_ns.to_bits());
+        }
+    }
+    drop(exh_engine);
+    let _ = std::fs::remove_file(&path);
+}
