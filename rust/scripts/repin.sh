@@ -14,17 +14,22 @@
 # would pin fig7*/fig8/fig11/fig12 metrics CI never produces and every
 # later gate run would fail them as MISSING.
 #
-# Floor pins ("floor": true — *.sims_per_sec and the tiered
-# sims_saved_pct contract) are preserved VERBATIM by --update: they are
-# tolerance-free hard lower bounds (machine-dependent throughput, or a
-# deliberate policy contract), and re-pinning them from one run would
-# either make the gate flake on slower CI runners or silently relax the
-# contract. Tighten them only by hand-editing bench_baseline.json to a
-# value every runner clears comfortably.
+# Floor pins ("floor": true — *.sims_per_sec, the tiered sims_saved_pct
+# contract, and the serve.exact/neighbor_hit_rate serving floors backed
+# by committed-trace arithmetic) are preserved VERBATIM by --update:
+# they are tolerance-free hard lower bounds (machine-dependent
+# throughput, or a deliberate policy contract), and re-pinning them from
+# one run would either make the gate flake on slower CI runners or
+# silently relax the contract. Tighten them only by hand-editing
+# bench_baseline.json to a value every runner clears comfortably.
+#
+# The CI repin lane (workflow_dispatch) runs exactly this script on a
+# real runner; dispatch it with commit_repin=true to push the result
+# back to the branch without a local toolchain.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-cargo bench --bench figures -- table1 fig1 fig9 fig10 workload dse energy tiered \
+cargo bench --bench figures -- table1 fig1 fig9 fig10 workload dse energy tiered serve \
     --json BENCH_results.json
 cargo run --release --bin bench_gate -- --update
 cargo run --release --bin bench_gate -- \

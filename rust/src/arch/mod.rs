@@ -30,6 +30,20 @@ impl GemmShape {
         GemmShape { m, n, k }
     }
 
+    /// Parse the canonical `MxNxK` text form (the inverse of `Display`,
+    /// modulo surrounding whitespace) — the grammar the CLI, the
+    /// persistent cache, and serve traces all share.
+    pub fn parse(s: &str) -> anyhow::Result<GemmShape> {
+        use anyhow::Context;
+        let parts: Vec<&str> = s.split('x').collect();
+        anyhow::ensure!(parts.len() == 3, "shape must be MxNxK, got {s:?}");
+        Ok(GemmShape::new(
+            parts[0].trim().parse().context("M")?,
+            parts[1].trim().parse().context("N")?,
+            parts[2].trim().parse().context("K")?,
+        ))
+    }
+
     /// Total floating-point work (multiply + add).
     pub fn flops(&self) -> f64 {
         2.0 * self.m as f64 * self.n as f64 * self.k as f64

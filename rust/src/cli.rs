@@ -7,6 +7,7 @@
 //! dit autotune  --preset P --shape MxNxK             # rank all candidates
 //! dit tune-workload --preset P --suite transformer   # batch-tune a suite
 //! dit dse       --workload serving [--spec FILE]     # hardware design-space sweep
+//! dit serve     --preset P --trace FILE [--cache DIR] # replay a schedule-request trace
 //! dit verify    --shape MxNxK [--grid RxC] [--schedule NAME]   # vs oracle
 //! dit fig       --id 7a|7b|7c|7d|8|9|10|11|12|1|table1  # regen a figure
 //! ```
@@ -59,17 +60,10 @@ impl Args {
     }
 }
 
-/// Parse `MxNxK` into a [`GemmShape`].
+/// Parse `MxNxK` into a [`GemmShape`] (the shared grammar lives on
+/// [`GemmShape::parse`] so the CLI, the cache and serve traces agree).
 pub fn parse_shape(s: &str) -> Result<GemmShape> {
-    let parts: Vec<&str> = s.split('x').collect();
-    if parts.len() != 3 {
-        bail!("shape must be MxNxK, got {s:?}");
-    }
-    Ok(GemmShape::new(
-        parts[0].parse().context("M")?,
-        parts[1].parse().context("N")?,
-        parts[2].parse().context("K")?,
-    ))
+    GemmShape::parse(s)
 }
 
 /// Resolve an architecture preset or config file.
@@ -198,8 +192,18 @@ COMMANDS:
               [--cache FILE]                            persistent simulation cache:
                                                         killed sweeps resume, refined
                                                         sweeps reuse overlapping points
-  cache       stats --cache FILE                        inspect a simulation cache
-              clear --cache FILE                        delete it (+ stray temp files)
+  serve       --preset P --trace FILE                   replay a GEMM request trace
+              [--cache DIR] [--epsilon E] [--shards N]  through the schedule server:
+              [--workers N] [--drain N]                 exact hits, analytically
+              [--tiered bool] [--top-k N] [--explore N] eps-bounded neighbor reuse
+                                                        (penalty <= E vs the analytic
+                                                        best), misses tune + persist;
+                                                        tiered policy is the default
+  serve       --gen-trace PATH [--seed N] [--len N]     write a deterministic Zipf
+                                                        request trace and exit
+  cache       stats --cache FILE|DIR                    inspect a simulation cache
+              clear --cache FILE|DIR                    delete it (+ stray temp files;
+                                                        DIR = sharded serve cache)
   verify      --shape MxNxK [--grid N] [--schedule S]   functional vs golden oracle
               [--artifacts DIR] [--seed N]               (CPU reference if no PJRT)
   help                                                  this text
@@ -214,6 +218,8 @@ EXAMPLES:
   dit dse      --workload serving --objectives perf,cost,energy --weights 0.5,0.2,0.3
   dit dse      --workload serving --cache sweep.cache   # re-run resumes from disk
   dit cache    stats --cache sweep.cache
+  dit serve    --gen-trace traces/serve_zipf.txt --seed 7 --len 512
+  dit serve    --preset tiny8 --trace traces/serve_zipf.txt --cache serve.cache --drain 4
   dit verify   --shape 128x128x128 --grid 4 --schedule splitk --splits 2
 ";
 
@@ -223,7 +229,7 @@ pub fn run(argv: &[String]) -> Result<()> {
     if argv.first().map(String::as_str) == Some("cache") {
         let action = argv.get(1).map(String::as_str).unwrap_or("stats");
         if action.starts_with("--") {
-            bail!("usage: dit cache <stats|clear> --cache FILE");
+            bail!("usage: dit cache <stats|clear> --cache FILE|DIR");
         }
         let args = Args::with_flags("cache".to_string(), argv.get(2..).unwrap_or_default())?;
         return cmd_cache(action, &args);
@@ -240,32 +246,78 @@ pub fn run(argv: &[String]) -> Result<()> {
         "autotune" => cmd_autotune(&args),
         "tune-workload" => cmd_tune_workload(&args),
         "dse" => cmd_dse(&args),
+        "serve" => cmd_serve(&args),
         "verify" => cmd_verify(&args),
         other => bail!("unknown command {other:?}; try `dit help`"),
     }
 }
 
-/// Inspect or delete a persistent simulation cache.
+/// Inspect or delete a persistent simulation cache — a single `.jsonl`
+/// file, or a sharded directory written by the schedule server
+/// ([`crate::coordinator::cache::ShardedDiskCache`]). A directory is
+/// inspected by scanning its actual `shard-*.jsonl` files, so stats work
+/// regardless of the shard count the server was opened with.
 fn cmd_cache(action: &str, args: &Args) -> Result<()> {
-    use crate::coordinator::cache::{DiskCache, FORMAT, VERSION};
-    let path = args.get("cache").context("--cache FILE required")?;
+    use crate::coordinator::cache::{DiskCache, ShardedDiskCache, FORMAT, VERSION};
+    let path = args.get("cache").context("--cache FILE|DIR required")?;
+    let sharded = std::path::Path::new(path).is_dir();
     match action {
         "stats" => {
-            let cache = DiskCache::open(path);
-            for w in cache.warnings() {
-                println!("warning    : {w}");
+            // A sharded directory aggregates per-shard caches; a plain
+            // file is a one-element aggregate of itself.
+            let shard_files: Vec<std::path::PathBuf> = if sharded {
+                let mut files: Vec<_> = std::fs::read_dir(path)
+                    .with_context(|| format!("reading cache directory {path}"))?
+                    .filter_map(|e| e.ok())
+                    .map(|e| e.path())
+                    .filter(|p| {
+                        p.file_name()
+                            .and_then(|n| n.to_str())
+                            .map(|n| n.starts_with("shard-") && n.ends_with(".jsonl"))
+                            .unwrap_or(false)
+                    })
+                    .collect();
+                files.sort();
+                files
+            } else {
+                vec![std::path::PathBuf::from(path)]
+            };
+            let mut entries = 0usize;
+            let mut infeasible = 0usize;
+            let mut size = 0u64;
+            let mut counts: HashMap<u64, usize> = HashMap::new();
+            for file in &shard_files {
+                let cache = DiskCache::open(file);
+                let name = file.file_name().and_then(|n| n.to_str()).unwrap_or("?");
+                for w in cache.warnings() {
+                    if sharded {
+                        println!("warning    : {name}: {w}");
+                    } else {
+                        println!("warning    : {w}");
+                    }
+                }
+                entries += cache.len();
+                infeasible += cache.infeasible_count();
+                size += std::fs::metadata(file).map(|m| m.len()).unwrap_or(0);
+                for (fp, n) in cache.fingerprint_counts() {
+                    *counts.entry(fp).or_insert(0) += n;
+                }
             }
-            let size = std::fs::metadata(path).map(|m| m.len()).unwrap_or(0);
-            println!("cache file : {path}");
+            if sharded {
+                println!("cache dir  : {path} ({} shard files)", shard_files.len());
+            } else {
+                println!("cache file : {path}");
+            }
             println!("format     : {FORMAT} v{VERSION}");
             println!(
                 "entries    : {} ({} deployable, {} recorded-infeasible), {} on disk",
-                cache.len(),
-                cache.len() - cache.infeasible_count(),
-                cache.infeasible_count(),
+                entries,
+                entries - infeasible,
+                infeasible,
                 crate::util::human_bytes(size)
             );
-            let counts = cache.fingerprint_counts();
+            let mut counts: Vec<(u64, usize)> = counts.into_iter().collect();
+            counts.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
             if !counts.is_empty() {
                 let mut t = Table::new(
                     "entries per architecture fingerprint",
@@ -279,16 +331,103 @@ fn cmd_cache(action: &str, args: &Args) -> Result<()> {
             Ok(())
         }
         "clear" => {
-            let (removed, temps) = DiskCache::clear(path)?;
-            println!(
-                "{} {path} ({temps} stray temp file{} removed)",
-                if removed { "removed" } else { "no cache file at" },
-                if temps == 1 { "" } else { "s" }
-            );
+            if sharded {
+                let (files, temps) = ShardedDiskCache::clear(path)?;
+                println!(
+                    "removed {files} shard file{} at {path} ({temps} stray temp file{} removed)",
+                    if files == 1 { "" } else { "s" },
+                    if temps == 1 { "" } else { "s" }
+                );
+            } else {
+                let (removed, temps) = DiskCache::clear(path)?;
+                println!(
+                    "{} {path} ({temps} stray temp file{} removed)",
+                    if removed { "removed" } else { "no cache file at" },
+                    if temps == 1 { "" } else { "s" }
+                );
+            }
             Ok(())
         }
         other => bail!("unknown cache action {other:?}; usage: dit cache <stats|clear>"),
     }
+}
+
+/// Replay a GEMM request trace through the schedule server (or, with
+/// `--gen-trace`, write a deterministic Zipf trace and exit). Serving
+/// defaults to the tiered tuning policy — a cache-miss on the serving
+/// path should simulate as little as possible; pass `--tiered false`
+/// to force exhaustive tuning on misses.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use crate::coordinator::shapedb::{self, ScheduleServer, ServeConfig};
+
+    if let Some(path) = args.get("gen-trace") {
+        let seed: u64 = args.get_or("seed", "7").parse().context("--seed")?;
+        let len: usize = args.get_or("len", "512").parse().context("--len")?;
+        anyhow::ensure!(len > 0, "--len must be positive");
+        let trace = shapedb::zipf_trace(seed, len);
+        std::fs::write(path, shapedb::render_trace(&trace, seed))
+            .with_context(|| format!("writing trace {path:?}"))?;
+        println!("wrote      : {len} requests (seed {seed}) to {path}");
+        return Ok(());
+    }
+
+    let arch = parse_arch(args.get_or("preset", "gh200"))?;
+    let trace_path =
+        args.get("trace").context("--trace FILE required (or --gen-trace PATH)")?;
+    let trace = shapedb::load_trace(trace_path)?;
+
+    let mut cfg = ServeConfig::default();
+    // parse_policy defaults to Exhaustive when the tiering flags are
+    // absent; serving defaults to tiered, so only consult it when the
+    // user said something.
+    if args.get("tiered").is_some() || args.get("top-k").is_some() || args.get("explore").is_some()
+    {
+        cfg.policy = parse_policy(args)?;
+    }
+    if let Some(e) = args.get("epsilon") {
+        cfg.epsilon = e.parse().context("--epsilon")?;
+    }
+    if let Some(s) = args.get("shards") {
+        cfg.shards = s.parse().context("--shards")?;
+        anyhow::ensure!(cfg.shards >= 1, "--shards must be at least 1");
+    }
+    if let Some(w) = args.get("workers") {
+        cfg.workers = Some(w.parse().context("--workers")?);
+    }
+    let server = match args.get("cache") {
+        Some(dir) => ScheduleServer::open(&arch, dir, cfg)?,
+        None => ScheduleServer::in_memory(&arch, cfg)?,
+    };
+
+    for &shape in &trace {
+        server.serve(shape)?;
+    }
+    let drain: usize = args.get_or("drain", "0").parse().context("--drain")?;
+    if drain > 0 {
+        let done = server.drain_retunes(drain)?;
+        println!("drained    : {done} queued retune{}", if done == 1 { "" } else { "s" });
+    }
+    if args.get("cache").is_some() {
+        server.flush()?;
+    }
+
+    let stats = server.stats();
+    print!("{}", crate::report::serve_summary(&stats).markdown());
+    println!(
+        "replay     : {} from {trace_path}, eps {} ({:.1}% answered without tuning)",
+        trace.len(),
+        server.epsilon(),
+        100.0 * stats.hit_rate()
+    );
+    println!("{}", crate::report::serve_counters(&stats));
+    if let Some(dir) = args.get("cache") {
+        println!(
+            "cache dir  : {dir} ({} entries, {} preloaded this run)",
+            server.disk_len(),
+            server.disk_loaded()
+        );
+    }
+    Ok(())
 }
 
 fn cmd_arch(args: &Args) -> Result<()> {
@@ -808,6 +947,37 @@ mod tests {
         assert!(run(&argv("cache")).is_err(), "stats without --cache");
         assert!(run(&argv("cache nuke --cache x")).is_err(), "unknown action");
         assert!(run(&argv("cache --cache x")).is_err(), "missing action");
+    }
+
+    #[test]
+    fn run_serve_cli_smoke() {
+        let dir = std::env::temp_dir().join(format!("dit-cli-serve-{}", std::process::id()));
+        let d = dir.to_string_lossy().into_owned();
+        let trace =
+            std::env::temp_dir().join(format!("dit-cli-serve-{}.trace", std::process::id()));
+        let t = trace.to_string_lossy().into_owned();
+        let _ = crate::coordinator::cache::ShardedDiskCache::clear(&dir);
+        let _ = std::fs::remove_file(&trace);
+        // Generate a small deterministic trace, then replay it twice
+        // against one sharded cache path: cold tunes, warm resumes.
+        run(&argv(&format!("serve --gen-trace {t} --seed 3 --len 24"))).unwrap();
+        run(&argv(&format!(
+            "serve --preset tiny4 --trace {t} --cache {d} --shards 2 --drain 2"
+        )))
+        .unwrap();
+        run(&argv(&format!("serve --preset tiny4 --trace {t} --cache {d} --shards 2")))
+            .unwrap();
+        // In-memory replay; knob validation errors cleanly.
+        run(&argv(&format!("serve --preset tiny4 --trace {t} --epsilon 0.5"))).unwrap();
+        assert!(run(&argv(&format!("serve --preset tiny4 --trace {t} --epsilon -1"))).is_err());
+        assert!(run(&argv(&format!("serve --preset tiny4 --trace {t} --shards 0"))).is_err());
+        assert!(run(&argv("serve --preset tiny4")).is_err(), "--trace required");
+        assert!(run(&argv("serve --gen-trace /no/such/dir/x --len 4")).is_err());
+        // The sharded directory is a first-class `cache` citizen.
+        run(&argv(&format!("cache stats --cache {d}"))).unwrap();
+        run(&argv(&format!("cache clear --cache {d}"))).unwrap();
+        assert!(!dir.exists(), "clear removes the shard directory");
+        let _ = std::fs::remove_file(&trace);
     }
 
     #[test]

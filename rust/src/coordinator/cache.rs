@@ -446,6 +446,22 @@ impl DiskCache {
             .with_file_name(format!("{name}.tmp.{}.{seq}", std::process::id()))
     }
 
+    /// Distinct shape texts recorded for `arch_fp` with at least one
+    /// successfully-simulated schedule, sorted. Shapes where *every*
+    /// candidate failed to lower are excluded — re-tuning them would fail
+    /// again. The schedule server rebuilds its shape database from this.
+    pub fn deployable_shapes_for(&self, arch_fp: u64) -> Vec<String> {
+        let mut shapes: Vec<String> = self
+            .entries
+            .iter()
+            .filter(|(k, v)| k.arch_fp == arch_fp && v.is_some())
+            .map(|(k, _)| k.shape.clone())
+            .collect();
+        shapes.sort();
+        shapes.dedup();
+        shapes
+    }
+
     /// Delete the cache file and any stray temp files a killed writer
     /// left beside it. Returns `(file_removed, temp_files_removed)`.
     pub fn clear(path: impl AsRef<Path>) -> Result<(bool, usize)> {
@@ -472,6 +488,200 @@ impl DiskCache {
             }
         }
         Ok((removed, temps))
+    }
+}
+
+/// Default shard count for [`ShardedDiskCache`].
+pub const DEFAULT_SHARDS: usize = 8;
+
+/// A concurrent, sharded variant of [`DiskCache`]: a *directory* holding
+/// `shard-NN.jsonl` files, each an ordinary single-writer cache behind
+/// its own lock. Keys are range-partitioned by a stable FNV-1a
+/// fingerprint of the full key text, so a given key always lives in the
+/// same shard across processes and runs — and concurrent readers plus a
+/// background retune writer touching *different* shards never serialize
+/// on one file lock (the serving layer's whole point,
+/// [`crate::coordinator::shapedb`]).
+///
+/// Each shard file uses the exact v1 format above; a sharded directory
+/// is therefore N independent, individually-recoverable caches. The
+/// shard count is a fixed property of the directory: reopen with the
+/// same count (everything in-repo uses [`DEFAULT_SHARDS`] unless a test
+/// overrides it) — a different count would still *load* safely but
+/// route lookups to the wrong shard, degrading to cache misses.
+pub struct ShardedDiskCache {
+    dir: PathBuf,
+    shards: Vec<std::sync::Mutex<DiskCache>>,
+}
+
+impl ShardedDiskCache {
+    /// Open (or create-on-first-flush) a sharded cache directory with
+    /// [`DEFAULT_SHARDS`] shards. Infallible, like [`DiskCache::open`]:
+    /// corruption in any shard degrades that shard to a (partial) cold
+    /// start with a recorded warning.
+    pub fn open(dir: impl Into<PathBuf>) -> ShardedDiskCache {
+        Self::open_with(dir, DEFAULT_SHARDS)
+    }
+
+    /// Open with an explicit shard count (minimum 1).
+    pub fn open_with(dir: impl Into<PathBuf>, shards: usize) -> ShardedDiskCache {
+        let dir = dir.into();
+        let shards = (0..shards.max(1))
+            .map(|i| std::sync::Mutex::new(DiskCache::open(dir.join(Self::shard_name(i)))))
+            .collect();
+        ShardedDiskCache { dir, shards }
+    }
+
+    fn shard_name(i: usize) -> String {
+        format!("shard-{i:02}.jsonl")
+    }
+
+    /// The cache directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Number of shards this handle routes across.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Which shard owns `key`: a range partition of the key-text
+    /// fingerprint (`⌊fp · n / 2⁶⁴⌋`), stable by the same argument as
+    /// the on-disk key grammar itself.
+    fn shard_of(&self, key: &DiskKey) -> usize {
+        let tag = format!("{:016x}|{}|{}", key.arch_fp, key.shape, key.sched);
+        let fp = crate::util::fnv1a64(tag.as_bytes());
+        ((fp as u128 * self.shards.len() as u128) >> 64) as usize
+    }
+
+    /// Look up one entry (cloned out from under the owning shard's lock).
+    pub fn get(&self, key: &DiskKey) -> Option<Option<RunStats>> {
+        self.shards[self.shard_of(key)].lock().unwrap().get(key).cloned()
+    }
+
+    /// Insert one entry without flushing, into the owning shard only.
+    pub fn insert_deferred(&self, key: DiskKey, stats: Option<RunStats>) {
+        self.shards[self.shard_of(&key)].lock().unwrap().insert_deferred(key, stats);
+    }
+
+    /// Flush every shard, reporting the first failure (every shard is
+    /// still attempted; unflushed entries stay dirty for a retry).
+    pub fn flush(&self) -> Result<()> {
+        let mut first: Option<anyhow::Error> = None;
+        for shard in &self.shards {
+            if let Err(e) = shard.lock().unwrap().flush() {
+                first.get_or_insert(e);
+            }
+        }
+        match first {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
+    }
+
+    /// Compact every shard to its canonical sorted image. Poison-tolerant
+    /// (the engine calls this from its drop): a shard whose lock was
+    /// poisoned by a panicking thread is skipped, not double-panicked on.
+    pub fn compact(&self) -> Result<()> {
+        let mut first: Option<anyhow::Error> = None;
+        for shard in &self.shards {
+            if let Ok(mut shard) = shard.lock() {
+                if let Err(e) = shard.compact() {
+                    first.get_or_insert(e);
+                }
+            }
+        }
+        match first {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
+    }
+
+    /// Entries currently held across all shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Entries loaded from disk at open, across all shards.
+    pub fn loaded(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().loaded()).sum()
+    }
+
+    /// Failed-to-lower entries across all shards.
+    pub fn infeasible_count(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().infeasible_count()).sum()
+    }
+
+    /// Load warnings from every shard, prefixed with the shard file name.
+    pub fn warnings(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for (i, shard) in self.shards.iter().enumerate() {
+            for w in shard.lock().unwrap().warnings() {
+                out.push(format!("{}: {w}", Self::shard_name(i)));
+            }
+        }
+        out
+    }
+
+    /// Per-fingerprint entry counts aggregated across shards, descending.
+    pub fn fingerprint_counts(&self) -> Vec<(u64, usize)> {
+        let mut counts: HashMap<u64, usize> = HashMap::new();
+        for shard in &self.shards {
+            for (fp, n) in shard.lock().unwrap().fingerprint_counts() {
+                *counts.entry(fp).or_insert(0) += n;
+            }
+        }
+        let mut out: Vec<(u64, usize)> = counts.into_iter().collect();
+        out.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+        out
+    }
+
+    /// [`DiskCache::deployable_shapes_for`] merged across shards, sorted
+    /// and deduplicated.
+    pub fn deployable_shapes_for(&self, arch_fp: u64) -> Vec<String> {
+        let mut shapes: Vec<String> = Vec::new();
+        for shard in &self.shards {
+            shapes.extend(shard.lock().unwrap().deployable_shapes_for(arch_fp));
+        }
+        shapes.sort();
+        shapes.dedup();
+        shapes
+    }
+
+    /// Delete every shard file (and stray temp files) under `dir`, then
+    /// the directory itself if that leaves it empty — no orphan shards
+    /// survive a clear. A missing directory is not an error. Returns
+    /// `(shard_files_removed, temp_files_removed)`.
+    pub fn clear(dir: impl AsRef<Path>) -> Result<(usize, usize)> {
+        let dir = dir.as_ref();
+        let entries = match std::fs::read_dir(dir) {
+            Ok(e) => e,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok((0, 0)),
+            Err(e) => return Err(e).with_context(|| format!("reading {}", dir.display())),
+        };
+        let (mut files, mut temps) = (0usize, 0usize);
+        for ent in entries.flatten() {
+            let name = ent.file_name().to_string_lossy().into_owned();
+            if !name.starts_with("shard-") {
+                continue;
+            }
+            if name.ends_with(".jsonl") {
+                std::fs::remove_file(ent.path())
+                    .with_context(|| format!("removing {}", ent.path().display()))?;
+                files += 1;
+            } else if name.contains(".jsonl.tmp.") && std::fs::remove_file(ent.path()).is_ok() {
+                temps += 1;
+            }
+        }
+        // Remove the now-empty directory; a directory holding foreign
+        // files is deliberately left in place.
+        let _ = std::fs::remove_dir(dir);
+        Ok((files, temps))
     }
 }
 
@@ -644,5 +854,116 @@ mod tests {
         assert!(!path.exists() && !stray.exists());
         // Clearing a missing cache is not an error.
         assert_eq!(DiskCache::clear(&path).unwrap(), (false, 0));
+    }
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let seq = TEMP_SEQ.fetch_add(1, Ordering::Relaxed);
+        std::env::temp_dir().join(format!(
+            "dit-cache-shard-unit-{tag}-{}-{seq}",
+            std::process::id()
+        ))
+    }
+
+    #[test]
+    fn sharded_roundtrip_spreads_and_reloads() {
+        let dir = temp_dir("roundtrip");
+        let c = ShardedDiskCache::open_with(&dir, 4);
+        assert_eq!(c.shard_count(), 4);
+        assert!(c.warnings().is_empty(), "{:?}", c.warnings());
+        for i in 0..64u64 {
+            let stats = (i % 3 != 0).then(|| stats(i as f64 + 1.0, i));
+            c.insert_deferred(key(7, &format!("{}x64x64", i + 1), "summa"), stats);
+        }
+        c.flush().unwrap();
+        // With 64 distinct keys over 4 shards, every shard should own
+        // some (the partition is a fixed fingerprint range split; an
+        // empty shard here would mean the routing collapsed).
+        let populated = (0..4)
+            .filter(|i| dir.join(ShardedDiskCache::shard_name(*i)).exists())
+            .count();
+        assert!(populated >= 2, "only {populated}/4 shard files written");
+        let back = ShardedDiskCache::open_with(&dir, 4);
+        assert!(back.warnings().is_empty(), "{:?}", back.warnings());
+        assert_eq!(back.len(), 64);
+        assert_eq!(back.loaded(), 64);
+        assert!(back.infeasible_count() > 0);
+        for i in 0..64u64 {
+            let got = back.get(&key(7, &format!("{}x64x64", i + 1), "summa"));
+            let got = got.expect("key routed back to its shard");
+            if i % 3 == 0 {
+                assert!(got.is_none(), "negative entry survives for {i}");
+            } else {
+                assert_eq!(got.unwrap().makespan_ns.to_bits(), (i as f64 + 1.0).to_bits());
+            }
+        }
+        assert_eq!(back.fingerprint_counts(), vec![(7, 64)]);
+        // Only shapes with at least one feasible schedule are deployable.
+        let shapes = back.deployable_shapes_for(7);
+        assert!(!shapes.contains(&"1x64x64".to_string()), "i=0 is infeasible-only");
+        assert!(shapes.contains(&"2x64x64".to_string()));
+        let mut sorted = shapes.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(shapes, sorted, "deployable shapes are sorted and distinct");
+        ShardedDiskCache::clear(&dir).unwrap();
+    }
+
+    #[test]
+    fn sharded_concurrent_readers_and_writer() {
+        let dir = temp_dir("concurrent");
+        let c = ShardedDiskCache::open_with(&dir, 4);
+        for i in 0..32u64 {
+            c.insert_deferred(key(1, &format!("{}x8x8", i + 1), "s"), Some(stats(1.0, i)));
+        }
+        c.flush().unwrap();
+        let c = std::sync::Arc::new(c);
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let c = c.clone();
+                s.spawn(move || {
+                    for round in 0..50u64 {
+                        let i = (t * 13 + round) % 32;
+                        assert!(
+                            c.get(&key(1, &format!("{}x8x8", i + 1), "s")).is_some(),
+                            "reader lost key {i}"
+                        );
+                    }
+                });
+            }
+            let w = c.clone();
+            s.spawn(move || {
+                for i in 32..64u64 {
+                    w.insert_deferred(key(1, &format!("{}x8x8", i + 1), "s"), None);
+                    if i % 8 == 0 {
+                        w.flush().unwrap();
+                    }
+                }
+                w.flush().unwrap();
+            });
+        });
+        assert_eq!(c.len(), 64);
+        c.compact().unwrap();
+        assert_eq!(ShardedDiskCache::open_with(&dir, 4).len(), 64);
+        ShardedDiskCache::clear(&dir).unwrap();
+    }
+
+    #[test]
+    fn sharded_clear_leaves_no_orphans() {
+        let dir = temp_dir("clear");
+        let c = ShardedDiskCache::open_with(&dir, 4);
+        for i in 0..16u64 {
+            c.insert_deferred(key(1, &format!("{}x8x8", i + 1), "s"), None);
+        }
+        c.flush().unwrap();
+        drop(c);
+        // A stray temp from a killed shard writer must go too.
+        let stray = dir.join("shard-01.jsonl.tmp.99999.0");
+        std::fs::write(&stray, "half-written").unwrap();
+        let (files, temps) = ShardedDiskCache::clear(&dir).unwrap();
+        assert!(files > 0, "no shard files removed");
+        assert_eq!(temps, 1);
+        assert!(!dir.exists(), "empty directory is removed with its shards");
+        // Clearing a missing directory is not an error.
+        assert_eq!(ShardedDiskCache::clear(&dir).unwrap(), (0, 0));
     }
 }

@@ -26,7 +26,7 @@ use std::sync::Mutex;
 
 use anyhow::Result;
 
-use super::cache::{DiskCache, DiskKey};
+use super::cache::{DiskCache, DiskKey, ShardedDiskCache};
 use super::{simulate_schedule_in, AutotuneResult, Scored};
 use crate::arch::workload::Workload;
 use crate::arch::{ArchConfig, GemmShape};
@@ -185,18 +185,88 @@ impl WorkloadReport {
     }
 }
 
+/// The engine's persistent second level: one single-writer cache file
+/// ([`Engine::with_cache`]), or a sharded directory whose per-shard
+/// locks let concurrent tuning calls and a background retune writer
+/// proceed without serializing on one file lock
+/// ([`Engine::with_sharded_cache`], used by the serving layer in
+/// [`crate::coordinator::shapedb`]). Both variants speak the same
+/// `dit-sim-cache` v1 entry format and identical keys.
+enum DiskBackend {
+    Single(Mutex<DiskCache>),
+    Sharded(ShardedDiskCache),
+}
+
+impl DiskBackend {
+    fn get(&self, key: &DiskKey) -> Option<Option<RunStats>> {
+        match self {
+            DiskBackend::Single(d) => d.lock().unwrap().get(key).cloned(),
+            DiskBackend::Sharded(s) => s.get(key),
+        }
+    }
+
+    fn insert_deferred(&self, key: DiskKey, stats: Option<RunStats>) {
+        match self {
+            DiskBackend::Single(d) => d.lock().unwrap().insert_deferred(key, stats),
+            DiskBackend::Sharded(s) => s.insert_deferred(key, stats),
+        }
+    }
+
+    fn flush(&self) -> Result<()> {
+        match self {
+            DiskBackend::Single(d) => d.lock().unwrap().flush(),
+            DiskBackend::Sharded(s) => s.flush(),
+        }
+    }
+
+    /// Poison-tolerant (called from the engine's drop): a shard whose
+    /// lock was poisoned by a panicking thread is skipped rather than
+    /// double-panicking — worst case that shard just stays un-compacted.
+    fn compact(&self) -> Result<()> {
+        match self {
+            DiskBackend::Single(d) => match d.lock() {
+                Ok(mut d) => d.compact(),
+                Err(_) => Ok(()),
+            },
+            DiskBackend::Sharded(s) => s.compact(),
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            DiskBackend::Single(d) => d.lock().unwrap().len(),
+            DiskBackend::Sharded(s) => s.len(),
+        }
+    }
+
+    fn loaded(&self) -> usize {
+        match self {
+            DiskBackend::Single(d) => d.lock().unwrap().loaded(),
+            DiskBackend::Sharded(s) => s.loaded(),
+        }
+    }
+
+    fn deployable_shapes_for(&self, arch_fp: u64) -> Vec<String> {
+        match self {
+            DiskBackend::Single(d) => d.lock().unwrap().deployable_shapes_for(arch_fp),
+            DiskBackend::Sharded(s) => s.deployable_shapes_for(arch_fp),
+        }
+    }
+}
+
 /// The tuning engine: one architecture, a worker pool, a memo-cache —
 /// and, optionally, a persistent on-disk cache behind it
-/// ([`Engine::with_cache`]).
+/// ([`Engine::with_cache`] / [`Engine::with_sharded_cache`]).
 pub struct Engine {
     arch: ArchConfig,
     arch_fp: u64,
     workers: usize,
     policy: TunePolicy,
     cache: Mutex<HashMap<CacheKey, Option<RunStats>>>,
-    /// Persistent second-level cache. Lock order: `cache` before `disk`
-    /// (both phase 1 and phase 3 follow it), never the reverse.
-    disk: Option<Mutex<DiskCache>>,
+    /// Persistent second-level cache. Lock order: `cache` before any
+    /// disk/shard lock (both phase 1 and phase 3 follow it), never the
+    /// reverse.
+    disk: Option<DiskBackend>,
     sim_calls: AtomicUsize,
     cache_hits: AtomicUsize,
     disk_hits: AtomicUsize,
@@ -253,7 +323,29 @@ impl Engine {
         for w in disk.warnings() {
             eprintln!("warning: simulation cache: {w}");
         }
-        self.disk = Some(Mutex::new(disk));
+        self.disk = Some(DiskBackend::Single(Mutex::new(disk)));
+        self
+    }
+
+    /// Attach a *sharded* persistent cache: a directory of per-shard
+    /// JSONL files ([`crate::coordinator::cache::ShardedDiskCache`]),
+    /// each behind its own lock, so concurrent tuning calls and the
+    /// serving layer's background retune writer don't serialize on one
+    /// file. Same key grammar, entry format, checkpoint-per-call, and
+    /// compact-on-drop semantics as [`Engine::with_cache`]. `shards`
+    /// must match the directory's original shard count
+    /// ([`crate::coordinator::cache::DEFAULT_SHARDS`] everywhere
+    /// in-repo); minimum 1.
+    pub fn with_sharded_cache(
+        mut self,
+        dir: impl Into<std::path::PathBuf>,
+        shards: usize,
+    ) -> Engine {
+        let disk = ShardedDiskCache::open_with(dir, shards);
+        for w in disk.warnings() {
+            eprintln!("warning: simulation cache: {w}");
+        }
+        self.disk = Some(DiskBackend::Sharded(disk));
         self
     }
 
@@ -306,12 +398,12 @@ impl Engine {
 
     /// Entries currently held by the attached persistent cache.
     pub fn disk_len(&self) -> usize {
-        self.disk.as_ref().map(|d| d.lock().unwrap().len()).unwrap_or(0)
+        self.disk.as_ref().map(DiskBackend::len).unwrap_or(0)
     }
 
     /// Entries the attached persistent cache loaded from disk at open.
     pub fn disk_loaded(&self) -> usize {
-        self.disk.as_ref().map(|d| d.lock().unwrap().loaded()).unwrap_or(0)
+        self.disk.as_ref().map(DiskBackend::loaded).unwrap_or(0)
     }
 
     /// Persist the attached cache now (no-op without one, or with nothing
@@ -319,9 +411,30 @@ impl Engine {
     /// call and on drop; exposed for callers that want the error.
     pub fn flush_cache(&self) -> Result<()> {
         if let Some(disk) = &self.disk {
-            disk.lock().unwrap().flush()?;
+            disk.flush()?;
         }
         Ok(())
+    }
+
+    /// Distinct shapes the attached persistent cache holds for *this*
+    /// engine's architecture with at least one deployable schedule, in
+    /// deterministic `(m, n, k)` order. Empty without a cache. The
+    /// schedule server ([`crate::coordinator::shapedb`]) rebuilds its
+    /// shape database from exactly this list at open — every shape here
+    /// re-tunes without simulating (its selected candidates are all on
+    /// disk, and candidate selection is cache-independent).
+    pub fn cached_shapes(&self) -> Vec<GemmShape> {
+        let Some(disk) = &self.disk else {
+            return Vec::new();
+        };
+        let mut shapes: Vec<GemmShape> = disk
+            .deployable_shapes_for(self.arch_fp)
+            .iter()
+            .filter_map(|s| GemmShape::parse(s).ok())
+            .collect();
+        shapes.sort_by_key(|s| (s.m, s.n, s.k));
+        shapes.dedup();
+        shapes
     }
 
     /// Parallel, memoized autotune of a single shape. Bit-identical to
@@ -448,7 +561,6 @@ impl Engine {
         let mut disk_hits_this_call = 0usize;
         {
             let mut cache = self.cache.lock().unwrap();
-            let disk = self.disk.as_ref().map(|d| d.lock().unwrap());
             let mut pending: HashSet<CacheKey> = HashSet::new();
             for (item, sel) in w.items.iter().zip(&selections) {
                 let shape_text = item.shape.to_string();
@@ -459,14 +571,17 @@ impl Engine {
                         hits_this_call += 1;
                         continue;
                     }
-                    if let Some(disk) = disk.as_deref() {
+                    if let Some(disk) = &self.disk {
                         let dkey = DiskKey {
                             arch_fp,
                             shape: shape_text.clone(),
                             sched: sched.cache_key(),
                         };
+                        // Per-key lookup: the backend takes its own file
+                        // or shard lock inside (lock order: memo-cache
+                        // before disk, as documented on the field).
                         if let Some(stats) = disk.get(&dkey) {
-                            cache.insert(key, stats.clone());
+                            cache.insert(key, stats);
                             disk_hits_this_call += 1;
                             continue;
                         }
@@ -515,10 +630,9 @@ impl Engine {
         // a deliberate negative-cache) into the persistent store.
         {
             let mut cache = self.cache.lock().unwrap();
-            let mut disk = self.disk.as_ref().map(|d| d.lock().unwrap());
             for (job, cell) in jobs.iter().zip(&results) {
                 let stats = cell.lock().unwrap().take().expect("worker completed every job");
-                if let Some(disk) = disk.as_deref_mut() {
+                if let Some(disk) = &self.disk {
                     let dkey = DiskKey {
                         arch_fp,
                         shape: job.shape.to_string(),
@@ -539,7 +653,7 @@ impl Engine {
         // behind the disk lock only, never behind planning/ranking.
         // Failure only costs durability, never correctness.
         if let Some(disk) = &self.disk {
-            if let Err(e) = disk.lock().unwrap().flush() {
+            if let Err(e) = disk.flush() {
                 eprintln!("warning: simulation cache: {e:#}");
             }
         }
@@ -598,10 +712,8 @@ impl Drop for Engine {
     /// demoted to a warning (a drop cannot propagate them).
     fn drop(&mut self) {
         if let Some(disk) = &self.disk {
-            if let Ok(mut disk) = disk.lock() {
-                if let Err(e) = disk.compact() {
-                    eprintln!("warning: simulation cache flush on drop failed: {e:#}");
-                }
+            if let Err(e) = disk.compact() {
+                eprintln!("warning: simulation cache flush on drop failed: {e:#}");
             }
         }
     }
@@ -777,6 +889,38 @@ mod tests {
             assert_eq!(x.stats.spm_bytes, y.stats.spm_bytes);
         }
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn with_sharded_cache_resumes_and_reports_shapes() {
+        let dir = std::env::temp_dir()
+            .join(format!("dit-engine-shard-cache-{}", std::process::id()));
+        let _ = crate::coordinator::cache::ShardedDiskCache::clear(&dir);
+        let arch = ArchConfig::tiny(2, 2);
+        let shapes = [GemmShape::new(64, 64, 64), GemmShape::new(32, 64, 64)];
+        {
+            let engine = Engine::new(&arch).with_sharded_cache(&dir, 4);
+            for s in shapes {
+                assert!(engine.tune(s).is_ok());
+            }
+            assert!(engine.sim_calls() > 0, "cold run simulates");
+        } // drop compacts every shard
+        let engine = Engine::new(&arch).with_sharded_cache(&dir, 4);
+        assert!(engine.disk_loaded() > 0, "shards reload");
+        // The cached-shape inventory is exactly the tuned set, sorted.
+        assert_eq!(engine.cached_shapes(), vec![shapes[1], shapes[0]]);
+        // A different architecture sees none of them.
+        let other = Engine::new(&ArchConfig::tiny(4, 4)).with_sharded_cache(&dir, 4);
+        assert!(other.cached_shapes().is_empty());
+        // Warm re-tune is served purely from the sharded store.
+        for s in shapes {
+            assert!(engine.tune(s).is_ok());
+        }
+        assert_eq!(engine.sim_calls(), 0, "warm run must not simulate");
+        assert!(engine.disk_hits() > 0);
+        drop(engine);
+        drop(other);
+        crate::coordinator::cache::ShardedDiskCache::clear(&dir).unwrap();
     }
 
     #[test]

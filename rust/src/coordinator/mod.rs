@@ -16,10 +16,16 @@
 //! * [`cache`] — the persistent half of that memo-cache: a versioned
 //!   on-disk `(arch fingerprint, shape, schedule) → RunStats` store, so
 //!   interrupted or refined tuning sweeps resume instead of
-//!   re-simulating ([`engine::Engine::with_cache`]).
+//!   re-simulating ([`engine::Engine::with_cache`]), shardable for
+//!   concurrent serving ([`engine::Engine::with_sharded_cache`]);
+//! * [`shapedb`] — the serving layer on top of the engine: shape
+//!   canonicalization + bucketing, analytic-ε-bounded nearest-neighbor
+//!   schedule reuse, an asynchronous retune queue, and deterministic
+//!   replayable request traces ([`shapedb::ScheduleServer`]).
 
 pub mod cache;
 pub mod engine;
+pub mod shapedb;
 
 use anyhow::Result;
 

@@ -1,0 +1,744 @@
+//! The serving-scale schedule service: shape canonicalization +
+//! bucketing, bounded nearest-neighbor schedule reuse, and an
+//! asynchronous retune queue on top of the tuning engine.
+//!
+//! A production serving tier sees millions of *distinct* `(M, N, K)`
+//! requests — ragged batches and variable sequence lengths perturb M
+//! constantly while N and K (weight matrices) repeat exactly. Tuning
+//! every distinct shape from scratch is hopeless at traffic rates;
+//! serving a *neighboring* shape's schedule is nearly free and, per the
+//! GOMA direction already powering the tiered tuner, its cost can be
+//! *bounded analytically* before anything is served. The
+//! [`ScheduleServer`] turns the tuner into a low-latency lookup service
+//! with three outcomes per request:
+//!
+//! * **exact hit** — the canonical shape is in the database with a
+//!   schedule tuned for it. Zero engine work, zero simulations.
+//! * **neighbor hit** — another shape in the same bucket donates its
+//!   schedule (K-depth re-derived via [`crate::schedule::retune_tk`]).
+//!   Served **iff** the analytic penalty of the borrowed schedule on
+//!   the true shape is at most ε relative to the analytic best for
+//!   that shape — `estimate(borrowed)/min_candidate_estimate − 1 ≤ ε`
+//!   — and an exact retune is enqueued so the shape upgrades to an
+//!   exact entry when [`ScheduleServer::drain_retunes`] runs. No
+//!   simulations on the serving path; only closed-form estimates.
+//! * **miss** — no qualifying donor: the engine tunes the shape
+//!   synchronously (simulating) and the result becomes an exact entry.
+//!
+//! ## Canonicalization and bucketing
+//!
+//! `C = A·B` implies `Cᵀ = Bᵀ·Aᵀ`, so `(M, N, K)` and `(N, M, K)` are
+//! the same tuning problem with the roles of the output dimensions
+//! swapped: requests are canonicalized to `M ≤ N` ([`canonicalize`]),
+//! and the served schedule targets the canonical orientation (the
+//! `swapped` flag in [`ServeResult`] tells the caller to transpose).
+//! Buckets group canonical shapes that may plausibly donate to each
+//! other: exact `N` and `K` (weights repeat exactly) with M rounded up
+//! to the next power of two ([`m_bucket`]) — 63 and 64 share a bucket;
+//! 65 does not, it buckets with 66..128. Bucketing only *scopes the
+//! donor search*; the ε bound is what actually admits a schedule.
+//!
+//! ## Persistence and determinism
+//!
+//! The server's engine writes through a sharded persistent cache
+//! ([`crate::coordinator::cache::ShardedDiskCache`]) so concurrent
+//! serve calls and the retune writer don't serialize on one file lock.
+//! On open, the database is rebuilt from the cache's deployable shapes
+//! ([`crate::coordinator::engine::Engine::cached_shapes`]): each
+//! re-tunes without simulating (candidate selection is
+//! cache-independent and every selected candidate is on disk), so a
+//! warm server answers the whole working set from exact entries and
+//! re-qualified neighbors — zero simulations. Every serving decision is
+//! deterministic: the database iterates in `BTreeMap` order, donor ties
+//! break toward the smallest shape key, the engine is bit-identical,
+//! and the replayable trace format ([`zipf_trace`], [`parse_trace`])
+//! contains no run-time randomness.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::arch::{ArchConfig, GemmShape};
+use crate::coordinator::engine::{Engine, TunePolicy};
+use crate::perfmodel::analytic::estimate_ns;
+use crate::schedule::{candidates, retune_tk, Schedule};
+use crate::util::rng::Rng;
+
+/// Default neighbor-reuse quality bound: a borrowed schedule may cost at
+/// most this much more than the analytic best for the true shape.
+pub const DEFAULT_EPSILON: f64 = 0.1;
+
+/// Canonical transpose form: `(M, N, K) ≡ (N, M, K)` via `Cᵀ = Bᵀ·Aᵀ`,
+/// canonicalized to `M ≤ N`. Returns the canonical shape and whether the
+/// request was swapped (i.e. the served schedule targets the transposed
+/// problem and the caller consumes `Cᵀ`).
+pub fn canonicalize(shape: GemmShape) -> (GemmShape, bool) {
+    if shape.m > shape.n {
+        (GemmShape::new(shape.n, shape.m, shape.k), true)
+    } else {
+        (shape, false)
+    }
+}
+
+/// The M-bucketing rule: round up to the next power of two, so a bucket
+/// holds `(2^(b-1), 2^b]` and boundary shapes bucket with the shapes
+/// most likely to donate well (63 → 64, 64 → 64, 65 → 128).
+pub fn m_bucket(m: usize) -> usize {
+    m.next_power_of_two()
+}
+
+/// A bucket groups canonical shapes with exact `(N, K)` and M in the
+/// same power-of-two band — the donor-search scope for neighbor reuse.
+pub fn bucket_key(canon: GemmShape) -> (usize, usize, usize) {
+    (m_bucket(canon.m), canon.n, canon.k)
+}
+
+fn shape_key(s: GemmShape) -> (usize, usize, usize) {
+    (s.m, s.n, s.k)
+}
+
+/// The analytic best over the full candidate enumeration for `shape` —
+/// the denominator of the neighbor-reuse penalty. `None` when no
+/// candidate is deployable (the engine would fail to tune it too).
+pub fn analytic_best_ns(arch: &ArchConfig, shape: GemmShape) -> Option<f64> {
+    candidates(arch, shape)
+        .iter()
+        .filter_map(|s| estimate_ns(arch, shape, s))
+        .fold(None, |best, v| Some(best.map_or(v, |b: f64| b.min(v))))
+}
+
+/// One database entry: a schedule the server will hand out for a
+/// canonical shape.
+#[derive(Debug, Clone)]
+pub struct DbEntry {
+    /// Canonical shape this entry answers.
+    pub shape: GemmShape,
+    /// The schedule served (exact-tuned, or borrowed + tk-retuned).
+    pub schedule: Schedule,
+    /// Exact (simulated best for this very shape) vs borrowed.
+    pub exact: bool,
+    /// Analytic penalty vs the shape's analytic best (0 for exact).
+    pub penalty: f64,
+    /// Donor shape a borrowed entry came from.
+    pub donor: Option<GemmShape>,
+}
+
+/// How a request was answered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeOutcome {
+    /// Served a schedule tuned for exactly this canonical shape.
+    Exact,
+    /// Served a neighbor's schedule under the ε bound (retune enqueued
+    /// the first time this shape was answered this way).
+    Neighbor,
+    /// No qualifying donor: tuned synchronously.
+    Miss,
+}
+
+/// One request's answer.
+#[derive(Debug, Clone)]
+pub struct ServeResult {
+    /// The shape as requested.
+    pub shape: GemmShape,
+    /// Its canonical transpose form (`M ≤ N`).
+    pub canonical: GemmShape,
+    /// The schedule targets the canonical orientation; `true` means the
+    /// request arrived transposed relative to it.
+    pub swapped: bool,
+    pub schedule: Schedule,
+    pub outcome: ServeOutcome,
+    /// Analytic penalty of the served schedule vs the analytic best for
+    /// the canonical shape (0 for exact entries).
+    pub penalty: f64,
+    /// Donor shape, when the schedule was borrowed.
+    pub donor: Option<GemmShape>,
+}
+
+/// Server configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    /// Neighbor-reuse quality bound ([`DEFAULT_EPSILON`]); must be ≥ 0
+    /// (0 admits only penalty-free borrows).
+    pub epsilon: f64,
+    /// Tuning policy for misses, retunes, and the warm rebuild. Cold
+    /// and warm opens of one cache path must use the same policy.
+    pub policy: TunePolicy,
+    /// Engine worker-pool override (`None` = engine default).
+    pub workers: Option<usize>,
+    /// Shard count for the persistent cache directory; must match the
+    /// directory's original count.
+    pub shards: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            epsilon: DEFAULT_EPSILON,
+            policy: TunePolicy::tiered_default(),
+            workers: None,
+            shards: crate::coordinator::cache::DEFAULT_SHARDS,
+        }
+    }
+}
+
+/// Aggregate serving statistics (see [`ScheduleServer::stats`]).
+#[derive(Debug, Clone)]
+pub struct ServeStats {
+    pub requests: usize,
+    pub exact_hits: usize,
+    pub neighbor_hits: usize,
+    pub misses: usize,
+    /// Retunes completed by [`ScheduleServer::drain_retunes`].
+    pub retunes_done: usize,
+    /// Retunes still queued.
+    pub queue_depth: usize,
+    /// Exact entries currently in the database.
+    pub db_exact: usize,
+    /// Borrowed entries currently in the database.
+    pub db_borrowed: usize,
+    /// Time-to-schedule percentiles over every request served, µs.
+    pub p50_us: f64,
+    pub p99_us: f64,
+    /// Engine-lifetime simulation count (rebuild + misses + retunes).
+    pub sim_calls: usize,
+}
+
+impl ServeStats {
+    /// Requests answered without a synchronous tune.
+    pub fn hit_rate(&self) -> f64 {
+        if self.requests == 0 {
+            return 0.0;
+        }
+        (self.exact_hits + self.neighbor_hits) as f64 / self.requests as f64
+    }
+}
+
+/// The serving layer: a shape database over a tuning [`Engine`].
+///
+/// All methods take `&self` — the server is shared across serving
+/// threads behind an `Arc`, with the database and retune queue behind
+/// their own locks (never held across engine or analytic calls).
+pub struct ScheduleServer {
+    arch: ArchConfig,
+    epsilon: f64,
+    engine: Engine,
+    /// bucket key → (canonical shape key → entry), both BTreeMaps so
+    /// donor iteration order is deterministic.
+    db: Mutex<BTreeMap<(usize, usize, usize), BTreeMap<(usize, usize, usize), DbEntry>>>,
+    /// Canonical shapes awaiting an exact retune, FIFO.
+    retunes: Mutex<VecDeque<GemmShape>>,
+    requests: AtomicUsize,
+    exact_hits: AtomicUsize,
+    neighbor_hits: AtomicUsize,
+    misses: AtomicUsize,
+    retunes_done: AtomicUsize,
+    /// Time-to-schedule per request, µs (reporting only — never feeds a
+    /// serving decision, so wall-clock noise cannot break determinism).
+    latencies_us: Mutex<Vec<f64>>,
+}
+
+impl ScheduleServer {
+    /// Open a server backed by a sharded persistent cache at `dir`,
+    /// rebuilding the shape database from every deployable shape the
+    /// cache already knows for this architecture (zero simulations when
+    /// the cache was written by a server with the same policy).
+    pub fn open(
+        arch: &ArchConfig,
+        dir: impl Into<PathBuf>,
+        cfg: ServeConfig,
+    ) -> Result<ScheduleServer> {
+        anyhow::ensure!(cfg.epsilon >= 0.0, "epsilon must be >= 0, got {}", cfg.epsilon);
+        let mut engine =
+            Engine::new(arch).with_policy(cfg.policy).with_sharded_cache(dir, cfg.shards.max(1));
+        if let Some(w) = cfg.workers {
+            engine = engine.with_workers(w);
+        }
+        let server = Self::from_engine(arch, engine, cfg.epsilon);
+        server.rebuild()?;
+        Ok(server)
+    }
+
+    /// A purely in-memory server (no persistent cache): everything else
+    /// behaves identically. Used by tests and cache-less CLI replays.
+    pub fn in_memory(arch: &ArchConfig, cfg: ServeConfig) -> Result<ScheduleServer> {
+        anyhow::ensure!(cfg.epsilon >= 0.0, "epsilon must be >= 0, got {}", cfg.epsilon);
+        let mut engine = Engine::new(arch).with_policy(cfg.policy);
+        if let Some(w) = cfg.workers {
+            engine = engine.with_workers(w);
+        }
+        Ok(Self::from_engine(arch, engine, cfg.epsilon))
+    }
+
+    fn from_engine(arch: &ArchConfig, engine: Engine, epsilon: f64) -> ScheduleServer {
+        ScheduleServer {
+            arch: arch.clone(),
+            epsilon,
+            engine,
+            db: Mutex::new(BTreeMap::new()),
+            retunes: Mutex::new(VecDeque::new()),
+            requests: AtomicUsize::new(0),
+            exact_hits: AtomicUsize::new(0),
+            neighbor_hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+            retunes_done: AtomicUsize::new(0),
+            latencies_us: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Rebuild exact entries from the persistent cache's shape
+    /// inventory. Each shape re-tunes through the engine; with a cache
+    /// written under the same policy this is pure disk replay
+    /// (bit-identical best, zero simulations).
+    fn rebuild(&self) -> Result<usize> {
+        let shapes = self.engine.cached_shapes();
+        for &shape in &shapes {
+            // Defensive: a cache shared with non-serving tuning runs may
+            // hold non-canonical orientations; the database only ever
+            // keys canonical shapes.
+            let (canon, _) = canonicalize(shape);
+            let result = self.engine.tune(canon)?;
+            self.insert_exact(canon, result.best().schedule.clone());
+        }
+        Ok(shapes.len())
+    }
+
+    fn insert_exact(&self, canon: GemmShape, schedule: Schedule) {
+        let entry =
+            DbEntry { shape: canon, schedule, exact: true, penalty: 0.0, donor: None };
+        self.db
+            .lock()
+            .unwrap()
+            .entry(bucket_key(canon))
+            .or_default()
+            .insert(shape_key(canon), entry);
+    }
+
+    /// The neighbor-reuse bound ε this server enforces.
+    pub fn epsilon(&self) -> f64 {
+        self.epsilon
+    }
+
+    /// Engine-lifetime simulation count (rebuild + misses + retunes).
+    pub fn sim_calls(&self) -> usize {
+        self.engine.sim_calls()
+    }
+
+    /// Exact retunes currently queued.
+    pub fn queue_depth(&self) -> usize {
+        self.retunes.lock().unwrap().len()
+    }
+
+    /// Persistent-cache entry count (0 for in-memory servers).
+    pub fn disk_len(&self) -> usize {
+        self.engine.disk_len()
+    }
+
+    /// Persistent-cache entries preloaded when this server opened.
+    pub fn disk_loaded(&self) -> usize {
+        self.engine.disk_loaded()
+    }
+
+    /// Persist the engine's cache now (no-op for in-memory servers).
+    pub fn flush(&self) -> Result<()> {
+        self.engine.flush_cache()
+    }
+
+    fn record_latency(&self, t0: std::time::Instant) {
+        self.latencies_us.lock().unwrap().push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+
+    /// Answer one schedule request. See the module docs for the
+    /// exact-hit / neighbor-hit / miss contract.
+    pub fn serve(&self, shape: GemmShape) -> Result<ServeResult> {
+        let t0 = std::time::Instant::now();
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        let (canon, swapped) = canonicalize(shape);
+        let bkey = bucket_key(canon);
+        let skey = shape_key(canon);
+
+        // Fast path: database hit — exact, or a borrow answered before.
+        let hit = self
+            .db
+            .lock()
+            .unwrap()
+            .get(&bkey)
+            .and_then(|bucket| bucket.get(&skey))
+            .cloned();
+        if let Some(entry) = hit {
+            let outcome = if entry.exact {
+                self.exact_hits.fetch_add(1, Ordering::Relaxed);
+                ServeOutcome::Exact
+            } else {
+                self.neighbor_hits.fetch_add(1, Ordering::Relaxed);
+                ServeOutcome::Neighbor
+            };
+            self.record_latency(t0);
+            return Ok(ServeResult {
+                shape,
+                canonical: canon,
+                swapped,
+                schedule: entry.schedule,
+                outcome,
+                penalty: entry.penalty,
+                donor: entry.donor,
+            });
+        }
+
+        // Donor search: exact entries in this bucket, in BTreeMap (shape
+        // key) order; the snapshot is cloned so no lock is held across
+        // the analytic calls below. Minimum penalty wins, ties toward
+        // the earlier donor — fully deterministic.
+        let donors: Vec<DbEntry> = self
+            .db
+            .lock()
+            .unwrap()
+            .get(&bkey)
+            .map(|bucket| bucket.values().filter(|e| e.exact).cloned().collect())
+            .unwrap_or_default();
+        if !donors.is_empty() {
+            if let Some(best_ns) = analytic_best_ns(&self.arch, canon) {
+                let mut chosen: Option<(f64, Schedule, GemmShape)> = None;
+                for d in &donors {
+                    let cand = retune_tk(&self.arch, canon, &d.schedule);
+                    let Some(est) = estimate_ns(&self.arch, canon, &cand) else {
+                        continue; // donor's schedule doesn't deploy here
+                    };
+                    let penalty = est / best_ns - 1.0;
+                    if chosen.as_ref().map_or(true, |(p, _, _)| penalty < *p) {
+                        chosen = Some((penalty, cand, d.shape));
+                    }
+                }
+                if let Some((penalty, schedule, donor)) = chosen {
+                    if penalty <= self.epsilon {
+                        let entry = DbEntry {
+                            shape: canon,
+                            schedule: schedule.clone(),
+                            exact: false,
+                            penalty,
+                            donor: Some(donor),
+                        };
+                        // or_insert: a concurrent exact tune (or an
+                        // identical concurrent borrow) that landed first
+                        // wins; this request still serves its own
+                        // qualifying answer below.
+                        self.db
+                            .lock()
+                            .unwrap()
+                            .entry(bkey)
+                            .or_default()
+                            .entry(skey)
+                            .or_insert(entry);
+                        self.retunes.lock().unwrap().push_back(canon);
+                        self.neighbor_hits.fetch_add(1, Ordering::Relaxed);
+                        self.record_latency(t0);
+                        return Ok(ServeResult {
+                            shape,
+                            canonical: canon,
+                            swapped,
+                            schedule,
+                            outcome: ServeOutcome::Neighbor,
+                            penalty,
+                            donor: Some(donor),
+                        });
+                    }
+                }
+            }
+        }
+
+        // Miss: tune synchronously (the only serving path that
+        // simulates) and remember the exact result.
+        let result = self.engine.tune(canon).with_context(|| {
+            format!("tuning {canon} (requested as {shape}) on miss")
+        })?;
+        let schedule = result.best().schedule.clone();
+        self.insert_exact(canon, schedule.clone());
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.record_latency(t0);
+        Ok(ServeResult {
+            shape,
+            canonical: canon,
+            swapped,
+            schedule,
+            outcome: ServeOutcome::Miss,
+            penalty: 0.0,
+            donor: None,
+        })
+    }
+
+    /// Run up to `max` queued exact retunes (FIFO), upgrading borrowed
+    /// entries to exact. Shapes already upgraded (e.g. a duplicate queue
+    /// entry from a concurrent borrow) are skipped without counting
+    /// against `max`... and without tuning. Returns retunes performed.
+    pub fn drain_retunes(&self, max: usize) -> Result<usize> {
+        let mut done = 0usize;
+        while done < max {
+            let Some(canon) = self.retunes.lock().unwrap().pop_front() else {
+                break;
+            };
+            let already_exact = self
+                .db
+                .lock()
+                .unwrap()
+                .get(&bucket_key(canon))
+                .and_then(|b| b.get(&shape_key(canon)))
+                .map(|e| e.exact)
+                .unwrap_or(false);
+            if already_exact {
+                continue;
+            }
+            let result = self
+                .engine
+                .tune(canon)
+                .with_context(|| format!("retuning {canon} from the queue"))?;
+            self.insert_exact(canon, result.best().schedule.clone());
+            self.retunes_done.fetch_add(1, Ordering::Relaxed);
+            done += 1;
+        }
+        Ok(done)
+    }
+
+    /// Aggregate statistics snapshot.
+    pub fn stats(&self) -> ServeStats {
+        let (db_exact, db_borrowed) = {
+            let db = self.db.lock().unwrap();
+            let exact =
+                db.values().flat_map(|b| b.values()).filter(|e| e.exact).count();
+            let total: usize = db.values().map(|b| b.len()).sum();
+            (exact, total - exact)
+        };
+        let (p50_us, p99_us) = {
+            let lat = self.latencies_us.lock().unwrap();
+            (percentile(&lat, 0.50), percentile(&lat, 0.99))
+        };
+        ServeStats {
+            requests: self.requests.load(Ordering::Relaxed),
+            exact_hits: self.exact_hits.load(Ordering::Relaxed),
+            neighbor_hits: self.neighbor_hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            retunes_done: self.retunes_done.load(Ordering::Relaxed),
+            queue_depth: self.queue_depth(),
+            db_exact,
+            db_borrowed,
+            p50_us,
+            p99_us,
+            sim_calls: self.engine.sim_calls(),
+        }
+    }
+}
+
+/// Nearest-rank percentile over an unsorted sample (0 for an empty one).
+fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(f64::total_cmp);
+    let idx = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+// ---------------------------------------------------------------------
+// Replayable request traces.
+
+/// Parse a trace: one `MxNxK` per line; `#` starts a comment; blank
+/// lines are ignored. Fails on the first malformed shape or if the
+/// trace holds none at all.
+pub fn parse_trace(text: &str) -> Result<Vec<GemmShape>> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        out.push(
+            GemmShape::parse(line).with_context(|| format!("trace line {}", i + 1))?,
+        );
+    }
+    anyhow::ensure!(!out.is_empty(), "trace holds no shapes");
+    Ok(out)
+}
+
+/// [`parse_trace`] from a file.
+pub fn load_trace(path: impl AsRef<std::path::Path>) -> Result<Vec<GemmShape>> {
+    let path = path.as_ref();
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace {}", path.display()))?;
+    parse_trace(&text).with_context(|| format!("parsing trace {}", path.display()))
+}
+
+/// The shape universe serve traces draw from: a serving-mix cross
+/// product of small-to-modest M values (including the bucket-boundary
+/// straddlers 31/32/33 and 63/64/65) with a few exact `(N, K)` weight
+/// pairs. Ordered popular-first — Zipf rank follows this order.
+pub fn trace_universe() -> Vec<GemmShape> {
+    let ms = [64, 32, 16, 63, 96, 65, 8, 33, 31, 128, 48, 24];
+    let nks = [(512, 512), (768, 512), (512, 768), (1024, 512)];
+    let mut out = Vec::with_capacity(ms.len() * nks.len());
+    for &m in &ms {
+        for &(n, k) in &nks {
+            out.push(GemmShape::new(m, n, k));
+        }
+    }
+    out
+}
+
+/// Generate a deterministic Zipf-distributed request trace over
+/// [`trace_universe`] (exponent 1.1). One request in eight arrives
+/// transposed (`N×M×K`) to exercise canonicalization. Same `(seed,
+/// len)` ⇒ identical trace, on every platform — the committed trace
+/// under `traces/` was produced by exactly this procedure, and replays
+/// involve no randomness at all.
+pub fn zipf_trace(seed: u64, len: usize) -> Vec<GemmShape> {
+    let pool = trace_universe();
+    let weights: Vec<f64> =
+        (0..pool.len()).map(|i| 1.0 / ((i + 1) as f64).powf(1.1)).collect();
+    let total: f64 = weights.iter().sum();
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(len);
+    for _ in 0..len {
+        let u = (rng.next_u64() >> 11) as f64 / (1u64 << 53) as f64 * total;
+        let mut acc = 0.0;
+        let mut idx = pool.len() - 1;
+        for (i, w) in weights.iter().enumerate() {
+            acc += w;
+            if u < acc {
+                idx = i;
+                break;
+            }
+        }
+        let mut shape = pool[idx];
+        if rng.below(8) == 0 {
+            shape = GemmShape::new(shape.n, shape.m, shape.k);
+        }
+        out.push(shape);
+    }
+    out
+}
+
+/// Render a trace to the committed text format, with a regeneration
+/// header.
+pub fn render_trace(shapes: &[GemmShape], seed: u64) -> String {
+    let mut out = String::new();
+    out.push_str("# Deterministic Zipf-distributed GEMM request trace for `dit serve`.\n");
+    out.push_str(&format!(
+        "# Generated by shapedb::zipf_trace(seed={seed}, len={}); regenerate with\n",
+        shapes.len()
+    ));
+    out.push_str(&format!(
+        "#   dit serve --gen-trace <path> --seed {seed} --len {}\n",
+        shapes.len()
+    ));
+    out.push_str("# One MxNxK request per line; `#` starts a comment.\n");
+    for s in shapes {
+        out.push_str(&format!("{s}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonicalize_edge_cases() {
+        // Unit dimensions.
+        assert_eq!(canonicalize(GemmShape::new(1, 1, 1)), (GemmShape::new(1, 1, 1), false));
+        assert_eq!(
+            canonicalize(GemmShape::new(1, 4096, 64)),
+            (GemmShape::new(1, 4096, 64), false)
+        );
+        assert_eq!(
+            canonicalize(GemmShape::new(4096, 1, 64)),
+            (GemmShape::new(1, 4096, 64), true)
+        );
+        // K never moves.
+        assert_eq!(
+            canonicalize(GemmShape::new(128, 64, 1)),
+            (GemmShape::new(64, 128, 1), true)
+        );
+        // Transpose-symmetric shapes are their own canonical form.
+        assert_eq!(
+            canonicalize(GemmShape::new(64, 64, 256)),
+            (GemmShape::new(64, 64, 256), false)
+        );
+    }
+
+    #[test]
+    fn transposed_pair_shares_one_canonical_key() {
+        let a = canonicalize(GemmShape::new(63, 4096, 4096)).0;
+        let b = canonicalize(GemmShape::new(4096, 63, 4096)).0;
+        assert_eq!(shape_key(a), shape_key(b));
+        assert_eq!(bucket_key(a), bucket_key(b));
+    }
+
+    #[test]
+    fn bucket_boundaries_straddle_as_documented() {
+        assert_eq!(m_bucket(1), 1);
+        assert_eq!(m_bucket(2), 2);
+        assert_eq!(m_bucket(3), 4);
+        assert_eq!(m_bucket(63), 64);
+        assert_eq!(m_bucket(64), 64);
+        assert_eq!(m_bucket(65), 128);
+        // 63 and 64 share a bucket; 65 lands one bucket up with 128.
+        let nk = |m| bucket_key(GemmShape::new(m, 512, 512));
+        assert_eq!(nk(63), nk(64));
+        assert_ne!(nk(64), nk(65));
+        assert_eq!(nk(65), nk(128));
+        // Exact N and K: same M band, different weights, different bucket.
+        assert_ne!(
+            bucket_key(GemmShape::new(63, 512, 512)),
+            bucket_key(GemmShape::new(63, 768, 512))
+        );
+    }
+
+    #[test]
+    fn zipf_trace_is_deterministic_and_well_formed() {
+        let a = zipf_trace(7, 256);
+        let b = zipf_trace(7, 256);
+        assert_eq!(a, b, "same seed, same trace");
+        assert_ne!(zipf_trace(8, 256), a, "different seed, different trace");
+        assert_eq!(a.len(), 256);
+        let universe = trace_universe();
+        let mut transposed = 0usize;
+        for s in &a {
+            let (canon, swapped) = canonicalize(*s);
+            assert!(
+                universe.contains(&canon),
+                "{s} is outside the canonical universe"
+            );
+            transposed += swapped as usize;
+        }
+        assert!(transposed > 0, "no transposed requests in 256 draws");
+        // Zipf head: the most popular universe shape dominates.
+        let head = universe[0];
+        let head_count = a.iter().filter(|s| canonicalize(**s).0 == head).count();
+        assert!(head_count * 4 > a.len(), "head shape only {head_count}/256");
+    }
+
+    #[test]
+    fn trace_roundtrips_through_render_and_parse() {
+        let shapes = zipf_trace(7, 64);
+        let text = render_trace(&shapes, 7);
+        assert_eq!(parse_trace(&text).unwrap(), shapes);
+        // Comments and blanks are tolerated; junk is not.
+        assert_eq!(
+            parse_trace("# c\n\n 8x16x32 # tail\n").unwrap(),
+            vec![GemmShape::new(8, 16, 32)]
+        );
+        assert!(parse_trace("8x16\n").is_err());
+        assert!(parse_trace("# only comments\n").is_err());
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        assert_eq!(percentile(&[], 0.99), 0.0);
+        assert_eq!(percentile(&[5.0], 0.5), 5.0);
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 100.0);
+        assert_eq!(percentile(&xs, 0.5), 51.0); // round((99)*0.5)=50 → 51.0
+    }
+}

@@ -25,6 +25,14 @@
 //! the exhaustive winner's *simulated* makespan — asserted by
 //! `tests/tiered.rs` and pinned by the `tiered` bench id in CI. The model
 //! only has to *rank* well; absolute error is reported, not required.
+//!
+//! The serving layer leans on the same property: a neighbor-borrowed
+//! schedule is admitted iff its estimate on the true shape is within ε
+//! of the minimum estimate over that shape's own candidates
+//! ([`crate::coordinator::shapedb`]) — a *relative* bound between two
+//! estimates of near-identical problems, exactly where a
+//! structure-mirroring model is most trustworthy. `tests/serve.rs`
+//! re-derives that bound from first principles for every borrow.
 
 use crate::arch::{ArchConfig, GemmShape};
 use crate::schedule::{Dataflow, Schedule};

@@ -130,6 +130,48 @@ pub fn workload_counters(rep: &crate::coordinator::engine::WorkloadReport) -> St
     )
 }
 
+/// Render a serving-replay summary (hit/miss breakdown, database
+/// composition, time-to-schedule percentiles) — the `dit serve`
+/// CLI/bench table.
+pub fn serve_summary(stats: &crate::coordinator::shapedb::ServeStats) -> Table {
+    let pct = |n: usize| {
+        if stats.requests == 0 {
+            "0.0".to_string()
+        } else {
+            format!("{:.1}", 100.0 * n as f64 / stats.requests as f64)
+        }
+    };
+    let mut t = Table::new(
+        format!("serve replay: {} requests", stats.requests),
+        &["outcome", "count", "% of requests"],
+    );
+    t.row(vec!["exact hit".into(), stats.exact_hits.to_string(), pct(stats.exact_hits)]);
+    t.row(vec![
+        "neighbor hit".into(),
+        stats.neighbor_hits.to_string(),
+        pct(stats.neighbor_hits),
+    ]);
+    t.row(vec!["miss (tuned)".into(), stats.misses.to_string(), pct(stats.misses)]);
+    t
+}
+
+/// One-line counter summary for a serving replay (see
+/// [`workload_counters`]): database composition, retune-queue state,
+/// time-to-schedule percentiles, and the engine's simulation count.
+pub fn serve_counters(stats: &crate::coordinator::shapedb::ServeStats) -> String {
+    format!(
+        "server     : {} exact + {} borrowed db entries, {} retunes done, {} queued, \
+         p50 {:.0} us, p99 {:.0} us, {} simulations",
+        stats.db_exact,
+        stats.db_borrowed,
+        stats.retunes_done,
+        stats.queue_depth,
+        stats.p50_us,
+        stats.p99_us,
+        stats.sim_calls
+    )
+}
+
 /// One-line engine counter summary for a DSE sweep (see
 /// [`workload_counters`]); includes how many entries the persistent
 /// cache started with, so a resumed sweep is recognizable from the log.
