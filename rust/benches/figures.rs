@@ -21,6 +21,8 @@
 //! | tiered | analytic-first tiered tuning calibration vs exhaustive     |
 //! | serve  | schedule-serving replay of the committed Zipf trace        |
 //! |        | (exact/neighbor hit rates, time-to-schedule percentiles)   |
+//! | check  | static deployment checker over every preset × built-in     |
+//! |        | suite (lint throughput; gates the zero-simulation contract)|
 //!
 //! Absolute numbers come from the analytical-contention SoftHier model and
 //! the calibrated GPU baselines (see DESIGN.md §Substitutions); the point
@@ -142,7 +144,7 @@ fn main() {
         Some(rest) => !rest.starts_with(|c: char| c.is_ascii_digit()),
         None => false,
     };
-    let figs: [(&str, fn(&mut Recorder)); 16] = [
+    let figs: [(&str, fn(&mut Recorder)); 17] = [
         ("table1", table1),
         ("fig1", fig1),
         ("fig7a", fig7a),
@@ -159,6 +161,7 @@ fn main() {
         ("energy", energy_bench),
         ("tiered", tiered_bench),
         ("serve", serve_bench),
+        ("check", check_bench),
     ];
     // A filter that selects nothing is a typo (or a stale CI list): fail
     // loudly rather than emit an empty artifact with exit code 0.
@@ -879,4 +882,54 @@ fn fig12(r: &mut Recorder) {
     println!("(paper: CUTLASS drops on GH200; SoftHier utilization stays consistently\n high as the architecture scales — and beats its spec-matched GPU)");
     r.rec("fig12", "softhier_a100_mean_util_pct", sum_a / n as f64, true);
     r.rec("fig12", "softhier_gh200_mean_util_pct", sum_g / n as f64, true);
+}
+
+// --------------------------------------------------------------------
+/// `check` bench: the static lint path (`dit check`) over every preset ×
+/// built-in suite — each arch through `check_arch`, each enumerated
+/// candidate through `check_schedule`. Gates three contracts: linting
+/// never enters the simulator (sim_calls stays 0 — this runs single-
+/// threaded so the process-wide counter delta is exact, unlike the unit
+/// tests), the committed presets/suites lint with zero errors, and
+/// throughput holds a configs-checked-per-second floor.
+fn check_bench(r: &mut Recorder) {
+    use dit::analysis::{check_arch, check_schedule};
+    use dit::schedule::candidates;
+    let (calls0, _) = sim_counters();
+    let t = Instant::now();
+    let mut subjects = 0usize;
+    let mut cands = 0usize;
+    let mut errors = 0usize;
+    for arch in [ArchConfig::gh200_like(), ArchConfig::a100_like(), ArchConfig::tiny(8, 8)] {
+        errors += check_arch(&arch).errors();
+        subjects += 1;
+        for suite in Workload::builtin_names() {
+            let w = Workload::builtin(suite).expect("builtin suite");
+            let mut seen: Vec<GemmShape> = Vec::new();
+            for item in &w.items {
+                if seen.contains(&item.shape) {
+                    continue;
+                }
+                seen.push(item.shape);
+                for s in candidates(&arch, item.shape) {
+                    errors += check_schedule(&arch, item.shape, &s).errors();
+                    subjects += 1;
+                    cands += 1;
+                }
+            }
+        }
+    }
+    let secs = t.elapsed().as_secs_f64().max(1e-9);
+    let (calls1, _) = sim_counters();
+    let sim_calls = calls1.saturating_sub(calls0);
+    println!(
+        "\ncheck: {subjects} subjects ({cands} schedule candidates) linted in {:.1} ms, \
+         {errors} errors, {sim_calls} simulations ({:.0} configs/sec)",
+        secs * 1e3,
+        subjects as f64 / secs
+    );
+    r.rec("check", "configs_per_sec", subjects as f64 / secs, true);
+    r.rec("check", "candidates_checked", cands as f64, true);
+    r.rec("check", "errors", errors as f64, false);
+    r.rec("check", "sim_calls", sim_calls as f64, false);
 }

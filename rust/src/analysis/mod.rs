@@ -1,0 +1,616 @@
+//! Static deployment analysis: a pass-manager checker over
+//! `(ArchConfig, GemmShape, Schedule / Deployment)`.
+//!
+//! DiT's premise is that mapping legality is deeply coupled with the
+//! hardware configuration. Historically that coupling was enforced by
+//! scattered `validate()` methods plus asserts deep inside codegen and
+//! the simulator, so an illegal `(arch, schedule)` pair surfaced as a
+//! panic or an `anyhow` chain with no structure. This module turns the
+//! same legality rules into **structured diagnostics**: stable error
+//! codes (`DIT-E011 spm-overflow`), a severity, an optional
+//! per-superstep / per-tile location, a human message, and machine JSON
+//! — cheap enough (purely closed-form, zero simulations) to run over
+//! the entire candidate space, in the spirit of GOMA-style analytic
+//! mapping checks.
+//!
+//! Entry points:
+//!
+//! * [`check_arch`] — architecture sanity + HBM edge rule.
+//! * [`check_schedule`] — everything above plus schedule/dataflow
+//!   compatibility, double-buffer-aware SPM capacity accounting,
+//!   chunking legality, and remap geometry. **Hard-reject lockstep:**
+//!   [`CheckReport::rejected`] is `true` exactly when
+//!   [`Schedule::validate`] fails or the working set overflows L1 with
+//!   no legal chunking — i.e. exactly when
+//!   [`crate::coordinator::deploy_chunked`] would error — so the engine
+//!   can skip simulating rejected candidates without changing any
+//!   result ([`crate::coordinator::engine`] relies on this).
+//! * [`check_deployment`] — the lowered-IR contract (buffer discipline,
+//!   L1 budget) plus a BSP rendezvous deadlock check and HBM channel
+//!   legality on the emitted layouts.
+//! * [`check_workload`] — arch checks plus per-shape candidate
+//!   coverage: a shape with zero deployable schedules is an error.
+
+pub mod passes;
+
+use std::fmt;
+
+use crate::arch::workload::Workload;
+use crate::arch::{ArchConfig, GemmShape};
+use crate::ir::Deployment;
+use crate::schedule::Schedule;
+use crate::util::json::Json;
+
+/// Stable diagnostic codes. The numeric part is permanent: codes are
+/// referenced from CI logs, docs, and tests, so a code is never reused
+/// for a different condition (retire, don't recycle). `E` codes reject
+/// (checker exit is nonzero, the engine skips simulation); `W` codes
+/// inform.
+pub mod codes {
+    /// `(stable code, short kebab-case name)`.
+    pub type Code = (&'static str, &'static str);
+
+    // Architecture sanity (mirrors `ArchConfig::validate`).
+    pub const E001: Code = ("DIT-E001", "empty-grid");
+    pub const E002: Code = ("DIT-E002", "empty-ce-array");
+    pub const E003: Code = ("DIT-E003", "bad-clock");
+    pub const E004: Code = ("DIT-E004", "spm-too-small");
+    pub const E005: Code = ("DIT-E005", "noc-too-narrow");
+    pub const E006: Code = ("DIT-E006", "no-hbm-channels");
+    pub const E007: Code = ("DIT-E007", "bad-elem-bytes");
+    pub const E008: Code = ("DIT-E008", "arch-invalid");
+    /// More HBM channels than edge routers: channels share injection
+    /// points ([`crate::arch::ArchConfig::hbm_router`] wraps).
+    pub const W009: Code = ("DIT-W009", "hbm-edge-wrap");
+
+    // SPM capacity / chunking.
+    pub const E011: Code = ("DIT-E011", "spm-overflow");
+    pub const W012: Code = ("DIT-W012", "spm-chunked");
+    pub const E013: Code = ("DIT-E013", "chunking-broken");
+
+    // Remap geometry.
+    pub const E021: Code = ("DIT-E021", "remap-aliasing");
+    pub const W022: Code = ("DIT-W022", "idle-tiles");
+
+    // HBM channel legality on emitted layouts.
+    pub const E031: Code = ("DIT-E031", "hbm-channel-out-of-range");
+    pub const E032: Code = ("DIT-E032", "hbm-layout-invalid");
+    pub const W033: Code = ("DIT-W033", "hbm-imbalance");
+
+    // Deployment IR contract.
+    pub const E041: Code = ("DIT-E041", "l1-over-budget");
+    pub const E042: Code = ("DIT-E042", "bad-buffer");
+    pub const E043: Code = ("DIT-E043", "buffer-race");
+    pub const E044: Code = ("DIT-E044", "comm-mismatch");
+    pub const E045: Code = ("DIT-E045", "deadlock");
+    pub const E046: Code = ("DIT-E046", "duplicate-program");
+    pub const E047: Code = ("DIT-E047", "ir-malformed");
+
+    // Schedule / dataflow compatibility (mirrors `Schedule::validate`).
+    pub const E051: Code = ("DIT-E051", "bad-tk");
+    pub const E052: Code = ("DIT-E052", "empty-logical-grid");
+    pub const E053: Code = ("DIT-E053", "tile-oversubscription");
+    pub const E054: Code = ("DIT-E054", "bad-pipeline-stages");
+    pub const E055: Code = ("DIT-E055", "systolic-grid-mismatch");
+    pub const E056: Code = ("DIT-E056", "bad-hier-group");
+    pub const E057: Code = ("DIT-E057", "splitk-coverage");
+    pub const E058: Code = ("DIT-E058", "splitk-reduce-mask");
+    pub const E059: Code = ("DIT-E059", "schedule-invalid");
+
+    // Input / CLI surface.
+    pub const E071: Code = ("DIT-E071", "parse-error");
+    pub const E072: Code = ("DIT-E072", "cache-unrecognized");
+
+    // Workload coverage.
+    pub const E081: Code = ("DIT-E081", "no-deployable-candidate");
+    pub const W082: Code = ("DIT-W082", "spec-dropped-points");
+
+    /// Every code, for uniqueness tests and the README table check.
+    pub const ALL: &[Code] = &[
+        E001, E002, E003, E004, E005, E006, E007, E008, W009, E011, W012, E013, E021, W022,
+        E031, E032, W033, E041, E042, E043, E044, E045, E046, E047, E051, E052, E053, E054,
+        E055, E056, E057, E058, E059, E071, E072, E081, W082,
+    ];
+}
+
+pub use codes::Code;
+
+/// Diagnostic severity. Only [`Severity::Error`] rejects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Severity::Warning => write!(f, "warning"),
+            Severity::Error => write!(f, "error"),
+        }
+    }
+}
+
+/// Where in the deployment a diagnostic points: a BSP superstep, a
+/// physical tile, both, or neither (whole-subject diagnostics).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Loc {
+    pub superstep: Option<usize>,
+    pub tile: Option<(usize, usize)>,
+}
+
+impl Loc {
+    pub fn none() -> Loc {
+        Loc::default()
+    }
+
+    pub fn step(superstep: usize) -> Loc {
+        Loc { superstep: Some(superstep), tile: None }
+    }
+
+    pub fn tile(row: usize, col: usize) -> Loc {
+        Loc { superstep: None, tile: Some((row, col)) }
+    }
+
+    pub fn at(superstep: usize, row: usize, col: usize) -> Loc {
+        Loc { superstep: Some(superstep), tile: Some((row, col)) }
+    }
+
+    fn render(&self) -> String {
+        match (self.superstep, self.tile) {
+            (None, None) => String::new(),
+            (Some(s), None) => format!(" (superstep {s})"),
+            (None, Some((r, c))) => format!(" (tile ({r},{c}))"),
+            (Some(s), Some((r, c))) => format!(" (superstep {s}, tile ({r},{c}))"),
+        }
+    }
+}
+
+/// One structured diagnostic.
+#[derive(Debug, Clone)]
+pub struct Diag {
+    /// Stable code, e.g. `DIT-E011`.
+    pub code: &'static str,
+    /// Short kebab-case name, e.g. `spm-overflow`.
+    pub name: &'static str,
+    pub severity: Severity,
+    pub loc: Loc,
+    pub message: String,
+}
+
+impl Diag {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj()
+            .field("code", self.code)
+            .field("name", self.name)
+            .field("severity", self.severity.to_string());
+        if let Some(s) = self.loc.superstep {
+            j = j.field("superstep", s as u64);
+        }
+        if let Some((r, c)) = self.loc.tile {
+            j = j.field("tile", Json::arr().push(r as u64).push(c as u64));
+        }
+        j.field("message", self.message.as_str())
+    }
+}
+
+impl fmt::Display for Diag {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}[{}] {}: {}{}",
+            self.severity,
+            self.code,
+            self.name,
+            self.message,
+            self.loc.render()
+        )
+    }
+}
+
+/// The outcome of checking one subject: which passes ran and every
+/// diagnostic they produced.
+#[derive(Debug, Clone)]
+pub struct CheckReport {
+    /// What was checked (arch name, shape, schedule — for humans).
+    pub subject: String,
+    /// Pass names, in execution order (skipped passes are absent).
+    pub passes_run: Vec<&'static str>,
+    pub diags: Vec<Diag>,
+}
+
+impl CheckReport {
+    pub fn new(subject: impl Into<String>) -> CheckReport {
+        CheckReport { subject: subject.into(), passes_run: Vec::new(), diags: Vec::new() }
+    }
+
+    /// Record an error diagnostic. `code` must be an `E` code.
+    pub fn error(&mut self, code: Code, loc: Loc, message: String) {
+        debug_assert!(code.0.contains("-E"), "{} recorded as error", code.0);
+        self.diags.push(Diag { code: code.0, name: code.1, severity: Severity::Error, loc, message });
+    }
+
+    /// Record a warning diagnostic. `code` must be a `W` code.
+    pub fn warn(&mut self, code: Code, loc: Loc, message: String) {
+        debug_assert!(code.0.contains("-W"), "{} recorded as warning", code.0);
+        self.diags.push(Diag {
+            code: code.0,
+            name: code.1,
+            severity: Severity::Warning,
+            loc,
+            message,
+        });
+    }
+
+    pub fn errors(&self) -> usize {
+        self.diags.iter().filter(|d| d.severity == Severity::Error).count()
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.diags.iter().filter(|d| d.severity == Severity::Warning).count()
+    }
+
+    /// Hard rejection: any error-severity diagnostic. For
+    /// [`check_schedule`] this is in exact lockstep with
+    /// [`crate::coordinator::deploy_chunked`] failing (see module docs).
+    pub fn rejected(&self) -> bool {
+        self.diags.iter().any(|d| d.severity == Severity::Error)
+    }
+
+    pub fn has_code(&self, code: Code) -> bool {
+        self.diags.iter().any(|d| d.code == code.0)
+    }
+
+    /// Multi-line human rendering (header + one line per diagnostic).
+    pub fn render(&self) -> String {
+        let mut out = if self.diags.is_empty() {
+            format!("check {}: clean ({} passes)\n", self.subject, self.passes_run.len())
+        } else {
+            format!(
+                "check {}: {} error(s), {} warning(s)\n",
+                self.subject,
+                self.errors(),
+                self.warnings()
+            )
+        };
+        for d in &self.diags {
+            out.push_str(&format!("  {d}\n"));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut passes = Json::arr();
+        for p in &self.passes_run {
+            passes = passes.push(*p);
+        }
+        let mut diags = Json::arr();
+        for d in &self.diags {
+            diags = diags.push(d.to_json());
+        }
+        Json::obj()
+            .field("subject", self.subject.as_str())
+            .field("passes", passes)
+            .field("errors", self.errors() as u64)
+            .field("warnings", self.warnings() as u64)
+            .field("diags", diags)
+    }
+}
+
+/// What a pass sees. Passes only read the fields they need; a pass
+/// whose inputs are absent is a no-op.
+pub struct Ctx<'a> {
+    pub arch: &'a ArchConfig,
+    pub shape: Option<GemmShape>,
+    pub sched: Option<&'a Schedule>,
+    pub dep: Option<&'a Deployment>,
+}
+
+impl<'a> Ctx<'a> {
+    pub fn arch_only(arch: &'a ArchConfig) -> Ctx<'a> {
+        Ctx { arch, shape: None, sched: None, dep: None }
+    }
+}
+
+/// One analysis pass.
+pub trait Pass {
+    fn name(&self) -> &'static str;
+
+    /// Passes whose arithmetic is only defined on structurally valid
+    /// inputs (e.g. `Schedule::plan` divides by the logical grid)
+    /// return `true` here and are skipped once an earlier pass errored.
+    fn requires_clean(&self) -> bool {
+        false
+    }
+
+    fn run(&self, cx: &Ctx, out: &mut CheckReport);
+}
+
+/// An ordered pass pipeline.
+#[derive(Default)]
+pub struct Checker {
+    passes: Vec<Box<dyn Pass>>,
+}
+
+impl Checker {
+    pub fn new() -> Checker {
+        Checker::default()
+    }
+
+    pub fn with(mut self, pass: impl Pass + 'static) -> Checker {
+        self.passes.push(Box::new(pass));
+        self
+    }
+
+    /// Architecture-only pipeline.
+    pub fn for_arch() -> Checker {
+        Checker::new().with(passes::ArchSanity).with(passes::HbmEdgeRule)
+    }
+
+    /// Full `(arch, shape, schedule)` pipeline.
+    pub fn for_schedule() -> Checker {
+        Checker::for_arch()
+            .with(passes::ScheduleCompat)
+            .with(passes::SpmCapacity)
+            .with(passes::ChunkingLegality)
+            .with(passes::RemapGeometry)
+    }
+
+    /// Lowered-deployment pipeline.
+    pub fn for_deployment() -> Checker {
+        Checker::for_arch()
+            .with(passes::IrContract)
+            .with(passes::DeadlockFree)
+            .with(passes::HbmLayoutLegality)
+    }
+
+    pub fn run(&self, cx: &Ctx, subject: impl Into<String>) -> CheckReport {
+        let mut rep = CheckReport::new(subject);
+        for pass in &self.passes {
+            if pass.requires_clean() && rep.rejected() {
+                continue;
+            }
+            rep.passes_run.push(pass.name());
+            pass.run(cx, &mut rep);
+        }
+        rep
+    }
+}
+
+/// Lint an architecture description.
+pub fn check_arch(arch: &ArchConfig) -> CheckReport {
+    Checker::for_arch().run(&Ctx::arch_only(arch), arch.name.clone())
+}
+
+/// Lint a `(arch, shape, schedule)` triple. See the module docs for the
+/// hard-reject lockstep contract the engine relies on.
+pub fn check_schedule(arch: &ArchConfig, shape: GemmShape, sched: &Schedule) -> CheckReport {
+    let cx = Ctx { arch, shape: Some(shape), sched: Some(sched), dep: None };
+    Checker::for_schedule().run(&cx, format!("{} {} {}", arch.name, shape, sched.name()))
+}
+
+/// Lint a lowered deployment (post-emission IR contract).
+pub fn check_deployment(arch: &ArchConfig, dep: &Deployment) -> CheckReport {
+    let cx = Ctx { arch, shape: None, sched: None, dep: Some(dep) };
+    Checker::for_deployment().run(&cx, format!("{} {} {}", arch.name, dep.shape, dep.descr))
+}
+
+/// Lint an architecture against a whole workload: every unique shape
+/// must retain at least one checker-accepted schedule candidate.
+pub fn check_workload(arch: &ArchConfig, w: &Workload) -> CheckReport {
+    let mut rep =
+        Checker::for_arch().run(&Ctx::arch_only(arch), format!("{} workload {}", arch.name, w.name));
+    if rep.rejected() {
+        return rep;
+    }
+    rep.passes_run.push("candidate-coverage");
+    let mut seen: Vec<GemmShape> = Vec::new();
+    for item in &w.items {
+        if seen.contains(&item.shape) {
+            continue;
+        }
+        seen.push(item.shape);
+        let cands = crate::schedule::candidates(arch, item.shape);
+        let accepted =
+            cands.iter().filter(|s| !check_schedule(arch, item.shape, s).rejected()).count();
+        if accepted == 0 {
+            rep.error(
+                codes::E081,
+                Loc::none(),
+                format!(
+                    "{}: none of the {} enumerated schedule candidates deploys on {}",
+                    item.shape,
+                    cands.len(),
+                    arch.name
+                ),
+            );
+        }
+    }
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::{candidates, l1_estimate, Dataflow, Schedule};
+
+    #[test]
+    fn codes_are_unique_and_well_formed() {
+        let mut seen = std::collections::HashSet::new();
+        for (code, name) in codes::ALL {
+            assert!(seen.insert(*code), "duplicate code {code}");
+            assert!(
+                code.starts_with("DIT-E") || code.starts_with("DIT-W"),
+                "bad code {code}"
+            );
+            assert!(!name.is_empty() && !name.contains(' '), "bad name {name}");
+        }
+    }
+
+    #[test]
+    fn presets_check_clean() {
+        for arch in [ArchConfig::gh200_like(), ArchConfig::a100_like(), ArchConfig::tiny(4, 4)] {
+            let rep = check_arch(&arch);
+            assert!(!rep.rejected(), "{}", rep.render());
+            assert_eq!(rep.errors(), 0, "{}", rep.render());
+        }
+    }
+
+    #[test]
+    fn broken_arch_maps_to_specific_codes() {
+        let mut a = ArchConfig::tiny(2, 2);
+        a.rows = 0;
+        let rep = check_arch(&a);
+        assert!(rep.rejected());
+        assert!(rep.has_code(codes::E001), "{}", rep.render());
+
+        let mut b = ArchConfig::tiny(2, 2);
+        b.elem_bytes = 0;
+        assert!(check_arch(&b).has_code(codes::E007));
+
+        let mut c = ArchConfig::tiny(2, 2);
+        c.tile.l1_bytes = 16;
+        assert!(check_arch(&c).has_code(codes::E004));
+    }
+
+    #[test]
+    fn arch_reject_lockstep_with_validate() {
+        // Every arch mutation agrees with ArchConfig::validate.
+        let mut muts: Vec<ArchConfig> = Vec::new();
+        let fns: [fn(&mut ArchConfig); 9] = [
+            |a| a.rows = 0,
+            |a| a.cols = 0,
+            |a| a.tile.ce_m = 0,
+            |a| a.tile.clock_ghz = 0.0,
+            |a| a.tile.l1_bytes = 100,
+            |a| a.noc.link_bits = 4,
+            |a| a.hbm.channels_per_edge = 0,
+            |a| a.elem_bytes = 9,
+            |a| a.elem_bytes = 8, // still legal
+        ];
+        for f in fns {
+            let mut a = ArchConfig::tiny(4, 4);
+            f(&mut a);
+            muts.push(a);
+        }
+        for a in &muts {
+            assert_eq!(
+                check_arch(a).rejected(),
+                a.validate().is_err(),
+                "lockstep broken for {a:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn all_candidates_accepted() {
+        // Enumerated candidates are pre-filtered to be deployable; the
+        // checker must never falsely reject one (the engine gate's
+        // no-op guarantee on committed flows).
+        for arch in [ArchConfig::tiny(4, 4), ArchConfig::tiny(2, 8)] {
+            for shape in [
+                GemmShape::new(128, 128, 256),
+                GemmShape::new(96, 66, 128),
+                GemmShape::new(16, 512, 512),
+            ] {
+                for s in candidates(&arch, shape) {
+                    let rep = check_schedule(&arch, shape, &s);
+                    assert!(!rep.rejected(), "{}", rep.render());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn schedule_reject_lockstep_with_deploy() {
+        // The module-doc contract: rejected() ⟺ validate fails or the
+        // working set overflows L1 with no legal chunking.
+        let arch = ArchConfig::tiny(2, 2);
+        let shape = GemmShape::new(128, 128, 256);
+        let base = Schedule::summa(&arch, shape);
+        let muts = [
+            Schedule { tk: 0, ..base.clone() },
+            Schedule { logical: (0, 2), ..base.clone() },
+            Schedule { logical: (4, 4), ..base.clone() },
+            Schedule { pipeline_stages: 0, ..base.clone() },
+            Schedule { pipeline_stages: 9, ..base.clone() },
+            Schedule { dataflow: Dataflow::Systolic, logical: (1, 2), ..base.clone() },
+            Schedule { dataflow: Dataflow::SystolicOverSumma { group: 3 }, ..base.clone() },
+            Schedule { dataflow: Dataflow::SplitKSumma { splits: 2 }, ..base.clone() },
+            base.clone(),
+        ];
+        for s in &muts {
+            let rep = check_schedule(&arch, shape, s);
+            let l1 = arch.tile.l1_bytes as u64;
+            let expect = s.validate(&arch).is_err()
+                || (l1_estimate(&arch, shape, s) > l1
+                    && crate::coordinator::chunking_for(&arch, shape, s).is_none());
+            assert_eq!(rep.rejected(), expect, "{}\n{}", s.name(), rep.render());
+        }
+    }
+
+    #[test]
+    fn overflow_without_chunking_is_spm_overflow() {
+        let mut arch = ArchConfig::tiny(2, 2);
+        arch.tile.l1_bytes = 4096;
+        let shape = GemmShape::new(256, 256, 256);
+        let s = crate::schedule::retune_tk(&arch, shape, &Schedule::summa(&arch, shape));
+        let rep = check_schedule(&arch, shape, &s);
+        assert!(rep.rejected(), "{}", rep.render());
+        assert!(rep.has_code(codes::E011), "{}", rep.render());
+        assert!(crate::coordinator::deploy_chunked(&arch, shape, &s).is_err());
+    }
+
+    #[test]
+    fn chunkable_overflow_is_a_warning_not_an_error() {
+        let arch = ArchConfig::tiny(2, 2);
+        let shape = GemmShape::new(128, 8192, 256);
+        let s = Schedule::summa(&arch, shape);
+        assert!(l1_estimate(&arch, shape, &s) > arch.tile.l1_bytes as u64);
+        let rep = check_schedule(&arch, shape, &s);
+        assert!(!rep.rejected(), "{}", rep.render());
+        assert!(rep.has_code(codes::W012), "{}", rep.render());
+        assert!(crate::coordinator::deploy_chunked(&arch, shape, &s).is_ok());
+    }
+
+    #[test]
+    fn undersubscribed_logical_grid_warns_idle_tiles() {
+        let arch = ArchConfig::tiny(2, 2);
+        let shape = GemmShape::new(64, 64, 64);
+        let s = Schedule { logical: (1, 2), ..Schedule::summa(&arch, shape) };
+        let rep = check_schedule(&arch, shape, &s);
+        assert!(!rep.rejected(), "{}", rep.render());
+        assert!(rep.has_code(codes::W022), "{}", rep.render());
+    }
+
+    #[test]
+    fn diag_json_roundtrips() {
+        let mut rep = CheckReport::new("unit");
+        rep.error(codes::E011, Loc::at(3, 1, 2), "needs 1 B".into());
+        rep.warn(codes::W012, Loc::none(), "chunked".into());
+        let j = rep.to_json();
+        let parsed = Json::parse(&j.render()).unwrap();
+        assert_eq!(parsed.get("errors").and_then(|v| v.as_u64()), Some(1));
+        assert_eq!(parsed.get("warnings").and_then(|v| v.as_u64()), Some(1));
+        let diags = parsed.get("diags").and_then(|d| d.items()).unwrap();
+        assert_eq!(diags[0].get("code").and_then(|c| c.as_str()), Some("DIT-E011"));
+        assert_eq!(diags[0].get("superstep").and_then(|s| s.as_u64()), Some(3));
+        let disp = rep.render();
+        assert!(disp.contains("error[DIT-E011] spm-overflow"), "{disp}");
+        assert!(disp.contains("superstep 3, tile (1,2)"), "{disp}");
+    }
+
+    #[test]
+    fn workload_coverage_flags_impossible_shapes() {
+        let w = Workload::builtin("tiny").unwrap();
+        let rep = check_workload(&ArchConfig::tiny(4, 4), &w);
+        assert!(!rep.rejected(), "{}", rep.render());
+        // An arch whose SPM cannot hold any candidate for a big shape.
+        let mut small = ArchConfig::tiny(2, 2);
+        small.tile.l1_bytes = 4096;
+        let w1 = Workload::single("huge", GemmShape::new(4096, 4096, 4096));
+        let rep = check_workload(&small, &w1);
+        assert!(rep.rejected(), "{}", rep.render());
+        assert!(rep.has_code(codes::E081), "{}", rep.render());
+    }
+}

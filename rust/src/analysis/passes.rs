@@ -1,0 +1,680 @@
+//! The analysis passes. Each pass reads only the [`Ctx`](super::Ctx)
+//! fields it needs and appends [`Diag`](super::Diag)s; everything is
+//! closed-form — no pass ever lowers IR (unless handed a
+//! [`Deployment`](crate::ir::Deployment) to inspect) and none simulates.
+//!
+//! The mirror passes ([`ArchSanity`], [`ScheduleCompat`]) transcribe the
+//! clauses of `ArchConfig::validate` / `Schedule::validate` one-to-one so
+//! each failure gets a specific stable code; a catch-all (`DIT-E008` /
+//! `DIT-E059`) fires when the mirrored `validate` errors for a clause
+//! with no specific mirror yet, keeping `rejected()` in exact lockstep
+//! with the `validate` contract by construction.
+
+use std::collections::HashMap;
+
+use super::codes::*;
+use super::{CheckReport, Ctx, Loc, Pass};
+use crate::collective::{synthesize, Mask, TileCoord};
+use crate::ir::{IrError, Op, Program};
+use crate::schedule::remap::Remap;
+use crate::schedule::{l1_estimate, Dataflow};
+use crate::util::is_pow2;
+
+/// Mirrors [`crate::arch::ArchConfig::validate`] clause-for-clause.
+pub struct ArchSanity;
+
+impl Pass for ArchSanity {
+    fn name(&self) -> &'static str {
+        "arch-sanity"
+    }
+
+    fn run(&self, cx: &Ctx, out: &mut CheckReport) {
+        let a = cx.arch;
+        let before = out.errors();
+        if a.rows == 0 || a.cols == 0 {
+            out.error(E001, Loc::none(), format!("empty tile grid: {}x{}", a.rows, a.cols));
+        }
+        if a.tile.ce_m == 0 || a.tile.ce_n == 0 {
+            out.error(
+                E002,
+                Loc::none(),
+                format!("empty CE array: {}x{}", a.tile.ce_m, a.tile.ce_n),
+            );
+        }
+        if a.tile.clock_ghz <= 0.0 {
+            out.error(E003, Loc::none(), format!("tile clock {} GHz", a.tile.clock_ghz));
+        }
+        if a.tile.l1_bytes < 4096 {
+            out.error(
+                E004,
+                Loc::none(),
+                format!("L1 SPM of {} bytes is below the 4 KiB floor", a.tile.l1_bytes),
+            );
+        }
+        if a.noc.link_bits < 8 {
+            out.error(E005, Loc::none(), format!("NoC links of {} bits", a.noc.link_bits));
+        }
+        if a.hbm.channels_per_edge == 0 {
+            out.error(E006, Loc::none(), "no HBM channels on either edge".into());
+        }
+        if !(1..=8).contains(&a.elem_bytes) {
+            out.error(
+                E007,
+                Loc::none(),
+                format!("element size of {} bytes is outside 1..=8", a.elem_bytes),
+            );
+        }
+        // Lockstep catch-all: a validate clause with no mirror above.
+        if out.errors() == before {
+            if let Err(e) = a.validate() {
+                out.error(E008, Loc::none(), format!("{e:#}"));
+            }
+        }
+    }
+}
+
+/// The rectangular HBM edge rule: west channels attach along column 0
+/// (wrapping at `rows`), south channels along the bottom row (wrapping
+/// at `cols`). More channels than routers is legal but means shared
+/// mesh injection points — worth a warning, not a rejection.
+pub struct HbmEdgeRule;
+
+impl Pass for HbmEdgeRule {
+    fn name(&self) -> &'static str {
+        "hbm-edge-rule"
+    }
+
+    fn run(&self, cx: &Ctx, out: &mut CheckReport) {
+        let a = cx.arch;
+        if a.rows == 0 || a.cols == 0 || a.hbm.channels_per_edge == 0 {
+            return; // ArchSanity already rejected; router math is undefined.
+        }
+        let per_edge = a.hbm.channels_per_edge;
+        for (edge, extent) in [("west", a.rows), ("south", a.cols)] {
+            if per_edge > extent {
+                out.warn(
+                    W009,
+                    Loc::none(),
+                    format!(
+                        "{per_edge} {edge}-edge channels wrap onto {extent} routers \
+                         ({} channels share each mesh injection point)",
+                        per_edge.div_ceil(extent)
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// Mirrors [`crate::schedule::Schedule::validate`] clause-for-clause,
+/// including the split-K reduce-group mask-expressibility rule.
+pub struct ScheduleCompat;
+
+impl Pass for ScheduleCompat {
+    fn name(&self) -> &'static str {
+        "schedule-compat"
+    }
+
+    fn run(&self, cx: &Ctx, out: &mut CheckReport) {
+        let Some(s) = cx.sched else { return };
+        let arch = cx.arch;
+        let before = out.errors();
+        if s.tk == 0 {
+            out.error(E051, Loc::none(), "K-panel depth tk must be positive".into());
+        }
+        if s.logical.0 == 0 || s.logical.1 == 0 {
+            out.error(
+                E052,
+                Loc::none(),
+                format!("empty logical grid {}x{}", s.logical.0, s.logical.1),
+            );
+        }
+        if s.tiles_used() > arch.num_tiles() {
+            out.error(
+                E053,
+                Loc::none(),
+                format!(
+                    "schedule needs {} tiles, arch has {}",
+                    s.tiles_used(),
+                    arch.num_tiles()
+                ),
+            );
+        }
+        if s.pipeline_stages < 1 {
+            out.error(E054, Loc::none(), "pipeline_stages must be >= 1".into());
+        } else if s.pipeline_stages > s.logical.0.max(1) {
+            out.error(
+                E054,
+                Loc::none(),
+                format!(
+                    "{} pipeline stages over {} logical rows",
+                    s.pipeline_stages, s.logical.0
+                ),
+            );
+        }
+        match s.dataflow {
+            Dataflow::Systolic => {
+                if s.logical != (arch.rows, arch.cols) {
+                    out.error(
+                        E055,
+                        Loc::none(),
+                        format!(
+                            "systolic runs on the physical grid {}x{}, not logical {}x{}",
+                            arch.rows, arch.cols, s.logical.0, s.logical.1
+                        ),
+                    );
+                }
+            }
+            Dataflow::SystolicOverSumma { group } | Dataflow::SummaOverSystolic { group } => {
+                if !(is_pow2(group) && group >= 2) {
+                    out.error(
+                        E056,
+                        Loc::none(),
+                        format!("hierarchical group {group} must be a power of two >= 2"),
+                    );
+                } else if s.logical.0 % group != 0 || s.logical.1 % group != 0 {
+                    out.error(
+                        E056,
+                        Loc::none(),
+                        format!(
+                            "group {group} does not divide the logical grid {}x{}",
+                            s.logical.0, s.logical.1
+                        ),
+                    );
+                }
+            }
+            Dataflow::SplitKSumma { splits } => {
+                if splits < 1 {
+                    out.error(E057, Loc::none(), "split-K needs at least one split".into());
+                }
+                if s.tiles_used() != arch.num_tiles() {
+                    out.error(
+                        E057,
+                        Loc::none(),
+                        format!(
+                            "split-K mapping must cover the grid exactly: {} tiles used, {} in the grid",
+                            s.tiles_used(),
+                            arch.num_tiles()
+                        ),
+                    );
+                } else if splits > 1 && s.logical.0 > 0 && s.logical.1 > 0 {
+                    // The cross-K-group reduction is a hardware collective
+                    // with no unicast fallback: every reduce group must be
+                    // AND-mask expressible on the physical grid. (Guarded
+                    // by exact coverage above so the remap arithmetic is
+                    // in-bounds.)
+                    let (p_dim, q_dim) = s.logical;
+                    let remap = Remap {
+                        phys_rows: arch.rows,
+                        phys_cols: arch.cols,
+                        log_rows: p_dim * splits,
+                        log_cols: q_dim,
+                    };
+                    'groups: for p in 0..p_dim {
+                        for q in 0..q_dim {
+                            let members: Vec<TileCoord> = (0..splits)
+                                .map(|ss| remap.to_phys(ss * p_dim + p, q))
+                                .collect();
+                            if synthesize(&members, arch.rows, arch.cols).is_none() {
+                                out.error(
+                                    E058,
+                                    Loc::none(),
+                                    format!(
+                                        "reduce group (p={p}, q={q}) has no AND-mask on the \
+                                         {}x{} grid (logical {p_dim}x{q_dim} x{splits})",
+                                        arch.rows, arch.cols
+                                    ),
+                                );
+                                break 'groups;
+                            }
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+        // Lockstep catch-all: a validate clause with no mirror above.
+        if out.errors() == before {
+            if let Err(e) = s.validate(arch) {
+                out.error(E059, Loc::none(), format!("{e:#}"));
+            }
+        }
+    }
+}
+
+/// Double-buffer-aware per-superstep SPM capacity accounting: the A/B
+/// panel pair (×2 when double-buffered), the C accumulator, and the
+/// dataflow's staging buffers must fit the tile SPM — directly, or
+/// after the coordinator's output chunking.
+pub struct SpmCapacity;
+
+impl Pass for SpmCapacity {
+    fn name(&self) -> &'static str {
+        "spm-capacity"
+    }
+
+    fn requires_clean(&self) -> bool {
+        true // Plan arithmetic divides by the logical grid.
+    }
+
+    fn run(&self, cx: &Ctx, out: &mut CheckReport) {
+        let (Some(shape), Some(s)) = (cx.shape, cx.sched) else { return };
+        let l1 = cx.arch.tile.l1_bytes as u64;
+        let need = l1_estimate(cx.arch, shape, s);
+        if need <= l1 {
+            return;
+        }
+        let plan = s.plan(cx.arch, shape);
+        let detail = format!(
+            "per-superstep working set of {need} B (tm {} x tn {} x tk {}, {}) \
+             exceeds the {l1} B SPM",
+            plan.tm,
+            plan.tn,
+            plan.tk,
+            if s.double_buffer { "double-buffered" } else { "single-buffered" },
+        );
+        match crate::coordinator::chunking_for(cx.arch, shape, s) {
+            Some((chunks, tuned)) => out.warn(
+                W012,
+                Loc::none(),
+                format!("{detail}; deploys as {chunks} output column chunks (tk {})", tuned.tk),
+            ),
+            None => out.error(
+                E011,
+                Loc::none(),
+                format!("{detail} and no output chunking in the ladder fits"),
+            ),
+        }
+    }
+}
+
+/// The chunked fallback itself must be legal: the retuned chunk
+/// schedule still validates and its working set actually fits.
+/// Defensive — [`crate::coordinator::chunking_for`] guarantees the fit
+/// today, so `DIT-E013` firing means the chunking ladder and this
+/// checker disagree.
+pub struct ChunkingLegality;
+
+impl Pass for ChunkingLegality {
+    fn name(&self) -> &'static str {
+        "chunking-legality"
+    }
+
+    fn requires_clean(&self) -> bool {
+        true
+    }
+
+    fn run(&self, cx: &Ctx, out: &mut CheckReport) {
+        let (Some(shape), Some(s)) = (cx.shape, cx.sched) else { return };
+        let l1 = cx.arch.tile.l1_bytes as u64;
+        if l1_estimate(cx.arch, shape, s) <= l1 {
+            return;
+        }
+        let Some((chunks, tuned)) = crate::coordinator::chunking_for(cx.arch, shape, s) else {
+            return; // SpmCapacity already rejected with E011.
+        };
+        let chunk_shape =
+            crate::arch::GemmShape::new(shape.m, shape.n.div_ceil(chunks), shape.k);
+        let chunk_need = l1_estimate(cx.arch, chunk_shape, &tuned);
+        if chunk_need > l1 {
+            out.error(
+                E013,
+                Loc::none(),
+                format!(
+                    "chunking into {chunks} column slices still needs {chunk_need} B of {l1} B SPM"
+                ),
+            );
+        } else if let Err(e) = tuned.validate(cx.arch) {
+            out.error(
+                E013,
+                Loc::none(),
+                format!("retuned chunk schedule is invalid: {e:#}"),
+            );
+        }
+    }
+}
+
+/// Remap geometry over rectangular meshes: the logical→physical tile
+/// map must be injective and in-bounds (the PR 5 aliasing bug class,
+/// now a diagnostic instead of a release-mode silent corruption), and
+/// under-coverage of the grid is reported.
+pub struct RemapGeometry;
+
+impl Pass for RemapGeometry {
+    fn name(&self) -> &'static str {
+        "remap-geometry"
+    }
+
+    fn requires_clean(&self) -> bool {
+        true
+    }
+
+    fn run(&self, cx: &Ctx, out: &mut CheckReport) {
+        let (Some(shape), Some(s)) = (cx.shape, cx.sched) else { return };
+        let arch = cx.arch;
+        let r = s.plan(arch, shape).remap;
+        let tiles = arch.num_tiles();
+        if r.log_rows * r.log_cols > tiles {
+            out.error(
+                E021,
+                Loc::none(),
+                format!(
+                    "logical grid {}x{} needs {} tiles, the physical grid has {tiles}",
+                    r.log_rows,
+                    r.log_cols,
+                    r.log_rows * r.log_cols
+                ),
+            );
+            return;
+        }
+        let mut seen = vec![false; tiles];
+        for lr in 0..r.log_rows {
+            for lc in 0..r.log_cols {
+                let t = r.to_phys(lr, lc);
+                if t.row >= arch.rows || t.col >= arch.cols {
+                    out.error(
+                        E021,
+                        Loc::tile(t.row, t.col),
+                        format!("logical ({lr},{lc}) maps off-grid to {t}"),
+                    );
+                    return;
+                }
+                let lin = t.linear(arch.cols);
+                if seen[lin] {
+                    out.error(
+                        E021,
+                        Loc::tile(t.row, t.col),
+                        format!("logical ({lr},{lc}) aliases already-mapped physical {t}"),
+                    );
+                    return;
+                }
+                seen[lin] = true;
+            }
+        }
+        let used = seen.iter().filter(|u| **u).count();
+        if used < tiles {
+            out.warn(
+                W022,
+                Loc::none(),
+                format!("mapping uses {used} of {tiles} tiles ({} idle)", tiles - used),
+            );
+        }
+    }
+}
+
+/// The lowered-IR contract ([`crate::ir::validate`]): buffer
+/// declarations and sizes, the L1 budget, the double-buffer race rule,
+/// and communication matching — surfaced with the matching stable code.
+pub struct IrContract;
+
+impl Pass for IrContract {
+    fn name(&self) -> &'static str {
+        "ir-contract"
+    }
+
+    fn run(&self, cx: &Ctx, out: &mut CheckReport) {
+        let Some(dep) = cx.dep else { return };
+        if let Err(e) = crate::ir::validate(cx.arch, dep) {
+            let (code, loc) = match &e {
+                IrError::L1OverBudget { tile, .. } => (E041, Loc::tile(tile.row, tile.col)),
+                IrError::UndeclaredBuf { tile, .. } | IrError::BufTooSmall { tile, .. } => {
+                    (E042, Loc::tile(tile.row, tile.col))
+                }
+                IrError::BufferRace { tile, step, .. } => {
+                    (E043, Loc::at(*step, tile.row, tile.col))
+                }
+                IrError::UnmatchedComm { step, .. } => (E044, Loc::step(*step)),
+                IrError::Malformed { tile, step, .. } => {
+                    (E047, Loc::at(*step, tile.row, tile.col))
+                }
+                IrError::DuplicateProgram(tile) => (E046, Loc::tile(tile.row, tile.col)),
+            };
+            out.error(code, loc, e.to_string());
+        }
+    }
+}
+
+/// Cap on per-pass diagnostics so a thoroughly broken deployment stays
+/// readable.
+const MAX_DEADLOCK_DIAGS: usize = 16;
+
+/// BSP rendezvous deadlock detection. Within a superstep every blocking
+/// receive-side op (`Recv`, `RecvMulticast`, a `Reduce` member) needs
+/// its partner posted **in the same superstep** — the barrier at
+/// superstep end otherwise never releases. Unlike the first-error
+/// [`IrContract`] pass this lists every unmatched rendezvous with its
+/// `(superstep, tile)` location, and when the partner op exists in a
+/// *different* superstep it says so: that is the classic cross-barrier
+/// deadlock, and "partner is one superstep late" is the actionable
+/// message.
+pub struct DeadlockFree;
+
+impl Pass for DeadlockFree {
+    fn name(&self) -> &'static str {
+        "deadlock-free"
+    }
+
+    fn run(&self, cx: &Ctx, out: &mut CheckReport) {
+        let Some(dep) = cx.dep else { return };
+        let arch = cx.arch;
+        let mut by_tile: HashMap<TileCoord, &Program> = HashMap::new();
+        for p in &dep.programs {
+            by_tile.insert(p.tile, p); // duplicates: IrContract reports E046
+        }
+        let mut emitted = 0usize;
+        for step in 0..dep.supersteps() {
+            // (from, to, tag, bytes) for both legs of each rendezvous.
+            let mut sends: Vec<(TileCoord, TileCoord, u32, u64)> = Vec::new();
+            let mut recvs: Vec<(TileCoord, TileCoord, u32, u64)> = Vec::new();
+            // (root, group, bytes, tag) / (member, root, bytes, tag).
+            let mut mc_roots: Vec<(TileCoord, Mask, u64, u32)> = Vec::new();
+            let mut mc_recvs: Vec<(TileCoord, TileCoord, u64, u32)> = Vec::new();
+            for p in &dep.programs {
+                let Some(ss) = p.steps.get(step) else { continue };
+                for op in &ss.ops {
+                    match op {
+                        Op::Send { to, bytes, tag, .. } => sends.push((p.tile, *to, *tag, *bytes)),
+                        Op::Recv { from, bytes, tag, .. } => {
+                            recvs.push((*from, p.tile, *tag, *bytes))
+                        }
+                        Op::Multicast { group, bytes, tag, .. } => {
+                            mc_roots.push((p.tile, *group, *bytes, *tag))
+                        }
+                        Op::RecvMulticast { from, bytes, tag, .. } => {
+                            mc_recvs.push((p.tile, *from, *bytes, *tag))
+                        }
+                        _ => {}
+                    }
+                }
+            }
+            for (from, to, tag, bytes) in &sends {
+                if recvs.iter().any(|r| r == &(*from, *to, *tag, *bytes)) {
+                    continue;
+                }
+                let late = partner_step(by_tile.get(to), |op| {
+                    matches!(op, Op::Recv { from: f, tag: g, .. } if f == from && g == tag)
+                });
+                emit(
+                    out,
+                    &mut emitted,
+                    Loc::at(step, to.row, to.col),
+                    format!(
+                        "send {from}->{to} tag {tag} has no matching recv in superstep {step}{}",
+                        late_note(late, step, "recv")
+                    ),
+                );
+            }
+            for (from, to, tag, bytes) in &recvs {
+                if sends.iter().any(|s| s == &(*from, *to, *tag, *bytes)) {
+                    continue;
+                }
+                let late = partner_step(by_tile.get(from), |op| {
+                    matches!(op, Op::Send { to: t, tag: g, .. } if t == to && g == tag)
+                });
+                emit(
+                    out,
+                    &mut emitted,
+                    Loc::at(step, to.row, to.col),
+                    format!(
+                        "recv {to}<-{from} tag {tag} blocks: no matching send in superstep {step}{}",
+                        late_note(late, step, "send")
+                    ),
+                );
+            }
+            for (root, group, bytes, tag) in &mc_roots {
+                for m in group.members(arch.rows, arch.cols) {
+                    if m == *root || !by_tile.contains_key(&m) {
+                        continue;
+                    }
+                    let posted = mc_recvs
+                        .iter()
+                        .any(|(t, f, b, g)| *t == m && f == root && b == bytes && g == tag);
+                    if !posted {
+                        let late = partner_step(by_tile.get(&m), |op| {
+                            matches!(op, Op::RecvMulticast { from: f, tag: g, .. }
+                                     if f == root && g == tag)
+                        });
+                        emit(
+                            out,
+                            &mut emitted,
+                            Loc::at(step, m.row, m.col),
+                            format!(
+                                "multicast from {root} tag {tag}: member {m} posts no \
+                                 RecvMulticast in superstep {step}{}",
+                                late_note(late, step, "RecvMulticast")
+                            ),
+                        );
+                    }
+                }
+            }
+            for (member, root, _bytes, tag) in &mc_recvs {
+                let rooted = mc_roots.iter().any(|(r, _, _, g)| r == root && g == tag);
+                if !rooted {
+                    let late = partner_step(by_tile.get(root), |op| {
+                        matches!(op, Op::Multicast { tag: g, .. } if g == tag)
+                    });
+                    emit(
+                        out,
+                        &mut emitted,
+                        Loc::at(step, member.row, member.col),
+                        format!(
+                            "RecvMulticast at {member} tag {tag} blocks: root {root} posts no \
+                             Multicast in superstep {step}{}",
+                            late_note(late, step, "Multicast")
+                        ),
+                    );
+                }
+            }
+            // Reduce: every group member with a program must contribute
+            // in this superstep (metadata agreement is IrContract's job).
+            let mut reduce_tags: Vec<(u32, Mask, Vec<TileCoord>)> = Vec::new();
+            for p in &dep.programs {
+                let Some(ss) = p.steps.get(step) else { continue };
+                for op in &ss.ops {
+                    if let Op::Reduce { group, tag, .. } = op {
+                        match reduce_tags.iter().position(|(g, _, _)| g == tag) {
+                            Some(i) => reduce_tags[i].2.push(p.tile),
+                            None => reduce_tags.push((*tag, *group, vec![p.tile])),
+                        }
+                    }
+                }
+            }
+            for (tag, group, who) in &reduce_tags {
+                for m in group.members(arch.rows, arch.cols) {
+                    if !by_tile.contains_key(&m) || who.contains(&m) {
+                        continue;
+                    }
+                    let late = partner_step(by_tile.get(&m), |op| {
+                        matches!(op, Op::Reduce { tag: g, .. } if g == tag)
+                    });
+                    emit(
+                        out,
+                        &mut emitted,
+                        Loc::at(step, m.row, m.col),
+                        format!(
+                            "reduce tag {tag}: group member {m} contributes nothing in \
+                             superstep {step}{}",
+                            late_note(late, step, "Reduce")
+                        ),
+                    );
+                }
+            }
+            if emitted >= MAX_DEADLOCK_DIAGS {
+                return;
+            }
+        }
+    }
+}
+
+/// First superstep of `program` containing an op matching `pred`.
+fn partner_step(program: Option<&&Program>, pred: impl Fn(&Op) -> bool) -> Option<usize> {
+    program?.steps.iter().position(|s| s.ops.iter().any(&pred))
+}
+
+fn late_note(partner: Option<usize>, step: usize, what: &str) -> String {
+    match partner {
+        Some(s) if s != step => format!(
+            "; the matching {what} is posted in superstep {s} — the tiles block at \
+             different barriers"
+        ),
+        Some(_) => String::new(), // mismatched bytes in the same step: IrContract's E044
+        None => format!("; no matching {what} exists in any superstep"),
+    }
+}
+
+fn emit(out: &mut CheckReport, emitted: &mut usize, loc: Loc, message: String) {
+    if *emitted < MAX_DEADLOCK_DIAGS {
+        out.error(E045, loc, message);
+        *emitted += 1;
+    }
+}
+
+/// HBM-channel legality of the emitted layouts: every addressed channel
+/// exists on the configured edges, each layout validates, and heavy
+/// per-channel skew (worst extent > 4x the mean) is flagged.
+pub struct HbmLayoutLegality;
+
+impl Pass for HbmLayoutLegality {
+    fn name(&self) -> &'static str {
+        "hbm-layout-legality"
+    }
+
+    fn run(&self, cx: &Ctx, out: &mut CheckReport) {
+        let Some(dep) = cx.dep else { return };
+        let chans = cx.arch.hbm.num_channels();
+        let l = &dep.layouts;
+        for (name, layout) in [("A", &l.a), ("B", &l.b), ("C", &l.c)] {
+            if let Err(e) = layout.validate() {
+                out.error(E032, Loc::none(), format!("{name} layout: {e:#}"));
+                continue;
+            }
+            for ch in layout.channels_used() {
+                if ch >= chans {
+                    out.error(
+                        E031,
+                        Loc::none(),
+                        format!(
+                            "{name} layout addresses HBM channel {ch}; the arch has {chans} \
+                             (channels 0..{chans})"
+                        ),
+                    );
+                }
+            }
+            let extents = layout.channel_extents();
+            if extents.len() > 1 {
+                let worst = extents.values().max().copied().unwrap_or(0);
+                let mean = extents.values().sum::<u64>() as f64 / extents.len() as f64;
+                if mean > 0.0 && worst as f64 > 4.0 * mean {
+                    out.warn(
+                        W033,
+                        Loc::none(),
+                        format!(
+                            "{name} layout skews HBM traffic: worst channel holds {worst} B \
+                             vs a {mean:.0} B mean"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}

@@ -37,11 +37,19 @@ impl GemmShape {
         use anyhow::Context;
         let parts: Vec<&str> = s.split('x').collect();
         anyhow::ensure!(parts.len() == 3, "shape must be MxNxK, got {s:?}");
-        Ok(GemmShape::new(
+        let g = GemmShape::new(
             parts[0].trim().parse().context("M")?,
             parts[1].trim().parse().context("N")?,
             parts[2].trim().parse().context("K")?,
-        ))
+        );
+        // A zero dimension is representable but meaningless, and it
+        // reaches division and modulo logic all over the scheduler —
+        // reject it at the boundary instead.
+        anyhow::ensure!(
+            g.m > 0 && g.n > 0 && g.k > 0,
+            "shape dimensions must be positive, got {s:?}"
+        );
+        Ok(g)
     }
 
     /// Total floating-point work (multiply + add).
@@ -320,6 +328,19 @@ impl ArchConfig {
     /// Parse from config text; starts from [`ArchConfig::gh200_like`]
     /// defaults so partial configs are valid.
     pub fn from_text(text: &str) -> anyhow::Result<ArchConfig> {
+        let a = ArchConfig::from_text_unchecked(text)?;
+        a.validate()?;
+        Ok(a)
+    }
+
+    /// Parse from config text **without** the final
+    /// [`ArchConfig::validate`] call. This is the static checker's entry
+    /// point ([`crate::analysis`]): a syntactically valid but
+    /// semantically broken config reaches [`crate::analysis::check_arch`]
+    /// intact and earns specific `DIT-E00x` diagnostics instead of one
+    /// opaque error. Everything else should use
+    /// [`ArchConfig::from_text`].
+    pub fn from_text_unchecked(text: &str) -> anyhow::Result<ArchConfig> {
         let doc = Doc::parse(text)?;
         let mut a = ArchConfig::gh200_like();
         if let Some(name) = doc.get_str("", "name") {
@@ -349,7 +370,6 @@ impl ArchConfig {
         a.hbm.channel_gbps = getf("hbm", "channel_gbps", a.hbm.channel_gbps);
         a.hbm.request_overhead_ns = getf("hbm", "request_overhead_ns", a.hbm.request_overhead_ns);
         a.hbm.stream_efficiency = getf("hbm", "stream_efficiency", a.hbm.stream_efficiency);
-        a.validate()?;
         Ok(a)
     }
 }

@@ -8,6 +8,7 @@
 //! dit tune-workload --preset P --suite transformer   # batch-tune a suite
 //! dit dse       --workload serving [--spec FILE]     # hardware design-space sweep
 //! dit serve     --preset P --trace FILE [--cache DIR] # replay a schedule-request trace
+//! dit check     --config FILE [--spec FILE] [--trace FILE]  # static lint, zero simulations
 //! dit verify    --shape MxNxK [--grid RxC] [--schedule NAME]   # vs oracle
 //! dit fig       --id 7a|7b|7c|7d|8|9|10|11|12|1|table1  # regen a figure
 //! ```
@@ -72,7 +73,17 @@ pub fn parse_arch(spec: &str) -> Result<ArchConfig> {
         "gh200" => Ok(ArchConfig::gh200_like()),
         "a100" => Ok(ArchConfig::a100_like()),
         _ if spec.starts_with("tiny") => {
-            let n: usize = spec.trim_start_matches("tiny").parse().unwrap_or(4);
+            // Bare `tiny` means the 4x4 default; any other suffix must be
+            // a number. `unwrap_or(4)` here used to map typos like
+            // `tinyzzz` to a silently different machine.
+            let digits = &spec["tiny".len()..];
+            let n: usize = if digits.is_empty() {
+                4
+            } else {
+                digits.parse().with_context(|| {
+                    format!("unknown preset {spec:?} (tinyN takes a numeric grid size)")
+                })?
+            };
             let a = ArchConfig::tiny(n, n);
             a.validate().with_context(|| format!("invalid tiny grid {spec:?}"))?;
             Ok(a)
@@ -185,6 +196,9 @@ COMMANDS:
               [--prune bool] [--csv true] [--json FILE]  mesh, N = square sugar)
               [--prune-slack 0.05]                      roofline prune safety margin,
                                                         a fraction in [0, 0.5]
+              [--static-precheck bool]                  statically reject undeployable
+                                                        configs before simulating
+                                                        (default true)
               [--tiered true] [--top-k N] [--explore N] tiered per-config inner loop
               [--objectives perf,cost,energy]           3-axis frontier + projections
               [--weights 0.5,0.3,0.2]                   scalarized single winner
@@ -204,6 +218,12 @@ COMMANDS:
   cache       stats --cache FILE|DIR                    inspect a simulation cache
               clear --cache FILE|DIR                    delete it (+ stray temp files;
                                                         DIR = sharded serve cache)
+  check       [--preset P] [--config FILE,...]          static deployment checker:
+              [--spec FILE,...] [--shapes MxNxK,...]    lint configs, sweep specs and
+              [--suite NAME] [--trace FILE]             workloads with structured
+              [--json true]                             DIT-Exxx diagnostics; zero
+                                                        simulations, errors exit
+                                                        non-zero (warnings stay green)
   verify      --shape MxNxK [--grid N] [--schedule S]   functional vs golden oracle
               [--artifacts DIR] [--seed N]               (CPU reference if no PJRT)
   help                                                  this text
@@ -220,6 +240,8 @@ EXAMPLES:
   dit cache    stats --cache sweep.cache
   dit serve    --gen-trace traces/serve_zipf.txt --seed 7 --len 512
   dit serve    --preset tiny8 --trace traces/serve_zipf.txt --cache serve.cache --drain 4
+  dit check    --config configs/gh200.dit --spec configs/sweep_reduced.dit
+  dit check    --preset tiny8 --trace traces/serve_zipf.txt
   dit verify   --shape 128x128x128 --grid 4 --schedule splitk --splits 2
 ";
 
@@ -247,6 +269,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "tune-workload" => cmd_tune_workload(&args),
         "dse" => cmd_dse(&args),
         "serve" => cmd_serve(&args),
+        "check" => cmd_check(&args),
         "verify" => cmd_verify(&args),
         other => bail!("unknown command {other:?}; try `dit help`"),
     }
@@ -263,6 +286,11 @@ fn cmd_cache(action: &str, args: &Args) -> Result<()> {
     let sharded = std::path::Path::new(path).is_dir();
     match action {
         "stats" => {
+            // A path that is neither a shard directory nor a v1 cache
+            // file gets a DIT-E072 diagnostic, not zero-entry stats.
+            if !sharded {
+                probe_cache_v1(path)?;
+            }
             // A sharded directory aggregates per-shard caches; a plain
             // file is a one-element aggregate of itself.
             let shard_files: Vec<std::path::PathBuf> = if sharded {
@@ -350,6 +378,44 @@ fn cmd_cache(action: &str, args: &Args) -> Result<()> {
         }
         other => bail!("unknown cache action {other:?}; usage: dit cache <stats|clear>"),
     }
+}
+
+/// Refuse to "inspect" something that is not a simulation cache. A
+/// missing path, an unreadable file, or a file whose first line is not
+/// the v1 header used to fall through to `DiskCache::open` and print
+/// zero-entry stats for, say, a typo'd path — now it is a
+/// [`crate::analysis::codes::E072`] diagnostic.
+fn probe_cache_v1(path: &str) -> Result<()> {
+    use crate::analysis::{codes, Diag, Loc, Severity};
+    use crate::coordinator::cache::{FORMAT, VERSION};
+    use crate::util::json::Json;
+    let fail = |message: String| {
+        anyhow::anyhow!(
+            "{}",
+            Diag {
+                code: codes::E072.0,
+                name: codes::E072.1,
+                severity: Severity::Error,
+                loc: Loc::none(),
+                message,
+            }
+        )
+    };
+    let text = std::fs::read_to_string(path).map_err(|e| {
+        fail(format!("{path} is not a readable cache file or shard directory ({e})"))
+    })?;
+    let first = text.lines().next().unwrap_or("").trim();
+    let v1 = Json::parse(first).ok().is_some_and(|h| {
+        h.get("format").and_then(Json::as_str) == Some(FORMAT)
+            && h.get("version").and_then(Json::as_i64) == Some(VERSION)
+    });
+    if !v1 {
+        return Err(fail(format!(
+            "{path} is not a {FORMAT} v{VERSION} cache (header line is {first:?}); \
+             pass a cache .jsonl file or a sharded serve-cache directory"
+        )));
+    }
+    Ok(())
 }
 
 /// Replay a GEMM request trace through the schedule server (or, with
@@ -659,6 +725,9 @@ fn cmd_dse(args: &Args) -> Result<()> {
     if let Some(v) = args.get("prune-slack") {
         opts.prune_slack = v.parse().context("--prune-slack")?;
     }
+    if let Some(v) = args.get("static-precheck") {
+        opts.static_precheck = v.parse().context("--static-precheck")?;
+    }
     opts.policy = parse_policy(args)?;
     if let Some(path) = args.get("cache") {
         opts.cache_path = Some(path.into());
@@ -757,6 +826,180 @@ fn cmd_dse(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Statically lint architecture configs, sweep specs, presets, GEMM
+/// suites and request traces through [`crate::analysis`] — the CI lint
+/// gate. Runs zero simulations: every subject is checked closed-form
+/// and reported as structured `DIT-Exxx` diagnostics. Exits non-zero
+/// iff any subject has error-severity diagnostics; warnings alone stay
+/// green so advisory lints never block a pipeline.
+fn cmd_check(args: &Args) -> Result<()> {
+    use crate::analysis::{check_arch, check_workload, CheckReport};
+    use crate::util::json::Json;
+
+    let mut reports: Vec<CheckReport> = Vec::new();
+    for path in flag_paths(args, "config") {
+        reports.push(check_config_file(&path));
+    }
+    for path in flag_paths(args, "spec") {
+        reports.push(check_spec_file(&path));
+    }
+
+    // Workload-level subjects (--shapes/--suite/--trace) are checked
+    // against the --preset architecture; a bare `dit check --preset P`
+    // (or no flags at all) lints just the architecture.
+    let wants_workload =
+        args.get("shapes").is_some() || args.get("suite").is_some() || args.get("trace").is_some();
+    if wants_workload || args.get("preset").is_some() || reports.is_empty() {
+        let arch = parse_arch(args.get_or("preset", "gh200"))?;
+        if wants_workload {
+            let mut w = Workload::new(format!("workload on {}", arch.name));
+            if let Some(list) = args.get("shapes") {
+                for (i, spec) in list.split(',').enumerate() {
+                    w.push(format!("gemm{i}"), parse_shape(spec.trim())?, 1);
+                }
+            }
+            if let Some(name) = args.get("suite") {
+                let suite = Workload::builtin(name).with_context(|| {
+                    format!("unknown suite {name:?}; available: {:?}", Workload::builtin_names())
+                })?;
+                for item in suite.items {
+                    w.push(item.label, item.shape, item.count);
+                }
+            }
+            if let Some(path) = args.get("trace") {
+                for (i, shape) in
+                    crate::coordinator::shapedb::load_trace(path)?.into_iter().enumerate()
+                {
+                    w.push(format!("req{i}"), shape, 1);
+                }
+            }
+            reports.push(check_workload(&arch, &w));
+        } else {
+            reports.push(check_arch(&arch));
+        }
+    }
+
+    let errors: usize = reports.iter().map(|r| r.errors()).sum();
+    let warnings: usize = reports.iter().map(|r| r.warnings()).sum();
+    let json: bool = match args.get("json") {
+        Some(v) => v.parse().context("--json")?,
+        None => false,
+    };
+    if json {
+        let mut subjects = Json::arr();
+        for r in &reports {
+            subjects = subjects.push(r.to_json());
+        }
+        let out = Json::obj()
+            .field("subjects", subjects)
+            .field("errors", errors)
+            .field("warnings", warnings);
+        println!("{}", out.pretty());
+    } else {
+        for r in &reports {
+            print!("{}", r.render());
+        }
+        println!(
+            "checked    : {} subject{}, {errors} error{}, {warnings} warning{} (0 simulations)",
+            reports.len(),
+            if reports.len() == 1 { "" } else { "s" },
+            if errors == 1 { "" } else { "s" },
+            if warnings == 1 { "" } else { "s" },
+        );
+    }
+    anyhow::ensure!(errors == 0, "dit check found {errors} error(s)");
+    Ok(())
+}
+
+/// Split a comma-separated `--flag a,b,c` into its non-empty entries.
+fn flag_paths(args: &Args, key: &str) -> Vec<String> {
+    args.get(key)
+        .map(|list| {
+            list.split(',').map(str::trim).filter(|s| !s.is_empty()).map(String::from).collect()
+        })
+        .unwrap_or_default()
+}
+
+/// Lint one architecture config file. Unreadable files and syntax
+/// errors become a `DIT-E071` diagnostic; a file that parses gets the
+/// full [`crate::analysis::check_arch`] pass stack. That is why this
+/// goes through [`ArchConfig::from_text_unchecked`] — `from_text`'s
+/// trailing validate would collapse every semantic problem into one
+/// opaque parse error.
+fn check_config_file(path: &str) -> crate::analysis::CheckReport {
+    use crate::analysis::{check_arch, codes, CheckReport, Loc};
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            let mut rep = CheckReport::new(path);
+            rep.error(codes::E071, Loc::none(), format!("unreadable config: {e}"));
+            return rep;
+        }
+    };
+    match ArchConfig::from_text_unchecked(&text) {
+        Ok(arch) => {
+            let mut rep = check_arch(&arch);
+            rep.subject = format!("{path} ({})", arch.name);
+            rep
+        }
+        Err(e) => {
+            let mut rep = CheckReport::new(path);
+            rep.error(codes::E071, Loc::none(), format!("config does not parse: {e:#}"));
+            rep
+        }
+    }
+}
+
+/// Lint a sweep spec file: syntax errors are `DIT-E071`; every
+/// enumerated design point runs through the architecture pass stack;
+/// points the enumeration silently drops (validate failures) surface
+/// as one `DIT-W082` warning, so a typo'd axis cannot quietly shrink
+/// a sweep.
+fn check_spec_file(path: &str) -> crate::analysis::CheckReport {
+    use crate::analysis::{check_arch, codes, CheckReport, Loc};
+    let mut rep = CheckReport::new(path);
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            rep.error(codes::E071, Loc::none(), format!("unreadable sweep spec: {e}"));
+            return rep;
+        }
+    };
+    let spec = match SweepSpec::from_text(&text) {
+        Ok(s) => s,
+        Err(e) => {
+            rep.error(codes::E071, Loc::none(), format!("sweep spec does not parse: {e:#}"));
+            return rep;
+        }
+    };
+    let raw = spec.meshes.len()
+        * spec.ce.len()
+        * spec.spm_kib.len()
+        * spec.hbm_channel_gbps.len()
+        * spec.hbm_channels_pct.len()
+        * spec.dma_engines.len();
+    let configs = spec.enumerate();
+    rep.subject = format!("{path} ({}, {} design points)", spec.name, configs.len());
+    if configs.len() < raw {
+        rep.warn(
+            codes::W082,
+            Loc::none(),
+            format!(
+                "{} of {raw} swept design points fail validation and are silently \
+                 dropped from the sweep",
+                raw - configs.len()
+            ),
+        );
+    }
+    for a in &configs {
+        for mut d in check_arch(a).diags {
+            d.message = format!("{}: {}", a.name, d.message);
+            rep.diags.push(d);
+        }
+    }
+    rep
+}
+
 fn cmd_verify(args: &Args) -> Result<()> {
     let grid: usize = args.get_or("grid", "4").parse().context("--grid")?;
     let arch = ArchConfig::tiny(grid, grid);
@@ -810,6 +1053,8 @@ mod tests {
         assert_eq!((s.m, s.n, s.k), (4096, 2112, 7168));
         assert!(parse_shape("12x34").is_err());
         assert!(parse_shape("axbxc").is_err());
+        assert!(parse_shape("0x64x64").is_err(), "zero dims rejected at the boundary");
+        assert!(parse_shape("64x64x").is_err());
     }
 
     #[test]
@@ -864,6 +1109,9 @@ mod tests {
         // A tiny-grid sweep: two meshes of the tiny template, tiny suite.
         run(&argv("dse --base tiny4 --mesh 2,4 --workload tiny --wave 2 --workers 2")).unwrap();
         run(&argv("dse --base tiny4 --mesh 2 --workload tiny --csv true --prune false")).unwrap();
+        run(&argv("dse --base tiny4 --mesh 2 --workload tiny --static-precheck false")).unwrap();
+        assert!(run(&argv("dse --base tiny4 --mesh 2 --workload tiny --static-precheck maybe"))
+            .is_err());
         assert!(run(&argv("dse --workload nope")).is_err());
         assert!(run(&argv("dse --base tiny4 --mesh 0 --workload tiny")).is_err());
         assert!(run(&argv("dse --spec /no/such/file")).is_err());
@@ -947,6 +1195,105 @@ mod tests {
         assert!(run(&argv("cache")).is_err(), "stats without --cache");
         assert!(run(&argv("cache nuke --cache x")).is_err(), "unknown action");
         assert!(run(&argv("cache --cache x")).is_err(), "missing action");
+    }
+
+    #[test]
+    fn parse_arch_tiny_suffix_is_strict() {
+        // Bare `tiny` keeps the 4x4 default; a garbage suffix used to
+        // silently alias to it.
+        assert_eq!(parse_arch("tiny").unwrap().rows, 4);
+        let err = parse_arch("tinyzzz").unwrap_err();
+        assert!(format!("{err:#}").contains("tinyzzz"), "{err:#}");
+    }
+
+    #[test]
+    fn run_check_smoke() {
+        // Presets, ad-hoc shapes and built-in suites all lint clean
+        // (simulation-freedom is pinned by the `check` bench, where no
+        // concurrent test can race the global sim counter).
+        run(&argv("check")).unwrap();
+        run(&argv("check --preset tiny8")).unwrap();
+        run(&argv("check --preset tiny4 --shapes 64x64x64,128x96x256")).unwrap();
+        run(&argv("check --preset gh200 --suite transformer --json true")).unwrap();
+        assert!(run(&argv("check --preset nope")).is_err());
+        assert!(run(&argv("check --preset tiny4 --suite nope")).is_err());
+        assert!(run(&argv("check --preset tiny4 --trace /no/such/trace")).is_err());
+        assert!(run(&argv("check --json maybe")).is_err());
+        // A missing config is an E071 diagnostic and a non-zero exit.
+        assert!(run(&argv("check --config /no/such/config.dit")).is_err());
+    }
+
+    #[test]
+    fn check_config_file_reports_specific_codes() {
+        use crate::analysis::codes;
+        let dir = std::env::temp_dir();
+        let pid = std::process::id();
+        let good = dir.join(format!("dit-check-good-{pid}.dit"));
+        let broken = dir.join(format!("dit-check-broken-{pid}.dit"));
+        let garbled = dir.join(format!("dit-check-garbled-{pid}.dit"));
+        let text = ArchConfig::tiny(4, 4).to_text();
+        std::fs::write(&good, &text).unwrap();
+        std::fs::write(&broken, text.replace("rows = 4", "rows = 0")).unwrap();
+        std::fs::write(&garbled, "[grid\nrows = ]\n").unwrap();
+
+        run(&argv(&format!("check --config {}", good.display()))).unwrap();
+        // A semantically broken config earns its specific code — the
+        // whole point of parsing with `from_text_unchecked`.
+        let rep = check_config_file(&broken.display().to_string());
+        assert!(rep.has_code(codes::E001), "{}", rep.render());
+        assert!(run(&argv(&format!("check --config {}", broken.display()))).is_err());
+        // Syntax errors and missing files are E071.
+        let rep = check_config_file(&garbled.display().to_string());
+        assert!(rep.has_code(codes::E071), "{}", rep.render());
+        let rep = check_config_file("/no/such/config.dit");
+        assert!(rep.has_code(codes::E071), "{}", rep.render());
+        for p in [&good, &broken, &garbled] {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+
+    #[test]
+    fn check_spec_file_flags_dropped_points() {
+        use crate::analysis::codes;
+        let dir = std::env::temp_dir();
+        let pid = std::process::id();
+        let spec = dir.join(format!("dit-check-spec-{pid}.dit"));
+        // The 2 KiB SPM point fails validation (L1 floor is 4 KiB):
+        // enumerate() silently drops it, the checker warns W082.
+        std::fs::write(
+            &spec,
+            "[sweep]\nname = \"smoke\"\nmesh = [2]\nce_m = [16]\nce_n = [8]\nspm_kib = [2, 256]\n",
+        )
+        .unwrap();
+        let rep = check_spec_file(&spec.display().to_string());
+        assert!(rep.has_code(codes::W082), "{}", rep.render());
+        assert_eq!(rep.errors(), 0, "{}", rep.render());
+        // Warnings alone keep the gate green.
+        run(&argv(&format!("check --spec {}", spec.display()))).unwrap();
+        // A spec with no invalid points has nothing to warn about.
+        std::fs::write(&spec, "[sweep]\nname = \"smoke\"\nmesh = [2]\nspm_kib = 256\n").unwrap();
+        let rep = check_spec_file(&spec.display().to_string());
+        assert!(!rep.has_code(codes::W082), "{}", rep.render());
+        // Unparseable specs are E071.
+        std::fs::write(&spec, "[sweep]\nmesh = [0]\n").unwrap();
+        let rep = check_spec_file(&spec.display().to_string());
+        assert!(rep.has_code(codes::E071), "{}", rep.render());
+        let _ = std::fs::remove_file(&spec);
+    }
+
+    #[test]
+    fn run_cache_stats_rejects_foreign_files() {
+        // `cache stats` on something that is not a cache is a DIT-E072
+        // diagnostic, not zero-entry stats for a typo'd path.
+        let p = std::env::temp_dir().join(format!("dit-e072-{}.txt", std::process::id()));
+        std::fs::write(&p, "hello, not a cache\n").unwrap();
+        let err = run(&argv(&format!("cache stats --cache {}", p.display()))).unwrap_err();
+        assert!(format!("{err:#}").contains("DIT-E072"), "{err:#}");
+        let err = run(&argv("cache stats --cache /no/such/cache.jsonl")).unwrap_err();
+        assert!(format!("{err:#}").contains("DIT-E072"), "{err:#}");
+        // `clear` on a missing path stays a polite no-op.
+        run(&argv("cache clear --cache /no/such/cache.jsonl")).unwrap();
+        let _ = std::fs::remove_file(&p);
     }
 
     #[test]

@@ -314,7 +314,12 @@ pub fn gen_summa_over_systolic(ctx: &Ctx, g: usize) -> Vec<Program> {
                     s_col: phase,
                     m_col: g - 1,
                 };
-                debug_assert!(mask.covers_exactly(&members, rows, cols));
+                // Hard assert: a mask that over- or under-covers would
+                // silently broadcast to the wrong tile group in release.
+                assert!(
+                    mask.covers_exactly(&members, rows, cols),
+                    "phase-{phase} broadcast mask does not cover its member set"
+                );
                 let dsts: HashMap<TileCoord, BufId> = members
                     .iter()
                     .map(|&m| (m, grid.buf(m, "a_i", buf, a_bytes)))

@@ -173,7 +173,10 @@ pub fn gen(ctx: &Ctx) -> Vec<Program> {
                         }
                         for (m, op) in member_ops {
                             let (lr, lq) = plan.remap.to_logical(m);
-                            debug_assert_eq!(lr, s * p_dim + p);
+                            // Hard assert: a logical-row mismatch would
+                            // retarget the broadcast into another split's
+                            // slot and corrupt its accumulator silently.
+                            assert_eq!(lr, s * p_dim + p, "broadcast member row mismatch");
                             // Fix dst buffer for the actual member slot.
                             let dst = slots[s][p][lq].a_r[buf];
                             let op = retarget(op, dst);
@@ -246,7 +249,10 @@ pub fn gen(ctx: &Ctx) -> Vec<Program> {
                     let tag = ctx.tag();
                     for (ss, &m) in members.iter().enumerate() {
                         let slot = &mut slots[ss][p][q];
-                        debug_assert_eq!(slot.prog.tile, m);
+                        // Hard assert: pushing the Reduce onto a slot whose
+                        // program belongs to a different tile would deadlock
+                        // the collective at simulation time, far from here.
+                        assert_eq!(slot.prog.tile, m, "split-K reduce slot/tile mismatch");
                         // In-place reduction: the root's own C accumulator
                         // receives the combined sum at the barrier.
                         slot.prog.push(ep, Op::Reduce {

@@ -241,7 +241,7 @@ pub fn synthesize(tiles: &[TileCoord], rows: usize, cols: usize) -> Option<Mask>
 
 /// 1-D synthesis: find `(s, m)` with `{ x < extent | x & m == s }  == set`.
 fn synthesize_1d(set: &[usize], extent: usize) -> Option<(usize, usize)> {
-    debug_assert!(!set.is_empty());
+    assert!(!set.is_empty(), "synthesize_1d on an empty coordinate set");
     let full = full_mask(extent);
     // Bits that vary across the set must be 0 in the mask; bits constant
     // across the set should be 1 (checked) with selector = the constant.

@@ -147,6 +147,14 @@ pub struct WorkloadReport {
     /// enumeration, before any cache is consulted. Zero under
     /// [`TunePolicy::Exhaustive`].
     pub sims_saved: usize,
+    /// Candidates rejected by the static checker
+    /// ([`crate::analysis::check_schedule`]) before simulating during
+    /// this call. Rejected candidates are cached as undeployable (the
+    /// same negative-cache entry a failed simulation produces), so the
+    /// ranking is bit-identical to an ungated run. Always zero for
+    /// candidates produced by [`crate::schedule::candidates`], which
+    /// pre-filters — nonzero only for externally supplied schedules.
+    pub statically_rejected: usize,
     /// Closed-form latency estimates computed while ranking candidates
     /// during this call. Zero under [`TunePolicy::Exhaustive`].
     pub analytic_rank_calls: usize,
@@ -272,6 +280,7 @@ pub struct Engine {
     disk_hits: AtomicUsize,
     sims_saved: AtomicUsize,
     analytic_rank_calls: AtomicUsize,
+    static_rejects: AtomicUsize,
 }
 
 impl Engine {
@@ -292,6 +301,7 @@ impl Engine {
             disk_hits: AtomicUsize::new(0),
             sims_saved: AtomicUsize::new(0),
             analytic_rank_calls: AtomicUsize::new(0),
+            static_rejects: AtomicUsize::new(0),
         }
     }
 
@@ -384,6 +394,12 @@ impl Engine {
     /// Total closed-form ranking estimates over the engine's lifetime.
     pub fn analytic_rank_calls(&self) -> usize {
         self.analytic_rank_calls.load(Ordering::Relaxed)
+    }
+
+    /// Total candidates the static checker rejected before simulation
+    /// over the engine's lifetime ([`crate::analysis::check_schedule`]).
+    pub fn statically_rejected(&self) -> usize {
+        self.static_rejects.load(Ordering::Relaxed)
     }
 
     /// Cached simulation entries currently held in memory.
@@ -596,12 +612,20 @@ impl Engine {
 
         // Phase 2 — evaluate: workers pull jobs off a shared index; each
         // result lands in its job's own slot, so completion order is
-        // irrelevant to the merged output. Candidates that fail to lower
-        // are recorded as None (the serial path skips them identically).
+        // irrelevant to the merged output. Each job is first vetted by
+        // the static checker: a rejected candidate is recorded as None
+        // without entering the simulator — bit-identical to the ungated
+        // behavior, because checker-reject ⟺ the deployment would have
+        // failed to lower (the lockstep contract pinned by
+        // `crate::analysis`'s tests), and a failed lowering was already
+        // recorded as None. Candidates that pass the checker but fail to
+        // lower for any residual reason are still recorded as None (the
+        // serial path skips them identically).
         let workers = self.workers.min(jobs.len()).max(1);
         let results: Vec<Mutex<Option<Option<RunStats>>>> =
             (0..jobs.len()).map(|_| Mutex::new(None)).collect();
         let next = AtomicUsize::new(0);
+        let rejected = AtomicUsize::new(0);
         std::thread::scope(|s| {
             for _ in 0..workers {
                 s.spawn(|| {
@@ -616,6 +640,13 @@ impl Engine {
                             break;
                         }
                         let job = &jobs[i];
+                        if crate::analysis::check_schedule(arch, job.shape, &job.sched)
+                            .rejected()
+                        {
+                            rejected.fetch_add(1, Ordering::Relaxed);
+                            *results[i].lock().unwrap() = Some(None);
+                            continue;
+                        }
                         let stats =
                             simulate_schedule_in(arch, job.shape, &job.sched, &mut arena).ok();
                         self.sim_calls.fetch_add(1, Ordering::Relaxed);
@@ -624,6 +655,8 @@ impl Engine {
                 });
             }
         });
+        let rejected_this_call = rejected.into_inner();
+        self.static_rejects.fetch_add(rejected_this_call, Ordering::Relaxed);
 
         // Phase 3 — commit results to the cache in job (= enumeration)
         // order, mirroring every new entry (failures included — they are
@@ -693,10 +726,11 @@ impl Engine {
             workload: w.name.clone(),
             arch: arch.name.clone(),
             shapes,
-            sim_calls: jobs.len(),
+            sim_calls: jobs.len() - rejected_this_call,
             cache_hits: hits_this_call,
             disk_hits: disk_hits_this_call,
             sims_saved: saved_this_call,
+            statically_rejected: rejected_this_call,
             analytic_rank_calls: ranked_this_call,
             workers,
             elapsed_ms: t0.elapsed().as_secs_f64() * 1e3,
@@ -921,6 +955,22 @@ mod tests {
         drop(engine);
         drop(other);
         crate::coordinator::cache::ShardedDiskCache::clear(&dir).unwrap();
+    }
+
+    #[test]
+    fn checker_gate_rejects_nothing_on_enumerated_candidates() {
+        // `schedule::candidates` pre-filters to deployable schedules, so
+        // the phase-2 static gate must pass every enumerated candidate —
+        // the counters below pin that the gate never perturbs a normal
+        // tuning run (rejection is reserved for externally supplied
+        // schedules, exercised in tests/analysis.rs).
+        let arch = ArchConfig::tiny(4, 4);
+        let engine = Engine::new(&arch).with_workers(2);
+        let w = Workload::single("s", GemmShape::new(128, 128, 256));
+        let rep = engine.tune_workload(&w).unwrap();
+        assert_eq!(rep.statically_rejected, 0);
+        assert_eq!(engine.statically_rejected(), 0);
+        assert!(rep.sim_calls > 0, "accepted candidates still simulate");
     }
 
     #[test]

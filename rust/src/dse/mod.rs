@@ -478,6 +478,16 @@ pub struct DseOptions {
     pub cost: CostModel,
     /// Energy coefficient table (every point gets energy metrics from it).
     pub energy: EnergyModel,
+    /// Statically pre-prune configurations the deployment checker
+    /// ([`crate::analysis::check_workload`]) proves undeployable — a
+    /// shape with zero checker-accepted schedule candidates — before any
+    /// simulation. Rejected configs are recorded under
+    /// [`DseResult::infeasible`] with their first diagnostic and counted
+    /// in [`DseResult::statically_rejected`]. Sound by the checker's
+    /// lockstep contract: exactly these configs would have failed their
+    /// tuning call anyway, so evaluated points and winners are
+    /// bit-identical with the precheck off. On by default.
+    pub static_precheck: bool,
     /// The axes the caller cares about; governs prune soundness (above)
     /// and is echoed into [`DseResult::objectives`] for reporting.
     pub objectives: Vec<Objective>,
@@ -496,6 +506,7 @@ impl Default for DseOptions {
             config_parallelism: 4,
             prune: true,
             prune_slack: DEFAULT_PRUNE_SLACK,
+            static_precheck: true,
             cost: CostModel::default_proxy(),
             energy: EnergyModel::default_table(),
             objectives: vec![Objective::Perf, Objective::Cost],
@@ -583,6 +594,10 @@ pub struct DseResult {
     pub pruned: Vec<PrunedPoint>,
     /// Configs the tuner could not deploy at all (name, error).
     pub infeasible: Vec<(String, String)>,
+    /// Configs the static checker rejected before simulating
+    /// ([`DseOptions::static_precheck`]); each also appears in
+    /// `infeasible` with its first diagnostic.
+    pub statically_rejected: usize,
     /// Simulations actually executed across the sweep.
     pub sim_calls: usize,
     /// In-memory memo-cache hits across the sweep.
@@ -765,6 +780,7 @@ impl DseResult {
             .field("evaluated", self.points.len())
             .field("frontier_size", self.frontier().len())
             .field("frontier3_size", self.frontier3().len())
+            .field("statically_rejected", self.statically_rejected)
             .field("sim_calls", self.sim_calls)
             .field("cache_hits", self.cache_hits)
             .field("disk_hits", self.disk_hits)
@@ -807,6 +823,31 @@ pub fn run_sweep(spec: &SweepSpec, w: &Workload, opts: &DseOptions) -> Result<Ds
     );
     cands.sort_by(|x, y| x.1.total_cmp(&y.1).then_with(|| x.0.name.cmp(&y.0.name)));
 
+    // Static pre-prune: configs the checker proves undeployable skip the
+    // tuning waves entirely. Sound with the roofline prune too — pruning
+    // decisions only consult *measured* points, and a statically rejected
+    // config could never have produced one (its tuning call would have
+    // failed into `infeasible`).
+    let mut statically_rejected = 0usize;
+    let mut infeasible: Vec<(String, String)> = Vec::new();
+    if opts.static_precheck {
+        cands.retain(|(a, _, _)| {
+            let rep = crate::analysis::check_workload(a, w);
+            if !rep.rejected() {
+                return true;
+            }
+            statically_rejected += 1;
+            let first = rep
+                .diags
+                .iter()
+                .find(|d| d.severity == crate::analysis::Severity::Error)
+                .map(|d| d.to_string())
+                .unwrap_or_else(|| "statically rejected".into());
+            infeasible.push((a.name.clone(), first));
+            false
+        });
+    }
+
     let mut engine = Engine::new(&spec.base).with_policy(opts.policy);
     if opts.workers > 0 {
         engine = engine.with_workers(opts.workers);
@@ -823,7 +864,6 @@ pub fn run_sweep(spec: &SweepSpec, w: &Workload, opts: &DseOptions) -> Result<Ds
 
     let mut points: Vec<DsePoint> = Vec::new();
     let mut pruned: Vec<PrunedPoint> = Vec::new();
-    let mut infeasible: Vec<(String, String)> = Vec::new();
     let wave = opts.config_parallelism.max(1);
 
     let mut idx = 0usize;
@@ -919,6 +959,7 @@ pub fn run_sweep(spec: &SweepSpec, w: &Workload, opts: &DseOptions) -> Result<Ds
         points,
         pruned,
         infeasible,
+        statically_rejected,
         sim_calls: engine.sim_calls() - sim0,
         cache_hits: engine.cache_hits() - hits0,
         disk_hits: engine.disk_hits() - disk0,
@@ -1102,6 +1143,42 @@ mod tests {
         assert!(!o.prune_effective(), "energy axis disables the roofline prune");
         o.objectives = vec![Objective::Perf];
         assert!(o.prune_effective(), "perf-only keeps the prune");
+    }
+
+    #[test]
+    fn static_precheck_is_sound_and_counts() {
+        // One config the checker proves undeployable (4 KiB SPM cannot
+        // hold any candidate's accumulator panel) next to one that tunes
+        // fine: the precheck must reject exactly the former, and the
+        // evaluated points / winner must be bit-identical with it off.
+        let spec = SweepSpec {
+            name: "precheck".into(),
+            meshes: vec![(2, 2)],
+            ce: vec![(16, 8)],
+            spm_kib: vec![4, 256],
+            hbm_channel_gbps: vec![64.0],
+            hbm_channels_pct: vec![100],
+            dma_engines: vec![2],
+            base: ArchConfig::tiny(2, 2),
+        };
+        let w = Workload::single("s", crate::arch::GemmShape::new(256, 256, 512));
+        let on = DseOptions { prune: false, ..DseOptions::default() };
+        let off = DseOptions { static_precheck: false, ..on.clone() };
+        let a = run_sweep(&spec, &w, &on).unwrap();
+        let b = run_sweep(&spec, &w, &off).unwrap();
+        assert_eq!(a.statically_rejected, 1, "{:?}", a.infeasible);
+        assert_eq!(b.statically_rejected, 0);
+        assert!(a.infeasible[0].1.contains("DIT-E081"), "{}", a.infeasible[0].1);
+        assert_eq!(a.infeasible.len(), b.infeasible.len(), "{:?} vs {:?}", a.infeasible, b.infeasible);
+        assert_eq!(a.points.len(), b.points.len());
+        for (x, y) in a.points.iter().zip(&b.points) {
+            assert_eq!(x.arch.name, y.arch.name);
+            assert_eq!(x.tflops.to_bits(), y.tflops.to_bits());
+            assert_eq!(x.on_frontier, y.on_frontier);
+        }
+        assert_eq!(a.best().unwrap().arch.name, b.best().unwrap().arch.name);
+        let j = a.to_json().render();
+        assert!(j.contains("\"statically_rejected\":1"), "{j}");
     }
 
     #[test]

@@ -90,7 +90,13 @@ fn write_runs(hbm: &mut Preload, runs: &[Run], data: &[u8]) -> Result<()> {
 /// Naive-but-blocked f32 GEMM kernel: `c[m×n] += a[m×k] @ b[k×n]`.
 /// i-k-j loop order keeps the inner loop contiguous in both `b` and `c`.
 pub fn mmad_f32(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, k: usize) {
-    debug_assert!(a.len() >= m * k && b.len() >= k * n && c.len() >= m * n);
+    assert!(
+        a.len() >= m * k && b.len() >= k * n && c.len() >= m * n,
+        "mmad_f32 {m}x{n}x{k}: operand buffers too small ({}, {}, {})",
+        a.len(),
+        b.len(),
+        c.len()
+    );
     for i in 0..m {
         let arow = &a[i * k..(i + 1) * k];
         let crow = &mut c[i * n..(i + 1) * n];

@@ -165,7 +165,10 @@ impl MatrixLayout {
 
     /// Physical address of element `(r, c)`: `(channel, byte offset)`.
     pub fn addr_of(&self, r: usize, c: usize) -> (usize, u64) {
-        debug_assert!(r < self.rows && c < self.cols, "({r},{c}) out of bounds");
+        // Hard assert: the `/`/`%` arithmetic below maps an out-of-range
+        // coordinate onto a *different, valid* (channel, offset) pair, so
+        // a debug-only guard made silent aliasing the release behavior.
+        assert!(r < self.rows && c < self.cols, "({r},{c}) out of bounds");
         let (bm, bn) = self.block_dims();
         let (bi, bj) = (r / bm, c / bn);
         let (rr, cc) = (r % bm, c % bn);

@@ -7,6 +7,12 @@
 //! The crate contains everything the paper's system needs (see
 //! `DESIGN.md` for the inventory and substitution notes):
 //!
+//! * [`analysis`] — the static deployment checker: a pass manager over
+//!   `(arch, shape, schedule/deployment)` emitting structured
+//!   diagnostics with stable `DIT-Exxx` codes (SPM capacity, remap
+//!   geometry, HBM edge rule, chunking, dataflow compatibility, BSP
+//!   deadlock), zero simulations — the `dit check` lint and the
+//!   engine/DSE pre-validation gate.
 //! * [`arch`] — parametric SoftHier architecture descriptions (GH200-like,
 //!   A100-like, arbitrary grids) + config-file parsing, plus named GEMM
 //!   workload suites ([`arch::workload`]: transformer prefill/decode
@@ -46,6 +52,7 @@
 //! * [`util`] — zero-dependency substrates: config text parser, JSON
 //!   writer, PRNG, mini property-test harness.
 
+pub mod analysis;
 pub mod arch;
 pub mod cli;
 pub mod codegen;

@@ -123,10 +123,10 @@ pub fn workload_summary(rep: &crate::coordinator::engine::WorkloadReport) -> Tab
 /// so cache effectiveness is visible at a glance.
 pub fn workload_counters(rep: &crate::coordinator::engine::WorkloadReport) -> String {
     format!(
-        "engine     : {} simulations, {} saved by tiering, {} memo hits, {} disk hits, \
-         {} workers, {:.0} ms wall",
-        rep.sim_calls, rep.sims_saved, rep.cache_hits, rep.disk_hits, rep.workers,
-        rep.elapsed_ms
+        "engine     : {} simulations, {} statically rejected, {} saved by tiering, \
+         {} memo hits, {} disk hits, {} workers, {:.0} ms wall",
+        rep.sim_calls, rep.statically_rejected, rep.sims_saved, rep.cache_hits,
+        rep.disk_hits, rep.workers, rep.elapsed_ms
     )
 }
 
@@ -177,10 +177,10 @@ pub fn serve_counters(stats: &crate::coordinator::shapedb::ServeStats) -> String
 /// cache started with, so a resumed sweep is recognizable from the log.
 pub fn dse_counters(res: &crate::dse::DseResult) -> String {
     format!(
-        "engine     : {} simulations, {} saved by tiering, {} memo hits, {} disk hits \
-         ({} entries preloaded), {:.0} ms wall",
-        res.sim_calls, res.sims_saved, res.cache_hits, res.disk_hits, res.disk_loaded,
-        res.elapsed_ms
+        "engine     : {} simulations, {} configs statically rejected, {} saved by \
+         tiering, {} memo hits, {} disk hits ({} entries preloaded), {:.0} ms wall",
+        res.sim_calls, res.statically_rejected, res.sims_saved, res.cache_hits,
+        res.disk_hits, res.disk_loaded, res.elapsed_ms
     )
 }
 
@@ -438,6 +438,7 @@ mod tests {
                     cache_hits: 0,
                     disk_hits: 0,
                     sims_saved: 0,
+                    statically_rejected: 0,
                     analytic_rank_calls: 0,
                     workers: 1,
                     elapsed_ms: 0.0,
@@ -460,11 +461,13 @@ mod tests {
             disk_hits: 2,
             disk_loaded: 5,
             sims_saved: 4,
+            statically_rejected: 1,
             analytic_rank_calls: 12,
             elapsed_ms: 1.0,
         };
         let counters = dse_counters(&res);
         assert!(counters.contains("3 simulations"), "{counters}");
+        assert!(counters.contains("1 configs statically rejected"), "{counters}");
         assert!(counters.contains("2 disk hits (5 entries preloaded)"), "{counters}");
         let md = dse_summary(&res).markdown();
         assert!(md.contains("DSE sweep 'demo'"), "{md}");
@@ -524,12 +527,14 @@ mod tests {
             cache_hits: 0,
             disk_hits: 3,
             sims_saved: 2,
+            statically_rejected: 0,
             analytic_rank_calls: 6,
             workers: 2,
             elapsed_ms: 1.0,
         };
         let counters = workload_counters(&rep);
         assert!(counters.contains("1 simulations"), "{counters}");
+        assert!(counters.contains("0 statically rejected"), "{counters}");
         assert!(counters.contains("3 disk hits"), "{counters}");
         let md = workload_summary(&rep).markdown();
         assert!(md.contains("workload 'demo'"), "{md}");

@@ -28,10 +28,13 @@ pub fn is_pow2(x: usize) -> bool {
     x != 0 && x & (x - 1) == 0
 }
 
-/// log2 of a power of two.
+/// log2 of a power of two. Hard-asserts the precondition: on a
+/// non-power-of-two a release build would silently return
+/// `trailing_zeros` (e.g. `log2(12) == 2`) and corrupt every mask
+/// derived from it.
 #[inline]
 pub fn log2(x: usize) -> u32 {
-    debug_assert!(is_pow2(x));
+    assert!(is_pow2(x), "log2({x}): not a power of two");
     x.trailing_zeros()
 }
 

@@ -32,14 +32,16 @@ impl Rng {
 
     /// Uniform in `[0, n)`.
     pub fn below(&mut self, n: u64) -> u64 {
-        debug_assert!(n > 0);
+        assert!(n > 0, "below(0) is an empty range");
         // Modulo bias is irrelevant for test generation purposes.
         self.next_u64() % n
     }
 
-    /// Uniform usize in `[lo, hi]` inclusive.
+    /// Uniform usize in `[lo, hi]` inclusive. Hard-asserts `lo <= hi`:
+    /// in a release build the `hi - lo + 1` below would wrap and return
+    /// an arbitrary in-bounds-looking value instead of failing.
     pub fn range(&mut self, lo: usize, hi: usize) -> usize {
-        debug_assert!(lo <= hi);
+        assert!(lo <= hi, "range({lo}, {hi}): empty interval");
         lo + self.below((hi - lo + 1) as u64) as usize
     }
 

@@ -1,0 +1,284 @@
+//! Agreement suite for the static deployment checker.
+//!
+//! The checker's value rests on one contract: **accept ⟹ deployable and
+//! simulable, reject ⟺ the deployment pipeline itself would fail.** These
+//! tests pin that contract from outside the crate — randomized schedules
+//! through the quickprop harness, the full candidate enumeration, every
+//! committed preset and built-in suite (no false rejections), emitted
+//! deployments per dataflow family, and a hand-corrupted deployment that
+//! must be caught as a cross-superstep deadlock.
+
+use dit::analysis::{
+    check_arch, check_deployment, check_schedule, check_workload, codes, Severity,
+};
+use dit::arch::workload::Workload;
+use dit::arch::{ArchConfig, GemmShape};
+use dit::codegen::generate;
+use dit::coordinator::{self, deploy_chunked};
+use dit::ir::Op;
+use dit::schedule::{candidates, Dataflow, Schedule};
+use dit::util::quickprop::check;
+
+/// Random (arch, shape, schedule) triples — including deliberately
+/// broken ones (oversubscribed source grids, perturbed tk/stages) —
+/// must satisfy: `rejected()` exactly when `deploy_chunked` errors, and
+/// acceptance implies a panic-free simulation within physical bounds.
+/// Replay failures with `DIT_PROP_SEED` (see `util::quickprop`).
+#[test]
+fn prop_checker_agrees_with_deployment() {
+    check("checker/deploy agreement", 24, |rng| {
+        let grids = [(2usize, 2usize), (2, 4), (4, 4), (4, 2)];
+        let (r, c) = grids[rng.below(grids.len() as u64) as usize];
+        let arch = ArchConfig::tiny(r, c);
+        let shape = GemmShape::new(
+            rng.range(1, 16) * 8,
+            rng.range(1, 16) * 8,
+            rng.range(1, 8) * 32,
+        );
+        // Build from the target arch or a deliberately larger one (the
+        // oversubscription class), then perturb the knobs the checker
+        // models so both accept and reject branches are exercised.
+        let big = ArchConfig::tiny(8, 8);
+        let src = if rng.below(4) == 0 { &big } else { &arch };
+        let mut s = match rng.below(5) {
+            0 => Schedule::summa(src, shape),
+            1 => Schedule::baseline(src, shape),
+            2 => Schedule::systolic(src, shape),
+            3 => Schedule::splitk(src, shape, [1, 2, 4][rng.below(3) as usize]),
+            _ => Schedule::flat_remap(src, shape, [2, 4, 8][rng.below(3) as usize]),
+        };
+        match rng.below(6) {
+            0 => s.tk = [1, 8, 16, 64, 512][rng.below(5) as usize],
+            1 => s.pipeline_stages = rng.range(0, 5),
+            2 => s.double_buffer = !s.double_buffer,
+            _ => {}
+        }
+        let rep = check_schedule(&arch, shape, &s);
+        let deployed = deploy_chunked(&arch, shape, &s);
+        assert_eq!(
+            rep.rejected(),
+            deployed.is_err(),
+            "{} on {shape} ({r}x{c}): checker says {}, deploy says {}\n{}",
+            s.name(),
+            if rep.rejected() { "reject" } else { "accept" },
+            match &deployed {
+                Ok(_) => "deployable".to_string(),
+                Err(e) => format!("error ({e:#})"),
+            },
+            rep.render()
+        );
+        if let Ok(deps) = &deployed {
+            let stats = coordinator::simulate_chunked(&arch, deps)
+                .unwrap_or_else(|e| panic!("accepted {} failed to simulate: {e:#}", s.name()));
+            assert!(
+                stats.makespan_ns.is_finite() && stats.makespan_ns > 0.0,
+                "{}: makespan {}",
+                s.name(),
+                stats.makespan_ns
+            );
+            assert!(stats.utilization() <= 1.0 + 1e-9, "{}", s.name());
+            assert!(stats.hbm_utilization() <= 1.0 + 1e-9, "{}", s.name());
+        }
+    });
+}
+
+/// Everything `candidates()` enumerates is checker-accepted — the
+/// no-false-rejection half of the contract on the paths the engine
+/// actually tunes (this is what makes the engine's pre-simulation gate
+/// a no-op on enumerated candidates, and its counter zero).
+#[test]
+fn enumerated_candidates_are_never_rejected() {
+    let shapes = [
+        GemmShape::new(64, 64, 64),
+        GemmShape::new(128, 96, 256),
+        GemmShape::new(32, 264, 512),
+    ];
+    let mut checked = 0usize;
+    for (r, c) in [(2, 2), (4, 4), (2, 4)] {
+        let arch = ArchConfig::tiny(r, c);
+        for shape in shapes {
+            for s in candidates(&arch, shape) {
+                let rep = check_schedule(&arch, shape, &s);
+                assert!(
+                    !rep.rejected(),
+                    "{} on {shape} ({r}x{c}) falsely rejected:\n{}",
+                    s.name(),
+                    rep.render()
+                );
+                checked += 1;
+            }
+        }
+    }
+    assert!(checked >= 30, "candidate matrix shrank to {checked}");
+}
+
+/// The committed presets lint clean, and the built-in GEMM suites have
+/// deployable candidates on the machines they are meant for.
+#[test]
+fn presets_and_builtin_suites_lint_clean() {
+    for arch in [ArchConfig::gh200_like(), ArchConfig::a100_like(), ArchConfig::tiny(8, 8)] {
+        let rep = check_arch(&arch);
+        assert_eq!(rep.errors(), 0, "{}:\n{}", arch.name, rep.render());
+    }
+    let gh200 = ArchConfig::gh200_like();
+    for name in Workload::builtin_names() {
+        let w = Workload::builtin(name).unwrap();
+        let rep = check_workload(&gh200, &w);
+        assert_eq!(rep.errors(), 0, "suite {name} on gh200:\n{}", rep.render());
+    }
+    let tiny = ArchConfig::tiny(8, 8);
+    let rep = check_workload(&tiny, &Workload::builtin("tiny").unwrap());
+    assert_eq!(rep.errors(), 0, "tiny suite on tiny8:\n{}", rep.render());
+}
+
+/// A workload with no deployable candidate is rejected with `DIT-E081`
+/// naming the shape — the DSE pre-prune path.
+#[test]
+fn undeployable_workload_reports_e081() {
+    // 2x2 mesh squeezed to the 4 KiB L1 floor: no candidate fits a
+    // 4096-cube even after the chunking ladder.
+    let mut arch = ArchConfig::tiny(2, 2);
+    arch.tile.l1_bytes = 4096;
+    let w = Workload::single("s", GemmShape::new(4096, 4096, 4096));
+    let rep = check_workload(&arch, &w);
+    assert!(rep.has_code(codes::E081), "{}", rep.render());
+    let d = rep.diags.iter().find(|d| d.code == codes::E081.0).unwrap();
+    assert!(d.message.contains("4096x4096x4096"), "{}", d.message);
+}
+
+/// Post-emission audit: every deployment `codegen::generate` produces
+/// across the dataflow families passes the IR, deadlock and HBM-layout
+/// passes with zero errors.
+#[test]
+fn emitted_deployments_pass_the_checker() {
+    let arch = ArchConfig::tiny(4, 4);
+    let mut checked = 0usize;
+    for shape in [
+        GemmShape::new(64, 64, 64),
+        GemmShape::new(128, 96, 256),
+        GemmShape::new(32, 264, 512),
+    ] {
+        let scheds = [
+            Schedule::summa(&arch, shape),
+            Schedule::baseline(&arch, shape),
+            Schedule::systolic(&arch, shape),
+            Schedule::splitk(&arch, shape, 2),
+            Schedule::flat_remap(&arch, shape, 2),
+            Schedule {
+                dataflow: Dataflow::SystolicOverSumma { group: 2 },
+                ..Schedule::summa(&arch, shape)
+            },
+            Schedule {
+                dataflow: Dataflow::SummaOverSystolic { group: 2 },
+                ..Schedule::summa(&arch, shape)
+            },
+        ];
+        for sched in scheds {
+            // Undeployable combos are legitimate (and covered by the
+            // agreement property above); the audit concerns emitted IR.
+            let Ok(dep) = generate(&arch, shape, &sched, arch.elem_bytes) else {
+                continue;
+            };
+            let rep = check_deployment(&arch, &dep);
+            assert_eq!(rep.errors(), 0, "{} on {shape}:\n{}", sched.name(), rep.render());
+            checked += 1;
+        }
+    }
+    assert!(checked >= 10, "only {checked} deployable combos audited");
+}
+
+/// Moving one multicast receive leg a superstep later is the classic
+/// cross-barrier deadlock; the checker must flag it as `DIT-E045` with
+/// a per-superstep location and say where the stray partner sits.
+#[test]
+fn cross_superstep_rendezvous_is_flagged_as_deadlock() {
+    let arch = ArchConfig::tiny(4, 4);
+    let shape = GemmShape::new(64, 64, 128);
+    let mut dep = generate(&arch, shape, &Schedule::summa(&arch, shape), 4).unwrap();
+    let mut moved = false;
+    'outer: for p in &mut dep.programs {
+        for si in 0..p.steps.len() {
+            if let Some(pos) =
+                p.steps[si].ops.iter().position(|o| matches!(o, Op::RecvMulticast { .. }))
+            {
+                let op = p.steps[si].ops.remove(pos);
+                p.reserve_steps(si + 2);
+                p.steps[si + 1].ops.push(op);
+                moved = true;
+                break 'outer;
+            }
+        }
+    }
+    assert!(moved, "SUMMA deployment unexpectedly has no RecvMulticast");
+    let rep = check_deployment(&arch, &dep);
+    assert!(rep.has_code(codes::E045), "{}", rep.render());
+    let d = rep
+        .diags
+        .iter()
+        .find(|d| d.code == codes::E045.0)
+        .expect("deadlock diagnostic present");
+    assert_eq!(d.severity, Severity::Error);
+    assert!(d.message.contains("superstep"), "{}", d.message);
+    assert!(d.loc.superstep.is_some(), "deadlock diag carries its superstep");
+    // The "partner posted one barrier late" refinement names the stray step.
+    assert!(
+        rep.diags
+            .iter()
+            .any(|d| d.code == codes::E045.0 && d.message.contains("different barriers")),
+        "{}",
+        rep.render()
+    );
+}
+
+/// Every stable diagnostic code — code string and kebab name — appears
+/// in the README's "Diagnostic codes" table. Codes are user-facing API;
+/// an undocumented code is a doc bug.
+#[test]
+fn readme_documents_every_diagnostic_code() {
+    let readme = std::fs::read_to_string("README.md").expect("README.md");
+    for (code, name) in codes::ALL {
+        assert!(readme.contains(code), "README is missing {code}");
+        assert!(readme.contains(name), "README is missing the name {name} ({code})");
+    }
+}
+
+/// The committed config files stay in sync with the in-crate presets,
+/// and the files the CI lint lane feeds to `dit check` lint clean.
+#[test]
+fn committed_configs_match_presets_and_lint_clean() {
+    for (path, preset) in [
+        ("configs/gh200.dit", ArchConfig::gh200_like()),
+        ("configs/a100.dit", ArchConfig::a100_like()),
+        ("configs/tiny8.dit", ArchConfig::tiny(8, 8)),
+    ] {
+        let text = std::fs::read_to_string(path).unwrap_or_else(|e| panic!("{path}: {e}"));
+        let parsed =
+            ArchConfig::from_text(&text).unwrap_or_else(|e| panic!("{path}: {e:#}"));
+        assert_eq!(parsed, preset, "{path} drifted from its preset");
+        assert_eq!(check_arch(&parsed).errors(), 0, "{path} does not lint clean");
+    }
+    // The committed sweep spec parses, enumerates a non-empty design
+    // space, and drops no points (no DIT-W082 in the CI lint output).
+    let text = std::fs::read_to_string("configs/sweep_reduced.dit").expect("committed spec");
+    let spec = dit::dse::SweepSpec::from_text(&text).expect("sweep spec parses");
+    let configs = spec.enumerate();
+    assert_eq!(configs.len(), 10, "reduced sweep should enumerate 5 meshes x 2 SPM sizes");
+}
+
+/// Malformed user inputs across the boundary parsers error cleanly —
+/// never panic — and zero dimensions are stopped at the gate.
+#[test]
+fn malformed_inputs_error_cleanly() {
+    assert!(GemmShape::parse("axbxc").is_err());
+    assert!(GemmShape::parse("64x64").is_err());
+    assert!(GemmShape::parse("0x8x8").is_err(), "zero dims rejected");
+    assert!(GemmShape::parse("8x8x0").is_err());
+
+    assert!(dit::util::cfgtext::Doc::parse("[grid").is_err());
+    assert!(dit::util::cfgtext::Doc::parse("x = \"unterminated").is_err());
+    assert!(dit::util::cfgtext::Doc::parse("just some words").is_err());
+
+    assert!(dit::coordinator::shapedb::parse_trace("64x64x64\nnot-a-shape\n").is_err());
+    assert!(dit::coordinator::shapedb::parse_trace("# only comments\n").is_err());
+    assert!(dit::coordinator::shapedb::parse_trace("64x64x64\n0x4x4\n").is_err());
+}
