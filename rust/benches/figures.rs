@@ -23,6 +23,8 @@
 //! |        | (exact/neighbor hit rates, time-to-schedule percentiles)   |
 //! | check  | static deployment checker over every preset × built-in     |
 //! |        | suite (lint throughput; gates the zero-simulation contract)|
+//! | graph  | multi-op workload-graph fusion: attention-prefill SPM      |
+//! |        | residency + fused-vs-unfused HBM traffic contract          |
 //!
 //! Absolute numbers come from the analytical-contention SoftHier model and
 //! the calibrated GPU baselines (see DESIGN.md §Substitutions); the point
@@ -144,7 +146,7 @@ fn main() {
         Some(rest) => !rest.starts_with(|c: char| c.is_ascii_digit()),
         None => false,
     };
-    let figs: [(&str, fn(&mut Recorder)); 17] = [
+    let figs: [(&str, fn(&mut Recorder)); 18] = [
         ("table1", table1),
         ("fig1", fig1),
         ("fig7a", fig7a),
@@ -162,6 +164,7 @@ fn main() {
         ("tiered", tiered_bench),
         ("serve", serve_bench),
         ("check", check_bench),
+        ("graph", graph_bench),
     ];
     // A filter that selects nothing is a typo (or a stale CI list): fail
     // loudly rather than emit an empty artifact with exit code 0.
@@ -590,6 +593,26 @@ fn workload_bench(r: &mut Recorder) {
     println!("(repeated decode-step GEMMs are memoized — a serving mix tunes mostly from cache)");
     r.rec("workload", "aggregate_tflops", rep.aggregate_tflops(), true);
     r.rec("workload", "pass_time_us", rep.total_time_ns() / 1e3, false);
+}
+
+/// Multi-op workload-graph fusion: tune the builtin attention-prefill
+/// graph on the flagship preset and gate the SPM-residency contract —
+/// both chain intermediates must stay on-fabric and the fused pass must
+/// skip a material fraction of the edge-free lowering's HBM traffic.
+/// Tiered tuning keeps the simulation budget small; the pinned metrics
+/// are residency/traffic contracts, not throughput, so the policy choice
+/// is not itself gated.
+fn graph_bench(r: &mut Recorder) {
+    use dit::graph::WorkloadGraph;
+    let arch = ArchConfig::gh200_like();
+    let g = WorkloadGraph::builtin("attn-prefill").expect("builtin graph");
+    let engine = Engine::new(&arch).with_policy(TunePolicy::Tiered { top_k: 2, explore: 1 });
+    let rep = engine.tune_graph(&g).expect("tune_graph");
+    print!("\n{}", dit::report::graph_edges(&rep).markdown());
+    println!("{}", dit::report::graph_counters(&rep));
+    r.rec("graph", "hbm_saved_pct", rep.saved_pct(), true);
+    r.rec("graph", "resident_edges", rep.resident_edges() as f64, true);
+    r.rec("graph", "fused_hbm_mb", rep.fused_hbm_bytes as f64 / 1e6, false);
 }
 
 /// Record the gated simulator-throughput metric for one bench id from the

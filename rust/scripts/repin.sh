@@ -29,7 +29,7 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-cargo bench --bench figures -- table1 fig1 fig9 fig10 workload dse energy tiered serve check \
+cargo bench --bench figures -- table1 fig1 fig9 fig10 workload dse energy tiered serve check graph \
     --json BENCH_results.json
 cargo run --release --bin bench_gate -- --update
 cargo run --release --bin bench_gate -- \

@@ -37,6 +37,7 @@ use std::fmt;
 
 use crate::arch::workload::Workload;
 use crate::arch::{ArchConfig, GemmShape};
+use crate::graph::WorkloadGraph;
 use crate::ir::Deployment;
 use crate::schedule::Schedule;
 use crate::util::json::Json;
@@ -105,11 +106,17 @@ pub mod codes {
     pub const E081: Code = ("DIT-E081", "no-deployable-candidate");
     pub const W082: Code = ("DIT-W082", "spec-dropped-points");
 
+    // Workload-graph structure (mirrors `WorkloadGraph::validate`).
+    pub const E091: Code = ("DIT-E091", "graph-cycle");
+    pub const E092: Code = ("DIT-E092", "edge-shape-mismatch");
+    pub const E093: Code = ("DIT-E093", "graph-invalid");
+    pub const W094: Code = ("DIT-W094", "residency-spill");
+
     /// Every code, for uniqueness tests and the README table check.
     pub const ALL: &[Code] = &[
         E001, E002, E003, E004, E005, E006, E007, E008, W009, E011, W012, E013, E021, W022,
         E031, E032, W033, E041, E042, E043, E044, E045, E046, E047, E051, E052, E053, E054,
-        E055, E056, E057, E058, E059, E071, E072, E081, W082,
+        E055, E056, E057, E058, E059, E071, E072, E081, W082, E091, E092, E093, W094,
     ];
 }
 
@@ -304,11 +311,12 @@ pub struct Ctx<'a> {
     pub shape: Option<GemmShape>,
     pub sched: Option<&'a Schedule>,
     pub dep: Option<&'a Deployment>,
+    pub graph: Option<&'a WorkloadGraph>,
 }
 
 impl<'a> Ctx<'a> {
     pub fn arch_only(arch: &'a ArchConfig) -> Ctx<'a> {
-        Ctx { arch, shape: None, sched: None, dep: None }
+        Ctx { arch, shape: None, sched: None, dep: None, graph: None }
     }
 }
 
@@ -364,6 +372,12 @@ impl Checker {
             .with(passes::HbmLayoutLegality)
     }
 
+    /// Workload-graph pipeline: structure (DAG, edge shapes, counts,
+    /// arity) then SPM residency capacity.
+    pub fn for_graph() -> Checker {
+        Checker::for_arch().with(passes::GraphStructure).with(passes::EdgeResidency)
+    }
+
     pub fn run(&self, cx: &Ctx, subject: impl Into<String>) -> CheckReport {
         let mut rep = CheckReport::new(subject);
         for pass in &self.passes {
@@ -385,13 +399,13 @@ pub fn check_arch(arch: &ArchConfig) -> CheckReport {
 /// Lint a `(arch, shape, schedule)` triple. See the module docs for the
 /// hard-reject lockstep contract the engine relies on.
 pub fn check_schedule(arch: &ArchConfig, shape: GemmShape, sched: &Schedule) -> CheckReport {
-    let cx = Ctx { arch, shape: Some(shape), sched: Some(sched), dep: None };
+    let cx = Ctx { arch, shape: Some(shape), sched: Some(sched), dep: None, graph: None };
     Checker::for_schedule().run(&cx, format!("{} {} {}", arch.name, shape, sched.name()))
 }
 
 /// Lint a lowered deployment (post-emission IR contract).
 pub fn check_deployment(arch: &ArchConfig, dep: &Deployment) -> CheckReport {
-    let cx = Ctx { arch, shape: None, sched: None, dep: Some(dep) };
+    let cx = Ctx { arch, shape: None, sched: None, dep: Some(dep), graph: None };
     Checker::for_deployment().run(&cx, format!("{} {} {}", arch.name, dep.shape, dep.descr))
 }
 
@@ -420,6 +434,47 @@ pub fn check_workload(arch: &ArchConfig, w: &Workload) -> CheckReport {
                 format!(
                     "{}: none of the {} enumerated schedule candidates deploys on {}",
                     item.shape,
+                    cands.len(),
+                    arch.name
+                ),
+            );
+        }
+    }
+    rep
+}
+
+/// Lint a multi-op workload graph against an architecture: structural
+/// validity (acyclic, edge shape/count agreement, op arity — lockstep
+/// with [`WorkloadGraph::validate`]), SPM residency capacity per edge,
+/// and candidate coverage for every unique GEMM shape (the same E081
+/// contract [`check_workload`] enforces).
+pub fn check_graph(arch: &ArchConfig, g: &WorkloadGraph) -> CheckReport {
+    let cx = Ctx { arch, shape: None, sched: None, dep: None, graph: Some(g) };
+    let mut rep = Checker::for_graph().run(&cx, format!("{} graph {}", arch.name, g.name));
+    if rep.rejected() {
+        return rep;
+    }
+    rep.passes_run.push("candidate-coverage");
+    let mut seen: Vec<GemmShape> = Vec::new();
+    for op in &g.ops {
+        let crate::graph::OpKind::Gemm(shape) = op.kind else {
+            continue;
+        };
+        if seen.contains(&shape) {
+            continue;
+        }
+        seen.push(shape);
+        let cands = crate::schedule::candidates(arch, shape);
+        let accepted =
+            cands.iter().filter(|s| !check_schedule(arch, shape, s).rejected()).count();
+        if accepted == 0 {
+            rep.error(
+                codes::E081,
+                Loc::none(),
+                format!(
+                    "{} ({}): none of the {} enumerated schedule candidates deploys on {}",
+                    shape,
+                    op.label,
                     cands.len(),
                     arch.name
                 ),
@@ -612,5 +667,71 @@ mod tests {
         let rep = check_workload(&small, &w1);
         assert!(rep.rejected(), "{}", rep.render());
         assert!(rep.has_code(codes::E081), "{}", rep.render());
+    }
+
+    #[test]
+    fn graph_checker_rejects_iff_validate_rejects() {
+        use crate::graph::WorkloadGraph;
+        let arch = ArchConfig::tiny(4, 4);
+
+        // Clean builtins: validate Ok ⟺ checker accepts, zero errors.
+        for name in WorkloadGraph::builtin_names() {
+            let g = WorkloadGraph::builtin(name).unwrap();
+            let rep = check_graph(&arch, &g);
+            assert!(g.validate().is_ok());
+            assert!(!rep.rejected(), "{name}: {}", rep.render());
+            assert_eq!(rep.errors(), 0, "{name}: {}", rep.render());
+        }
+
+        // Cycle → E091.
+        let mut cyc = WorkloadGraph::new("cyc");
+        let a = cyc.add_gemm("a", GemmShape::new(64, 64, 64), 1);
+        let b = cyc.add_gemm("b", GemmShape::new(64, 64, 64), 1);
+        cyc.connect(a, b, "ab").unwrap();
+        cyc.connect(b, a, "ba").unwrap();
+        let rep = check_graph(&arch, &cyc);
+        assert!(cyc.validate().is_err());
+        assert!(rep.rejected() && rep.has_code(codes::E091), "{}", rep.render());
+
+        // Edge shape mismatch → E092.
+        let mut bad = WorkloadGraph::new("bad-shape");
+        let a = bad.add_gemm("a", GemmShape::new(64, 64, 32), 1);
+        let b = bad.add_gemm("b", GemmShape::new(128, 32, 64), 1);
+        bad.connect(a, b, "t").unwrap();
+        let rep = check_graph(&arch, &bad);
+        assert!(bad.validate().is_err());
+        assert!(rep.rejected() && rep.has_code(codes::E092), "{}", rep.render());
+
+        // Count mismatch: no specific mirror → E093 catch-all.
+        let mut cnt = WorkloadGraph::new("bad-count");
+        let a = cnt.add_gemm("a", GemmShape::new(64, 64, 32), 2);
+        let b = cnt.add_gemm("b", GemmShape::new(64, 32, 64), 3);
+        cnt.connect(a, b, "t").unwrap();
+        let rep = check_graph(&arch, &cnt);
+        assert!(cnt.validate().is_err());
+        assert!(rep.rejected() && rep.has_code(codes::E093), "{}", rep.render());
+    }
+
+    #[test]
+    fn graph_residency_capacity_warns_on_forced_spills() {
+        use crate::graph::WorkloadGraph;
+        // A 1024x1024 f32 intermediate over 4 tiles shares out to 1 MiB
+        // per tile — four times tiny's 256 KiB L1, so no tuning outcome
+        // can keep the edge resident.
+        let arch = ArchConfig::tiny(2, 2);
+        let mut g = WorkloadGraph::new("spilly");
+        let a = g.add_gemm("a", GemmShape::new(1024, 1024, 64), 1);
+        let b = g.add_gemm("b", GemmShape::new(1024, 64, 1024), 1);
+        g.connect(a, b, "wide").unwrap();
+        g.validate().unwrap();
+        let rep = check_graph(&arch, &g);
+        assert!(rep.has_code(codes::W094), "{}", rep.render());
+
+        // The builtin attention graph on the GH200 instance fuses: no
+        // spill warnings.
+        let attn = WorkloadGraph::builtin("attn-prefill").unwrap();
+        let rep = check_graph(&ArchConfig::gh200_like(), &attn);
+        assert!(!rep.has_code(codes::W094), "{}", rep.render());
+        assert_eq!(rep.errors(), 0, "{}", rep.render());
     }
 }

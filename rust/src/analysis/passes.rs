@@ -15,6 +15,7 @@ use std::collections::HashMap;
 use super::codes::*;
 use super::{CheckReport, Ctx, Loc, Pass};
 use crate::collective::{synthesize, Mask, TileCoord};
+use crate::graph::OpKind;
 use crate::ir::{IrError, Op, Program};
 use crate::schedule::remap::Remap;
 use crate::schedule::{l1_estimate, Dataflow};
@@ -674,6 +675,112 @@ impl Pass for HbmLayoutLegality {
                         ),
                     );
                 }
+            }
+        }
+    }
+}
+
+/// Mirrors [`crate::graph::WorkloadGraph::validate`]: cycles get
+/// `DIT-E091`, edge shape disagreements get `DIT-E092`, and every other
+/// structural violation (count mismatch along an edge, op arity,
+/// duplicate labels, self-edges) falls to the `DIT-E093` catch-all — so
+/// `rejected()` stays in exact lockstep with `validate` by construction.
+pub struct GraphStructure;
+
+impl Pass for GraphStructure {
+    fn name(&self) -> &'static str {
+        "graph-structure"
+    }
+
+    fn run(&self, cx: &Ctx, out: &mut CheckReport) {
+        let Some(g) = cx.graph else {
+            return;
+        };
+        let before = out.errors();
+        if let Err(e) = g.topo_order() {
+            out.error(E091, Loc::none(), format!("{e:#}"));
+        }
+        for e in &g.edges {
+            if e.from.0 >= g.ops.len() || e.to.0 >= g.ops.len() {
+                continue; // out-of-range edges fall to the catch-all
+            }
+            if let OpKind::Gemm(s) = g.op(e.to).kind {
+                if (e.tensor.rows, e.tensor.cols) != (s.m, s.k) {
+                    out.error(
+                        E092,
+                        Loc::none(),
+                        format!(
+                            "edge {:?}: producer {} output {}x{} does not match GEMM \
+                             {:?} A operand {}x{}",
+                            e.tensor.name,
+                            g.op(e.from).label,
+                            e.tensor.rows,
+                            e.tensor.cols,
+                            g.op(e.to).label,
+                            s.m,
+                            s.k
+                        ),
+                    );
+                }
+            }
+        }
+        // Lockstep catch-all: a validate clause with no mirror above.
+        if out.errors() == before {
+            if let Err(e) = g.validate() {
+                out.error(E093, Loc::none(), format!("{e:#}"));
+            }
+        }
+    }
+}
+
+/// SPM residency capacity per edge, judged *optimistically*: each GEMM
+/// endpoint is charged the minimum [`l1_estimate`] over its candidate
+/// enumeration. If even the leanest candidate pair cannot host the
+/// intermediate's per-tile share, no tuning outcome can keep the edge
+/// on-fabric — the fused path will spill it through HBM. Spilling is
+/// legal (the edge-free lowering always works), so this warns rather
+/// than rejects: `DIT-W094`.
+pub struct EdgeResidency;
+
+impl Pass for EdgeResidency {
+    fn name(&self) -> &'static str {
+        "edge-residency"
+    }
+
+    fn requires_clean(&self) -> bool {
+        true // needs a structurally valid graph (shapes, arity, DAG)
+    }
+
+    fn run(&self, cx: &Ctx, out: &mut CheckReport) {
+        let Some(g) = cx.graph else {
+            return;
+        };
+        let a = cx.arch;
+        let mut lean = |op: &crate::graph::GraphOp, shape: crate::arch::GemmShape| -> u64 {
+            crate::schedule::candidates(a, shape)
+                .iter()
+                .map(|s| l1_estimate(a, shape, s))
+                .min()
+                .unwrap_or(u64::MAX)
+        };
+        for e in &g.edges {
+            let share = crate::graph::tensor_share_bytes(a, &e.tensor);
+            let need_from = crate::graph::op_need_bytes(a, g, g.op(e.from), &mut lean);
+            let need_to = crate::graph::op_need_bytes(a, g, g.op(e.to), &mut lean);
+            if !crate::graph::edge_is_resident(a, share, need_from, need_to) {
+                out.warn(
+                    W094,
+                    Loc::none(),
+                    format!(
+                        "edge {:?} ({} -> {}) can never stay SPM-resident: \
+                         {share} B/tile share + working sets {need_from}/{need_to} B \
+                         exceed the {} B L1 — the fused path will spill it through HBM",
+                        e.tensor.name,
+                        g.op(e.from).label,
+                        g.op(e.to).label,
+                        a.tile.l1_bytes
+                    ),
+                );
             }
         }
     }

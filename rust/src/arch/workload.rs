@@ -133,30 +133,49 @@ impl Workload {
     /// Built-in suites for the CLI / benches. Model dimensions follow the
     /// paper's DeepSeek-V3-flavoured evaluation set (d_model = 7168, MoE
     /// expert FFN d_ff = 2048, 61 layers; `4096x7168x2048` is literally a
-    /// Fig. 9 shape).
+    /// Fig. 9 shape). Names and constructors live in one table
+    /// ([`BUILTINS`]) so the name list cannot drift from the dispatch.
     pub fn builtin(name: &str) -> Option<Workload> {
-        match name {
-            "prefill" => Some(Workload::transformer_prefill("prefill", 4096, 7168, 2048, 61)),
-            "decode" => Some(Workload::transformer_decode("decode", 64, 7168, 2048, 61)),
-            "transformer" => Some(Workload::transformer_serving(4096, 64, 2, 7168, 2048, 61)),
-            "tiny" => {
-                // Small suite that fits tiny test grids (smoke runs).
-                let mut w = Workload::new("tiny");
-                w.push("square", GemmShape::new(128, 128, 256), 1);
-                w.push("ragged", GemmShape::new(96, 66, 128), 1);
-                w.push("flat", GemmShape::new(16, 512, 512), 1);
-                w.push("square-again", GemmShape::new(128, 128, 256), 1);
-                Some(w)
-            }
-            _ => None,
-        }
+        BUILTINS.iter().find(|(n, _)| *n == name).map(|(_, f)| f())
     }
 
-    /// Names accepted by [`Workload::builtin`].
-    pub fn builtin_names() -> &'static [&'static str] {
-        &["prefill", "decode", "transformer", "tiny"]
+    /// Names accepted by [`Workload::builtin`], derived from the same
+    /// table the lookup uses.
+    pub fn builtin_names() -> Vec<&'static str> {
+        BUILTINS.iter().map(|(n, _)| *n).collect()
     }
 }
+
+fn builtin_prefill() -> Workload {
+    Workload::transformer_prefill("prefill", 4096, 7168, 2048, 61)
+}
+
+fn builtin_decode() -> Workload {
+    Workload::transformer_decode("decode", 64, 7168, 2048, 61)
+}
+
+fn builtin_transformer() -> Workload {
+    Workload::transformer_serving(4096, 64, 2, 7168, 2048, 61)
+}
+
+fn builtin_tiny() -> Workload {
+    // Small suite that fits tiny test grids (smoke runs).
+    let mut w = Workload::new("tiny");
+    w.push("square", GemmShape::new(128, 128, 256), 1);
+    w.push("ragged", GemmShape::new(96, 66, 128), 1);
+    w.push("flat", GemmShape::new(16, 512, 512), 1);
+    w.push("square-again", GemmShape::new(128, 128, 256), 1);
+    w
+}
+
+/// The single source of truth for builtin suites: `builtin()` dispatches
+/// through it and `builtin_names()` projects it.
+const BUILTINS: &[(&str, fn() -> Workload)] = &[
+    ("prefill", builtin_prefill),
+    ("decode", builtin_decode),
+    ("transformer", builtin_transformer),
+    ("tiny", builtin_tiny),
+];
 
 #[cfg(test)]
 mod tests {
@@ -200,6 +219,24 @@ mod tests {
             assert!(!w.items.is_empty(), "{name}");
         }
         assert!(Workload::builtin("nope").is_none());
+    }
+
+    #[test]
+    fn every_builtin_name_round_trips_through_the_table() {
+        // The registry is one table: every advertised name must resolve,
+        // the list must be duplicate-free, and nothing outside the list
+        // may resolve (guards against match-arm / name-list drift).
+        let names = Workload::builtin_names();
+        let mut uniq = names.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), names.len(), "duplicate builtin names");
+        for name in &names {
+            assert!(Workload::builtin(name).is_some(), "{name} does not resolve");
+        }
+        for bogus in ["", "prefill ", "Prefill", "tiny2"] {
+            assert!(Workload::builtin(bogus).is_none(), "{bogus:?} should not resolve");
+        }
     }
 
     #[test]

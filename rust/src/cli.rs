@@ -6,6 +6,7 @@
 //! dit simulate  --preset P --shape MxNxK [--schedule NAME] [--tk N] ...
 //! dit autotune  --preset P --shape MxNxK             # rank all candidates
 //! dit tune-workload --preset P --suite transformer   # batch-tune a suite
+//! dit tune-workload --preset P --graph attn-prefill  # tune a multi-op graph
 //! dit dse       --workload serving [--spec FILE]     # hardware design-space sweep
 //! dit serve     --preset P --trace FILE [--cache DIR] # replay a schedule-request trace
 //! dit check     --config FILE [--spec FILE] [--trace FILE]  # static lint, zero simulations
@@ -95,6 +96,21 @@ pub fn parse_arch(spec: &str) -> Result<ArchConfig> {
                 .with_context(|| format!("invalid architecture config {path:?}"))
         }
     }
+}
+
+/// Resolve a builtin workload-graph name or a `.graph` text file.
+pub fn parse_graph(spec: &str) -> Result<crate::graph::WorkloadGraph> {
+    use crate::graph::WorkloadGraph;
+    if let Some(g) = WorkloadGraph::builtin(spec) {
+        return Ok(g);
+    }
+    let text = std::fs::read_to_string(spec).with_context(|| {
+        format!(
+            "unknown builtin graph and unreadable file: {spec:?} (builtins: {:?})",
+            WorkloadGraph::builtin_names()
+        )
+    })?;
+    WorkloadGraph::from_text(&text).with_context(|| format!("invalid workload graph {spec:?}"))
 }
 
 /// Build a schedule from CLI flags.
@@ -189,6 +205,13 @@ COMMANDS:
               [--tiered true] [--top-k N] [--explore N] analytic-first tiering: rank
                                                         candidates closed-form, simulate
                                                         only the top-k + exploration band
+              [--graph NAME|FILE]                       tune a multi-op workload graph
+                                                        instead: co-tunes every GEMM op
+                                                        and classifies each edge as
+                                                        SPM-resident (fused, skips HBM)
+                                                        or spilled (builtin graphs:
+                                                        attn-prefill, attn-decode,
+                                                        mlp-chain)
   dse         [--workload serving|prefill|decode|tiny]  hardware design-space sweep:
               [--spec FILE] [--full true]               co-tune every config, print the
               [--base PRESET] [--mesh 8,16x4,4x16]      Pareto frontier over the chosen
@@ -221,9 +244,12 @@ COMMANDS:
   check       [--preset P] [--config FILE,...]          static deployment checker:
               [--spec FILE,...] [--shapes MxNxK,...]    lint configs, sweep specs and
               [--suite NAME] [--trace FILE]             workloads with structured
-              [--json true]                             DIT-Exxx diagnostics; zero
-                                                        simulations, errors exit
-                                                        non-zero (warnings stay green)
+              [--graph NAME|FILE,...]                   DIT-Exxx diagnostics; zero
+              [--json true]                             simulations, errors exit
+                                                        non-zero (warnings stay green);
+                                                        --graph lints multi-op workload
+                                                        graphs (structure, edge shapes,
+                                                        SPM residency)
   verify      --shape MxNxK [--grid N] [--schedule S]   functional vs golden oracle
               [--artifacts DIR] [--seed N]               (CPU reference if no PJRT)
   help                                                  this text
@@ -233,6 +259,7 @@ EXAMPLES:
   dit autotune --preset gh200 --shape 64x2112x7168
   dit tune-workload --preset gh200 --suite transformer
   dit tune-workload --preset gh200 --suite transformer --tiered true --top-k 4
+  dit tune-workload --preset gh200 --graph attn-prefill
   dit dse      --workload serving
   dit dse      --workload serving --tiered true        # analytic-first inner loop
   dit dse      --workload serving --objectives perf,cost,energy --weights 0.5,0.2,0.3
@@ -241,6 +268,7 @@ EXAMPLES:
   dit serve    --gen-trace traces/serve_zipf.txt --seed 7 --len 512
   dit serve    --preset tiny8 --trace traces/serve_zipf.txt --cache serve.cache --drain 4
   dit check    --config configs/gh200.dit --spec configs/sweep_reduced.dit
+  dit check    --preset gh200 --graph configs/attention_prefill.graph
   dit check    --preset tiny8 --trace traces/serve_zipf.txt
   dit verify   --shape 128x128x128 --grid 4 --schedule splitk --splits 2
 ";
@@ -582,9 +610,47 @@ fn cmd_autotune(args: &Args) -> Result<()> {
 }
 
 /// Batch-tune a named (or ad-hoc `--shapes`) GEMM suite on the parallel
-/// memoizing engine and print the per-shape + aggregate report.
+/// memoizing engine and print the per-shape + aggregate report. With
+/// `--graph` the subject is a multi-op [`crate::graph::WorkloadGraph`]
+/// instead: every GEMM op is co-tuned through the same engine and each
+/// edge is classified SPM-resident vs spilled, with the fused HBM
+/// traffic reported next to the edge-free lowering.
 fn cmd_tune_workload(args: &Args) -> Result<()> {
     let arch = parse_arch(args.get_or("preset", "gh200"))?;
+    if let Some(spec) = args.get("graph") {
+        anyhow::ensure!(
+            args.get("shapes").is_none() && args.get("suite").is_none(),
+            "--graph replaces --shapes/--suite; pass one or the other"
+        );
+        let g = parse_graph(spec)?;
+        let mut engine = Engine::new(&arch).with_policy(parse_policy(args)?);
+        if let Some(n) = args.get("workers") {
+            engine = engine.with_workers(n.parse().context("--workers")?);
+        }
+        if let Some(path) = args.get("cache") {
+            engine = engine.with_cache(path);
+        }
+        let grep = engine.tune_graph(&g)?;
+        print!("{}", crate::report::workload_summary(&grep.report).markdown());
+        print!("{}", crate::report::graph_edges(&grep).markdown());
+        println!(
+            "aggregate  : {} per pass, {:.1} TFLOP/s weighted over {} GEMM executions",
+            crate::util::human_time_ns(grep.report.total_time_ns()),
+            grep.report.aggregate_tflops(),
+            grep.report.total_count(),
+        );
+        println!("{}", crate::report::workload_counters(&grep.report));
+        println!("{}", crate::report::graph_counters(&grep));
+        if let Some(path) = args.get("cache") {
+            engine.flush_cache()?;
+            println!(
+                "cache file : {path} ({} entries, {} preloaded this run)",
+                engine.disk_len(),
+                engine.disk_loaded()
+            );
+        }
+        return Ok(());
+    }
     let workload = match args.get("shapes") {
         Some(list) => {
             let mut w = Workload::new("custom");
@@ -844,13 +910,21 @@ fn cmd_check(args: &Args) -> Result<()> {
         reports.push(check_spec_file(&path));
     }
 
-    // Workload-level subjects (--shapes/--suite/--trace) are checked
-    // against the --preset architecture; a bare `dit check --preset P`
-    // (or no flags at all) lints just the architecture.
+    // Workload-level subjects (--shapes/--suite/--trace/--graph) are
+    // checked against the --preset architecture; a bare `dit check
+    // --preset P` (or no flags at all) lints just the architecture.
+    let graph_specs = flag_paths(args, "graph");
     let wants_workload =
         args.get("shapes").is_some() || args.get("suite").is_some() || args.get("trace").is_some();
-    if wants_workload || args.get("preset").is_some() || reports.is_empty() {
+    if wants_workload
+        || !graph_specs.is_empty()
+        || args.get("preset").is_some()
+        || reports.is_empty()
+    {
         let arch = parse_arch(args.get_or("preset", "gh200"))?;
+        for spec in &graph_specs {
+            reports.push(check_graph_subject(&arch, spec));
+        }
         if wants_workload {
             let mut w = Workload::new(format!("workload on {}", arch.name));
             if let Some(list) = args.get("shapes") {
@@ -874,7 +948,7 @@ fn cmd_check(args: &Args) -> Result<()> {
                 }
             }
             reports.push(check_workload(&arch, &w));
-        } else {
+        } else if graph_specs.is_empty() {
             reports.push(check_arch(&arch));
         }
     }
@@ -945,6 +1019,43 @@ fn check_config_file(path: &str) -> crate::analysis::CheckReport {
         Err(e) => {
             let mut rep = CheckReport::new(path);
             rep.error(codes::E071, Loc::none(), format!("config does not parse: {e:#}"));
+            rep
+        }
+    }
+}
+
+/// Lint one workload-graph subject — a builtin graph name or a `.graph`
+/// text file. Unreadable/unparseable files become a `DIT-E071`
+/// diagnostic (the text parser validates, so a malformed graph is a
+/// parse error here; graphs built through the API get the structured
+/// `DIT-E09x` codes from [`crate::analysis::check_graph`]).
+fn check_graph_subject(arch: &ArchConfig, spec: &str) -> crate::analysis::CheckReport {
+    use crate::analysis::{check_graph, codes, CheckReport, Loc};
+    use crate::graph::WorkloadGraph;
+    if let Some(g) = WorkloadGraph::builtin(spec) {
+        return check_graph(arch, &g);
+    }
+    let text = match std::fs::read_to_string(spec) {
+        Ok(t) => t,
+        Err(e) => {
+            let mut rep = CheckReport::new(spec);
+            rep.error(
+                codes::E071,
+                Loc::none(),
+                format!("unknown builtin graph and unreadable file: {e}"),
+            );
+            return rep;
+        }
+    };
+    match WorkloadGraph::from_text(&text) {
+        Ok(g) => {
+            let mut rep = check_graph(arch, &g);
+            rep.subject = format!("{spec} ({})", g.name);
+            rep
+        }
+        Err(e) => {
+            let mut rep = CheckReport::new(spec);
+            rep.error(codes::E071, Loc::none(), format!("graph does not parse: {e:#}"));
             rep
         }
     }
@@ -1171,6 +1282,40 @@ mod tests {
                 .is_err(),
             "unreadable coefficient file"
         );
+    }
+
+    #[test]
+    fn run_tune_graph_smoke() {
+        run(&argv("tune-workload --preset tiny4 --graph attn-decode")).unwrap();
+        // Unknown graph names error with the builtin list, like suites do.
+        let err = run(&argv("tune-workload --preset tiny4 --graph nope")).unwrap_err();
+        assert!(format!("{err:#}").contains("attn-prefill"), "{err:#}");
+        // --graph and --suite/--shapes are mutually exclusive.
+        assert!(run(&argv("tune-workload --preset tiny4 --graph attn-decode --suite tiny"))
+            .is_err());
+        assert!(
+            run(&argv("tune-workload --preset tiny4 --graph attn-decode --shapes 64x64x64"))
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn run_check_graph_smoke() {
+        let path =
+            std::env::temp_dir().join(format!("dit-cli-graph-{}.graph", std::process::id()));
+        let p = path.to_string_lossy().into_owned();
+        // Builtin graph names and graph files are both accepted subjects.
+        run(&argv("check --preset tiny4 --graph attn-decode")).unwrap();
+        let g = crate::graph::WorkloadGraph::builtin("attn-decode").unwrap();
+        std::fs::write(&path, g.to_text()).unwrap();
+        run(&argv(&format!("check --preset tiny4 --graph {p}"))).unwrap();
+        run(&argv(&format!("tune-workload --preset tiny4 --graph {p}"))).unwrap();
+        // Missing and unparseable files are structured diagnostics that
+        // exit non-zero, not panics.
+        assert!(run(&argv("check --preset tiny4 --graph /no/such/file.graph")).is_err());
+        std::fs::write(&path, "graph broken\nop q gemm nope x1\n").unwrap();
+        assert!(run(&argv(&format!("check --preset tiny4 --graph {p}"))).is_err());
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

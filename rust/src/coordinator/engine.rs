@@ -30,8 +30,9 @@ use super::cache::{DiskCache, DiskKey, ShardedDiskCache};
 use super::{simulate_schedule_in, AutotuneResult, Scored};
 use crate::arch::workload::Workload;
 use crate::arch::{ArchConfig, GemmShape};
+use crate::graph::{OpKind, WorkloadGraph};
 use crate::ir::Deployment;
-use crate::schedule::{candidates, Schedule};
+use crate::schedule::{candidates, l1_estimate, Schedule};
 use crate::sim::{RunStats, SimArena};
 
 // The worker pool shares these across threads by reference; if a future
@@ -190,6 +191,70 @@ impl WorkloadReport {
     /// Total GEMM executions per pass (counts applied).
     pub fn total_count(&self) -> usize {
         self.shapes.iter().map(|s| s.count).sum()
+    }
+}
+
+/// Per-edge fusion outcome inside a [`GraphReport`].
+#[derive(Debug, Clone)]
+pub struct EdgeReport {
+    /// Intermediate tensor name (e.g. `scores`).
+    pub tensor: String,
+    /// Producer / consumer op labels.
+    pub from: String,
+    pub to: String,
+    /// Intermediate size at the architecture's element width.
+    pub tensor_bytes: u64,
+    /// Per-tile SPM share a resident intermediate occupies.
+    pub share_bytes: u64,
+    /// Whether the intermediate stays on-fabric
+    /// ([`crate::graph::edge_is_resident`] under the tuned working sets).
+    pub resident: bool,
+    /// HBM bytes one pass saves by keeping it resident (zero if spilled).
+    pub saved_hbm_bytes: u64,
+}
+
+/// Aggregate outcome of one [`Engine::tune_graph`] call: the per-GEMM
+/// tuning report (identical — schedules, cache keys, stats — to tuning
+/// the graph's edge-free lowering) plus the per-edge SPM-residency
+/// classification and its HBM traffic accounting.
+#[derive(Debug, Clone)]
+pub struct GraphReport {
+    pub graph: String,
+    pub arch: String,
+    /// The underlying per-GEMM tuning report (GEMM ops in graph order).
+    pub report: WorkloadReport,
+    pub edges: Vec<EdgeReport>,
+    /// Measured HBM bytes of one pass with every edge spilled — the
+    /// edge-free lowering: Σ count × (hbm_read + hbm_write) over each
+    /// op's best schedule.
+    pub unfused_hbm_bytes: u64,
+    /// HBM bytes of one pass after resident edges skip the intermediate
+    /// store + reload.
+    pub fused_hbm_bytes: u64,
+}
+
+impl GraphReport {
+    /// HBM bytes one fused pass saves vs the edge-free lowering.
+    pub fn saved_hbm_bytes(&self) -> u64 {
+        self.unfused_hbm_bytes - self.fused_hbm_bytes
+    }
+
+    /// Fraction of unfused traffic eliminated, in percent.
+    pub fn saved_pct(&self) -> f64 {
+        if self.unfused_hbm_bytes == 0 {
+            return 0.0;
+        }
+        self.saved_hbm_bytes() as f64 / self.unfused_hbm_bytes as f64 * 100.0
+    }
+
+    pub fn resident_edges(&self) -> usize {
+        self.edges.iter().filter(|e| e.resident).count()
+    }
+
+    /// Intermediate tensors that still round-trip through HBM (spilled
+    /// edges), by name. A resident edge never appears here.
+    pub fn hbm_transfers(&self) -> Vec<&str> {
+        self.edges.iter().filter(|e| !e.resident).map(|e| e.tensor.as_str()).collect()
     }
 }
 
@@ -476,6 +541,80 @@ impl Engine {
         let fp =
             if *arch == self.arch { self.arch_fp } else { arch_fingerprint(arch) };
         self.tune_on(arch, fp, w)
+    }
+
+    /// Tune a multi-op workload graph: tune every GEMM op exactly as the
+    /// edge-free lowering would (same candidate selection, same cache
+    /// keys, bit-identical schedules), then classify each edge as
+    /// SPM-resident or spilled under the *tuned* working sets and account
+    /// the HBM store + reload each resident intermediate skips.
+    ///
+    /// Co-tuning note: candidate selection is per-op, but residency is
+    /// judged against the winning schedules' actual L1 footprints
+    /// ([`crate::schedule::l1_estimate`]) on both endpoints — the shared
+    /// rule in [`crate::graph::edge_is_resident`], which
+    /// `perfmodel::analytic`'s chain estimate and the static checker's
+    /// graph pass apply identically.
+    pub fn tune_graph(&self, g: &WorkloadGraph) -> Result<GraphReport> {
+        g.validate()?;
+        let w = g.to_workload();
+        let report = self.tune_workload(&w)?;
+        let arch = &self.arch;
+
+        // `to_workload` emits GEMM ops in graph order, so the k-th GEMM
+        // op maps to the k-th shape result.
+        let mut shape_idx: HashMap<usize, usize> = HashMap::new();
+        for op in &g.ops {
+            if matches!(op.kind, OpKind::Gemm(_)) {
+                let next = shape_idx.len();
+                shape_idx.insert(op.id.0, next);
+            }
+        }
+        let mut tuned_need = |op: &crate::graph::GraphOp, shape: GemmShape| -> u64 {
+            let best = &report.shapes[shape_idx[&op.id.0]].result.best().schedule;
+            l1_estimate(arch, shape, best)
+        };
+
+        let mut edges = Vec::with_capacity(g.edges.len());
+        for e in &g.edges {
+            let share = crate::graph::tensor_share_bytes(arch, &e.tensor);
+            let need_from = crate::graph::op_need_bytes(arch, g, g.op(e.from), &mut tuned_need);
+            let need_to = crate::graph::op_need_bytes(arch, g, g.op(e.to), &mut tuned_need);
+            let resident = crate::graph::edge_is_resident(arch, share, need_from, need_to);
+            let saved =
+                if resident { crate::graph::edge_saved_bytes(arch, g, e) } else { 0 };
+            edges.push(EdgeReport {
+                tensor: e.tensor.name.clone(),
+                from: g.op(e.from).label.clone(),
+                to: g.op(e.to).label.clone(),
+                tensor_bytes: e.tensor.bytes(arch),
+                share_bytes: share,
+                resident,
+                saved_hbm_bytes: saved,
+            });
+        }
+
+        let unfused: u64 = report
+            .shapes
+            .iter()
+            .map(|s| {
+                let st = &s.result.best().stats;
+                s.count as u64 * (st.hbm_read_bytes + st.hbm_write_bytes)
+            })
+            .sum();
+        let saved: u64 = edges.iter().map(|e| e.saved_hbm_bytes).sum();
+        // Saved traffic is a strict subset of measured traffic: each
+        // resident edge only credits its GEMM endpoints, whose best runs
+        // read the full (padded ≥ logical) A and wrote the full C.
+        debug_assert!(saved <= unfused, "saved {saved} > measured {unfused}");
+        Ok(GraphReport {
+            graph: g.name.clone(),
+            arch: arch.name.clone(),
+            report,
+            edges,
+            unfused_hbm_bytes: unfused,
+            fused_hbm_bytes: unfused.saturating_sub(saved),
+        })
     }
 
     /// One shape's candidate selection under the engine's policy. The
@@ -999,5 +1138,61 @@ mod tests {
             Ok(_) => panic!("expected failure"),
             Err(e) => format!("{e:#}"),
         }
+    }
+
+    #[test]
+    fn graph_single_gemm_is_bit_identical_to_flat_tuning() {
+        // Acceptance contract: a degenerate (edge-free) single-GEMM graph
+        // goes through exactly the flat path — same schedules, same cache
+        // keys, same stats, bit for bit.
+        let arch = ArchConfig::tiny(4, 4);
+        let shape = GemmShape::new(128, 128, 256);
+        let flat_engine = Engine::new(&arch).with_workers(2);
+        let flat = flat_engine.tune(shape).unwrap();
+        let graph_engine = Engine::new(&arch).with_workers(2);
+        let g = WorkloadGraph::from_workload(&Workload::single("adhoc", shape));
+        let rep = graph_engine.tune_graph(&g).unwrap();
+        assert!(rep.edges.is_empty());
+        assert_eq!(rep.unfused_hbm_bytes, rep.fused_hbm_bytes);
+        let via_graph = &rep.report.shapes[0].result;
+        assert_eq!(via_graph.ranking.len(), flat.ranking.len());
+        for (p, s) in via_graph.ranking.iter().zip(&flat.ranking) {
+            assert_eq!(p.schedule, s.schedule);
+            assert_eq!(p.schedule.cache_key(), s.schedule.cache_key());
+            assert_eq!(p.stats.makespan_ns.to_bits(), s.stats.makespan_ns.to_bits());
+        }
+        // And the memo entries collide: re-tuning the flat workload on
+        // the graph engine is pure cache hits.
+        assert_eq!(graph_engine.tune(shape).unwrap().ranking.len(), flat.ranking.len());
+        assert_eq!(
+            graph_engine.sim_calls(),
+            flat_engine.sim_calls(),
+            "graph path must not add cache entries for a single GEMM"
+        );
+    }
+
+    #[test]
+    fn graph_fusion_saves_hbm_traffic_on_tiny_attention() {
+        let arch = ArchConfig::tiny(4, 4);
+        let g = WorkloadGraph::attention_prefill("attn", 64, 32, 2);
+        let engine = Engine::new(&arch).with_workers(2);
+        let rep = engine.tune_graph(&g).unwrap();
+        // 64x64 f32 scores over 16 tiles share out to 1 KiB/tile — far
+        // under the 256 KiB L1 even with both GEMM working sets, so both
+        // edges stay resident.
+        assert_eq!(rep.resident_edges(), 2, "edges: {:?}", rep.edges);
+        assert!(rep.hbm_transfers().is_empty());
+        assert!(
+            rep.fused_hbm_bytes < rep.unfused_hbm_bytes,
+            "fused {} !< unfused {}",
+            rep.fused_hbm_bytes,
+            rep.unfused_hbm_bytes
+        );
+        // Each edge credits exactly one GEMM endpoint (the other side is
+        // softmax glue): scores skips qk's C store, probs skips av's A
+        // load — 64*64*4 bytes x count 2, per edge.
+        let per_edge = 64 * 64 * 4 * 2;
+        assert_eq!(rep.saved_hbm_bytes(), 2 * per_edge);
+        assert!(rep.saved_pct() > 0.0 && rep.saved_pct() < 100.0);
     }
 }

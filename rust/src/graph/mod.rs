@@ -1,0 +1,723 @@
+//! Multi-op workload graphs — the program IR above single GEMMs.
+//!
+//! `arch::workload::Workload` is a flat list of independent GEMMs; a real
+//! transformer block is a *chain*: QK^T feeds softmax feeds PV, and the
+//! MLP's up-projection feeds an activation feeds the down-projection. A
+//! [`WorkloadGraph`] names that structure — GEMM ops plus softmax /
+//! elementwise glue, connected by named intermediate tensors — so the
+//! tuning engine can decide per edge whether the intermediate stays
+//! **SPM-resident** (producer's output is left on-fabric and consumed in
+//! place, skipping the HBM store *and* the compulsory reload) or is
+//! **spilled** through HBM like the flat path always does.
+//!
+//! Design notes:
+//!
+//! * A plain [`Workload`] round-trips losslessly as a degenerate edge-free
+//!   graph ([`WorkloadGraph::from_workload`] / [`WorkloadGraph::to_workload`]),
+//!   so the graph path reuses the engine's cache keys and produces
+//!   bit-identical schedules for single-GEMM programs.
+//! * Residency is decided per edge with one shared rule
+//!   ([`edge_is_resident`]): the intermediate's per-tile share
+//!   ([`tensor_share_bytes`]) must fit in L1 *alongside both endpoints'*
+//!   working sets. The engine applies it with tuned schedules; the static
+//!   checker (`analysis`) applies it optimistically over all candidates.
+//! * The saved-traffic arithmetic ([`edge_saved_bytes`]) is defined here
+//!   once and used by both the engine's measured report and
+//!   `perfmodel::analytic`'s chain estimate, so the two agree exactly.
+//!
+//! Non-GEMM ops carry no FLOPs in the performance model — softmax and
+//! elementwise glue are bandwidth-trivial next to their neighbouring GEMMs
+//! — but they anchor edges, force shape agreement, and (functionally) run
+//! on the host oracle via [`softmax_rows`].
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::arch::workload::Workload;
+use crate::arch::{ArchConfig, GemmShape};
+
+/// Index of an op within its graph (position in [`WorkloadGraph::ops`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct OpId(pub usize);
+
+/// What an op computes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OpKind {
+    /// A GEMM of the given logical shape; the op's output tensor is M×N.
+    Gemm(GemmShape),
+    /// Row-wise softmax over its single input; output has the input's dims.
+    Softmax,
+    /// Pointwise map over its single input (activation, scale, mask);
+    /// output has the input's dims.
+    Elementwise,
+}
+
+impl OpKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpKind::Gemm(_) => "gemm",
+            OpKind::Softmax => "softmax",
+            OpKind::Elementwise => "elementwise",
+        }
+    }
+}
+
+/// A named intermediate tensor flowing along an edge, with its logical
+/// (unpadded) dimensions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorRef {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl TensorRef {
+    /// Total bytes at the architecture's element width.
+    pub fn bytes(&self, arch: &ArchConfig) -> u64 {
+        (self.rows * self.cols * arch.elem_bytes) as u64
+    }
+}
+
+/// One op in a workload graph.
+#[derive(Debug, Clone)]
+pub struct GraphOp {
+    pub id: OpId,
+    /// Human-readable role, e.g. `attn/qk`.
+    pub label: String,
+    pub kind: OpKind,
+    /// Executions per workload pass (e.g. once per layer or head). Edges
+    /// may only connect ops with equal counts — a fused chain executes as
+    /// a unit.
+    pub count: usize,
+}
+
+/// A directed producer → consumer edge carrying a named intermediate.
+#[derive(Debug, Clone)]
+pub struct GraphEdge {
+    pub from: OpId,
+    pub to: OpId,
+    pub tensor: TensorRef,
+}
+
+/// A small multi-op program: GEMMs plus softmax/elementwise glue with
+/// named intermediate edges. See the module docs for the contract.
+#[derive(Debug, Clone)]
+pub struct WorkloadGraph {
+    pub name: String,
+    pub ops: Vec<GraphOp>,
+    pub edges: Vec<GraphEdge>,
+}
+
+impl WorkloadGraph {
+    pub fn new(name: impl Into<String>) -> WorkloadGraph {
+        WorkloadGraph { name: name.into(), ops: Vec::new(), edges: Vec::new() }
+    }
+
+    fn add_op(&mut self, label: impl Into<String>, kind: OpKind, count: usize) -> OpId {
+        let id = OpId(self.ops.len());
+        self.ops.push(GraphOp { id, label: label.into(), kind, count });
+        id
+    }
+
+    pub fn add_gemm(&mut self, label: impl Into<String>, shape: GemmShape, count: usize) -> OpId {
+        self.add_op(label, OpKind::Gemm(shape), count)
+    }
+
+    pub fn add_softmax(&mut self, label: impl Into<String>, count: usize) -> OpId {
+        self.add_op(label, OpKind::Softmax, count)
+    }
+
+    pub fn add_elementwise(&mut self, label: impl Into<String>, count: usize) -> OpId {
+        self.add_op(label, OpKind::Elementwise, count)
+    }
+
+    pub fn op(&self, id: OpId) -> &GraphOp {
+        &self.ops[id.0]
+    }
+
+    /// The dimensions of an op's output tensor: M×N for a GEMM, the input
+    /// dims for softmax/elementwise (which need an incoming edge first).
+    pub fn output_dims(&self, id: OpId) -> Option<(usize, usize)> {
+        match self.op(id).kind {
+            OpKind::Gemm(s) => Some((s.m, s.n)),
+            OpKind::Softmax | OpKind::Elementwise => self
+                .edges
+                .iter()
+                .find(|e| e.to == id)
+                .map(|e| (e.tensor.rows, e.tensor.cols)),
+        }
+    }
+
+    /// Connect `from`'s output to `to` as a named intermediate. The tensor
+    /// dims are derived from the producer's output at call time, so wire
+    /// chains front-to-back.
+    pub fn connect(&mut self, from: OpId, to: OpId, tensor: impl Into<String>) -> Result<()> {
+        ensure!(from.0 < self.ops.len(), "edge source {from:?} out of range");
+        ensure!(to.0 < self.ops.len(), "edge target {to:?} out of range");
+        let name = tensor.into();
+        let (rows, cols) = self.output_dims(from).ok_or_else(|| {
+            anyhow::anyhow!(
+                "op {:?} has no derivable output dims (non-GEMM ops need an \
+                 incoming edge before they can produce)",
+                self.op(from).label
+            )
+        })?;
+        self.edges.push(GraphEdge { from, to, tensor: TensorRef { name, rows, cols } });
+        Ok(())
+    }
+
+    /// Ops in a stable topological order (ready ops taken in id order), or
+    /// an error naming the ops stuck on a cycle.
+    pub fn topo_order(&self) -> Result<Vec<OpId>> {
+        let n = self.ops.len();
+        let mut indeg = vec![0usize; n];
+        for e in &self.edges {
+            indeg[e.to.0] += 1;
+        }
+        let mut order = Vec::with_capacity(n);
+        let mut ready: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        while let Some(i) = ready.first().copied() {
+            ready.remove(0);
+            order.push(OpId(i));
+            for e in self.edges.iter().filter(|e| e.from.0 == i) {
+                indeg[e.to.0] -= 1;
+                if indeg[e.to.0] == 0 {
+                    // Keep the ready set sorted so the order is stable.
+                    let pos = ready.binary_search(&e.to.0).unwrap_or_else(|p| p);
+                    ready.insert(pos, e.to.0);
+                }
+            }
+        }
+        if order.len() != n {
+            let stuck: Vec<&str> = (0..n)
+                .filter(|&i| indeg[i] > 0)
+                .map(|i| self.ops[i].label.as_str())
+                .collect();
+            bail!("workload graph {:?} has a cycle through {:?}", self.name, stuck);
+        }
+        Ok(order)
+    }
+
+    /// Structural validation: edges in range, acyclic, unique labels,
+    /// counts agree along edges, non-GEMM ops have exactly one input, a
+    /// GEMM consumes at most one fused input (its A operand) and the
+    /// producer's dims must match that operand (M×K). `analysis`'s graph
+    /// pass mirrors these clauses as `DIT-E` diagnostics.
+    pub fn validate(&self) -> Result<()> {
+        for (i, op) in self.ops.iter().enumerate() {
+            ensure!(op.id.0 == i, "op {:?} id {:?} != position {i}", op.label, op.id);
+            ensure!(op.count > 0, "op {:?} has zero count", op.label);
+        }
+        let mut labels: Vec<&str> = self.ops.iter().map(|o| o.label.as_str()).collect();
+        labels.sort_unstable();
+        labels.dedup();
+        ensure!(labels.len() == self.ops.len(), "graph {:?} has duplicate op labels", self.name);
+        for e in &self.edges {
+            ensure!(e.from.0 < self.ops.len(), "edge source {:?} out of range", e.from);
+            ensure!(e.to.0 < self.ops.len(), "edge target {:?} out of range", e.to);
+            ensure!(e.from != e.to, "op {:?} feeds itself", self.op(e.from).label);
+            ensure!(
+                self.op(e.from).count == self.op(e.to).count,
+                "edge {:?}: producer {:?} count {} != consumer {:?} count {} (a fused \
+                 chain executes as a unit)",
+                e.tensor.name,
+                self.op(e.from).label,
+                self.op(e.from).count,
+                self.op(e.to).label,
+                self.op(e.to).count
+            );
+        }
+        self.topo_order()?;
+        for op in &self.ops {
+            let incoming: Vec<&GraphEdge> = self.edges.iter().filter(|e| e.to == op.id).collect();
+            match op.kind {
+                OpKind::Gemm(s) => {
+                    ensure!(
+                        incoming.len() <= 1,
+                        "GEMM {:?} has {} fused inputs; only the A operand can be \
+                         consumed from an on-fabric producer",
+                        op.label,
+                        incoming.len()
+                    );
+                    if let Some(e) = incoming.first() {
+                        ensure!(
+                            (e.tensor.rows, e.tensor.cols) == (s.m, s.k),
+                            "edge {:?}: producer output {}x{} does not match GEMM \
+                             {:?} A operand {}x{}",
+                            e.tensor.name,
+                            e.tensor.rows,
+                            e.tensor.cols,
+                            op.label,
+                            s.m,
+                            s.k
+                        );
+                    }
+                }
+                OpKind::Softmax | OpKind::Elementwise => {
+                    ensure!(
+                        incoming.len() == 1,
+                        "{} op {:?} needs exactly one input, has {}",
+                        op.kind.name(),
+                        op.label,
+                        incoming.len()
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The GEMM ops lowered to a flat [`Workload`] (graph name, op order,
+    /// labels and counts preserved). For a graph built by
+    /// [`WorkloadGraph::from_workload`] this reproduces the original
+    /// workload exactly, which is what keeps the graph-backed tuning path
+    /// bit-identical (same shapes, labels, and cache keys) for edge-free
+    /// programs.
+    pub fn to_workload(&self) -> Workload {
+        let mut w = Workload::new(self.name.clone());
+        for op in &self.ops {
+            if let OpKind::Gemm(shape) = op.kind {
+                w.push(op.label.clone(), shape, op.count);
+            }
+        }
+        w
+    }
+
+    /// Lift a flat workload into a degenerate (edge-free) graph: one GEMM
+    /// op per item, in order.
+    pub fn from_workload(w: &Workload) -> WorkloadGraph {
+        let mut g = WorkloadGraph::new(w.name.clone());
+        for item in &w.items {
+            g.add_gemm(item.label.clone(), item.shape, item.count);
+        }
+        g
+    }
+
+    /// Total FLOPs of one graph pass (GEMM ops only, counts applied).
+    pub fn total_flops(&self) -> f64 {
+        self.to_workload().total_flops()
+    }
+
+    /// Render to the committed text format (round-trips via
+    /// [`WorkloadGraph::from_text`]).
+    pub fn to_text(&self) -> String {
+        let mut out = format!("graph {}\n", self.name);
+        for op in &self.ops {
+            match op.kind {
+                OpKind::Gemm(s) => {
+                    out.push_str(&format!("op {} gemm {} x{}\n", op.label, s, op.count))
+                }
+                OpKind::Softmax | OpKind::Elementwise => {
+                    out.push_str(&format!("op {} {} x{}\n", op.label, op.kind.name(), op.count))
+                }
+            }
+        }
+        for e in &self.edges {
+            out.push_str(&format!(
+                "edge {} -> {} {}\n",
+                self.op(e.from).label,
+                self.op(e.to).label,
+                e.tensor.name
+            ));
+        }
+        out
+    }
+
+    /// Parse the text format:
+    ///
+    /// ```text
+    /// # comment
+    /// graph attn-prefill
+    /// op qk gemm 512x512x64 x32
+    /// op smax softmax x32
+    /// op av gemm 512x64x512 x32
+    /// edge qk -> smax scores
+    /// edge smax -> av probs
+    /// ```
+    ///
+    /// `xN` count suffixes are optional (default 1). The result is
+    /// [`validate`](WorkloadGraph::validate)d before being returned.
+    pub fn from_text(text: &str) -> Result<WorkloadGraph> {
+        let mut g: Option<WorkloadGraph> = None;
+        let mut by_label: BTreeMap<String, OpId> = BTreeMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            let at = |msg: &str| anyhow::anyhow!("line {}: {msg}: {raw:?}", lineno + 1);
+            match toks[0] {
+                "graph" => {
+                    ensure!(toks.len() == 2, at("expected `graph NAME`"));
+                    ensure!(g.is_none(), at("duplicate `graph` header"));
+                    g = Some(WorkloadGraph::new(toks[1]));
+                }
+                "op" => {
+                    let g = g.as_mut().ok_or_else(|| at("`op` before `graph` header"))?;
+                    ensure!(toks.len() >= 3, at("expected `op LABEL KIND [SHAPE] [xN]`"));
+                    let label = toks[1];
+                    let parse_count = |tok: Option<&&str>| -> Result<usize> {
+                        match tok {
+                            None => Ok(1),
+                            Some(t) => {
+                                let n = t
+                                    .strip_prefix('x')
+                                    .ok_or_else(|| at("count must look like `x32`"))?;
+                                Ok(n.parse::<usize>().map_err(|_| at("bad count"))?)
+                            }
+                        }
+                    };
+                    let id = match toks[2] {
+                        "gemm" => {
+                            ensure!(toks.len() >= 4, at("gemm op needs a MxNxK shape"));
+                            let shape = GemmShape::parse(toks[3])?;
+                            ensure!(toks.len() <= 5, at("trailing tokens"));
+                            let count = parse_count(toks.get(4))?;
+                            g.add_gemm(label, shape, count)
+                        }
+                        "softmax" | "elementwise" => {
+                            ensure!(toks.len() <= 4, at("trailing tokens"));
+                            let count = parse_count(toks.get(3))?;
+                            if toks[2] == "softmax" {
+                                g.add_softmax(label, count)
+                            } else {
+                                g.add_elementwise(label, count)
+                            }
+                        }
+                        other => bail!(at(&format!("unknown op kind {other:?}"))),
+                    };
+                    ensure!(
+                        by_label.insert(label.to_string(), id).is_none(),
+                        at("duplicate op label")
+                    );
+                }
+                "edge" => {
+                    let g = g.as_mut().ok_or_else(|| at("`edge` before `graph` header"))?;
+                    ensure!(
+                        toks.len() == 5 && toks[2] == "->",
+                        at("expected `edge FROM -> TO TENSOR`")
+                    );
+                    let from = *by_label.get(toks[1]).ok_or_else(|| at("unknown source op"))?;
+                    let to = *by_label.get(toks[3]).ok_or_else(|| at("unknown target op"))?;
+                    g.connect(from, to, toks[4])?;
+                }
+                other => bail!(at(&format!("unknown directive {other:?}"))),
+            }
+        }
+        let g = g.ok_or_else(|| anyhow::anyhow!("no `graph NAME` header found"))?;
+        g.validate()?;
+        Ok(g)
+    }
+
+    /// Single-head attention prefill: QK^T (seq×seq×d_head) → softmax →
+    /// PV (seq×d_head×seq), `count` heads per pass. The scores/probs
+    /// intermediates are the fusion opportunity: seq×seq at 1–2 B/elem
+    /// shares out to a few hundred bytes per tile on a real grid.
+    pub fn attention_prefill(tag: &str, seq: usize, d_head: usize, count: usize) -> WorkloadGraph {
+        let mut g = WorkloadGraph::new(tag.to_string());
+        let qk = g.add_gemm(format!("{tag}/qk"), GemmShape::new(seq, seq, d_head), count);
+        let sm = g.add_softmax(format!("{tag}/softmax"), count);
+        let av = g.add_gemm(format!("{tag}/av"), GemmShape::new(seq, d_head, seq), count);
+        g.connect(qk, sm, "scores").expect("builtin wiring");
+        g.connect(sm, av, "probs").expect("builtin wiring");
+        g
+    }
+
+    /// Attention at decode: one query row block per sequence (M = batch),
+    /// same chain — the flat, memory-bound regime where skipping the HBM
+    /// round-trip matters most.
+    pub fn attention_decode(
+        tag: &str,
+        batch: usize,
+        seq: usize,
+        d_head: usize,
+        count: usize,
+    ) -> WorkloadGraph {
+        let mut g = WorkloadGraph::new(tag.to_string());
+        let qk = g.add_gemm(format!("{tag}/qk"), GemmShape::new(batch, seq, d_head), count);
+        let sm = g.add_softmax(format!("{tag}/softmax"), count);
+        let av = g.add_gemm(format!("{tag}/av"), GemmShape::new(batch, d_head, seq), count);
+        g.connect(qk, sm, "scores").expect("builtin wiring");
+        g.connect(sm, av, "probs").expect("builtin wiring");
+        g
+    }
+
+    /// An MLP block: up-projection → activation → down-projection.
+    pub fn mlp_chain(
+        tag: &str,
+        tokens: usize,
+        d_model: usize,
+        d_ff: usize,
+        count: usize,
+    ) -> WorkloadGraph {
+        let mut g = WorkloadGraph::new(tag.to_string());
+        let up = g.add_gemm(format!("{tag}/up"), GemmShape::new(tokens, d_ff, d_model), count);
+        let act = g.add_elementwise(format!("{tag}/act"), count);
+        let down = g.add_gemm(format!("{tag}/down"), GemmShape::new(tokens, d_model, d_ff), count);
+        g.connect(up, act, "pre-act").expect("builtin wiring");
+        g.connect(act, down, "act").expect("builtin wiring");
+        g
+    }
+
+    /// Built-in graphs for the CLI / benches, keyed by name. Like
+    /// [`Workload::builtin`] these use the paper's evaluation flavour
+    /// (d_head = 64 attention heads, d_model = 1024 / d_ff = 4096 MLP).
+    pub fn builtin(name: &str) -> Option<WorkloadGraph> {
+        BUILTIN_GRAPHS.iter().find(|(n, _)| *n == name).map(|(_, f)| f())
+    }
+
+    /// Names accepted by [`WorkloadGraph::builtin`], from the same table.
+    pub fn builtin_names() -> Vec<&'static str> {
+        BUILTIN_GRAPHS.iter().map(|(n, _)| *n).collect()
+    }
+}
+
+fn builtin_attn_prefill() -> WorkloadGraph {
+    WorkloadGraph::attention_prefill("attn-prefill", 512, 64, 32)
+}
+
+fn builtin_attn_decode() -> WorkloadGraph {
+    WorkloadGraph::attention_decode("attn-decode", 64, 512, 64, 32)
+}
+
+fn builtin_mlp_chain() -> WorkloadGraph {
+    WorkloadGraph::mlp_chain("mlp-chain", 512, 1024, 4096, 4)
+}
+
+/// The single source of truth for builtin graph names (mirrors the
+/// builtin-table pattern in `arch::workload`).
+const BUILTIN_GRAPHS: &[(&str, fn() -> WorkloadGraph)] = &[
+    ("attn-prefill", builtin_attn_prefill),
+    ("attn-decode", builtin_attn_decode),
+    ("mlp-chain", builtin_mlp_chain),
+];
+
+/// Per-tile SPM share of an intermediate tensor when it stays resident:
+/// the tensor is distributed across the whole grid, so each tile holds
+/// `ceil(bytes / num_tiles)`.
+pub fn tensor_share_bytes(arch: &ArchConfig, t: &TensorRef) -> u64 {
+    t.bytes(arch).div_ceil(arch.num_tiles() as u64)
+}
+
+/// The residency rule, shared by the engine (tuned working sets) and the
+/// static checker (optimistic working sets): an edge's intermediate stays
+/// on-fabric iff its per-tile share fits in L1 *alongside* both the
+/// producer's and the consumer's working set.
+pub fn edge_is_resident(arch: &ArchConfig, share: u64, need_from: u64, need_to: u64) -> bool {
+    let l1 = arch.tile.l1_bytes as u64;
+    // Saturating: a working set of u64::MAX models "no candidate fits".
+    share.saturating_add(need_from) <= l1 && share.saturating_add(need_to) <= l1
+}
+
+/// Per-tile L1 working-set need of an op. GEMM needs come from the
+/// caller-provided resolver (the engine passes `schedule::l1_estimate` of
+/// the tuned best; the checker passes the minimum over all candidates);
+/// softmax/elementwise ops stream their input in place, so their need is
+/// the input tensor's share.
+pub fn op_need_bytes(
+    arch: &ArchConfig,
+    g: &WorkloadGraph,
+    op: &GraphOp,
+    gemm_need: &mut dyn FnMut(&GraphOp, GemmShape) -> u64,
+) -> u64 {
+    match op.kind {
+        OpKind::Gemm(s) => gemm_need(op, s),
+        OpKind::Softmax | OpKind::Elementwise => g
+            .edges
+            .iter()
+            .filter(|e| e.to == op.id)
+            .map(|e| tensor_share_bytes(arch, &e.tensor))
+            .sum(),
+    }
+}
+
+/// HBM bytes one pass saves when this edge's intermediate stays resident:
+/// the producer skips its C store and the consumer skips its A load, but
+/// only GEMM endpoints count — softmax/elementwise glue never touches HBM
+/// in the performance model, so a resident edge into or out of glue saves
+/// nothing on that side. This keeps the saving a strict subset of the
+/// traffic the simulator actually measured, which is what guarantees the
+/// fused total stays positive (and strictly below unfused whenever a
+/// GEMM-endpoint edge is resident).
+pub fn edge_saved_bytes(arch: &ArchConfig, g: &WorkloadGraph, e: &GraphEdge) -> u64 {
+    let mut endpoints = 0u64;
+    if matches!(g.op(e.from).kind, OpKind::Gemm(_)) {
+        endpoints += 1; // skipped C store
+    }
+    if matches!(g.op(e.to).kind, OpKind::Gemm(_)) {
+        endpoints += 1; // skipped A load
+    }
+    e.tensor.bytes(arch) * endpoints * g.op(e.from).count as u64
+}
+
+/// Numerically-stable row-wise softmax (f32), the host-oracle companion to
+/// [`OpKind::Softmax`] for functional fused-vs-unfused equivalence tests.
+pub fn softmax_rows(data: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    assert_eq!(data.len(), rows * cols, "softmax_rows: data is not rows x cols");
+    let mut out = vec![0.0f32; data.len()];
+    for r in 0..rows {
+        let row = &data[r * cols..(r + 1) * cols];
+        let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut denom = 0.0f32;
+        for (c, &v) in row.iter().enumerate() {
+            let e = (v - max).exp();
+            out[r * cols + c] = e;
+            denom += e;
+        }
+        for c in 0..cols {
+            out[r * cols + c] /= denom;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn attn() -> WorkloadGraph {
+        WorkloadGraph::attention_prefill("attn", 64, 32, 2)
+    }
+
+    #[test]
+    fn builder_derives_edge_tensors() {
+        let g = attn();
+        assert_eq!(g.ops.len(), 3);
+        assert_eq!(g.edges.len(), 2);
+        // QK output is seq x seq; softmax passes dims through.
+        assert_eq!((g.edges[0].tensor.rows, g.edges[0].tensor.cols), (64, 64));
+        assert_eq!((g.edges[1].tensor.rows, g.edges[1].tensor.cols), (64, 64));
+        assert_eq!(g.edges[0].tensor.name, "scores");
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn topo_order_is_stable_and_cycles_are_rejected() {
+        let g = attn();
+        assert_eq!(g.topo_order().unwrap(), vec![OpId(0), OpId(1), OpId(2)]);
+
+        let mut cyc = WorkloadGraph::new("cyc");
+        let a = cyc.add_gemm("a", GemmShape::new(8, 8, 8), 1);
+        let b = cyc.add_gemm("b", GemmShape::new(8, 8, 8), 1);
+        cyc.connect(a, b, "ab").unwrap();
+        cyc.connect(b, a, "ba").unwrap();
+        let err = cyc.validate().unwrap_err().to_string();
+        assert!(err.contains("cycle"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_shape_count_and_arity_violations() {
+        // Producer output 8x8 does not match consumer A operand 16x8.
+        let mut g = WorkloadGraph::new("bad-shape");
+        let a = g.add_gemm("a", GemmShape::new(8, 8, 4), 1);
+        let b = g.add_gemm("b", GemmShape::new(16, 4, 8), 1);
+        g.connect(a, b, "t").unwrap();
+        assert!(g.validate().unwrap_err().to_string().contains("does not match"));
+
+        // Count mismatch along an edge.
+        let mut g = WorkloadGraph::new("bad-count");
+        let a = g.add_gemm("a", GemmShape::new(8, 8, 4), 2);
+        let b = g.add_gemm("b", GemmShape::new(8, 4, 8), 3);
+        g.connect(a, b, "t").unwrap();
+        assert!(g.validate().unwrap_err().to_string().contains("count"));
+
+        // Softmax with no input: connect() can't even derive its dims.
+        let mut g = WorkloadGraph::new("dangling");
+        let s = g.add_softmax("s", 1);
+        let b = g.add_gemm("b", GemmShape::new(8, 4, 8), 1);
+        assert!(g.connect(s, b, "t").is_err());
+        // And validate() flags the input-less softmax itself.
+        assert!(g.validate().unwrap_err().to_string().contains("exactly one input"));
+    }
+
+    #[test]
+    fn workload_round_trips_as_degenerate_graph() {
+        let w = Workload::builtin("tiny").unwrap();
+        let g = WorkloadGraph::from_workload(&w);
+        assert!(g.edges.is_empty());
+        g.validate().unwrap();
+        let back = g.to_workload();
+        assert_eq!(back.name, w.name);
+        assert_eq!(back.items.len(), w.items.len());
+        for (a, b) in back.items.iter().zip(&w.items) {
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.shape, b.shape);
+            assert_eq!(a.count, b.count);
+        }
+    }
+
+    #[test]
+    fn text_format_round_trips() {
+        for name in WorkloadGraph::builtin_names() {
+            let g = WorkloadGraph::builtin(name).unwrap();
+            let text = g.to_text();
+            let back = WorkloadGraph::from_text(&text).unwrap();
+            assert_eq!(back.name, g.name, "{name}");
+            assert_eq!(back.ops.len(), g.ops.len(), "{name}");
+            assert_eq!(back.edges.len(), g.edges.len(), "{name}");
+            for (a, b) in back.ops.iter().zip(&g.ops) {
+                assert_eq!(a.label, b.label);
+                assert_eq!(a.kind, b.kind);
+                assert_eq!(a.count, b.count);
+            }
+            for (a, b) in back.edges.iter().zip(&g.edges) {
+                assert_eq!(a.tensor, b.tensor);
+                assert_eq!((a.from, a.to), (b.from, b.to));
+            }
+        }
+    }
+
+    #[test]
+    fn from_text_rejects_malformed_input() {
+        assert!(WorkloadGraph::from_text("").is_err());
+        assert!(WorkloadGraph::from_text("op a gemm 8x8x8").is_err()); // no header
+        assert!(WorkloadGraph::from_text("graph g\nop a wiggle\n").is_err());
+        assert!(WorkloadGraph::from_text("graph g\nedge a -> b t\n").is_err());
+        let dup = "graph g\nop a gemm 8x8x8\nop a gemm 8x8x8\n";
+        assert!(WorkloadGraph::from_text(dup).is_err());
+    }
+
+    #[test]
+    fn builtin_graphs_resolve_and_validate() {
+        for name in WorkloadGraph::builtin_names() {
+            let g = WorkloadGraph::builtin(name).unwrap();
+            assert_eq!(g.name, name, "builtin name should match graph name");
+            g.validate().unwrap();
+            assert!(g.to_workload().items.len() >= 2, "{name}");
+        }
+        assert!(WorkloadGraph::builtin("nope").is_none());
+    }
+
+    #[test]
+    fn residency_arithmetic() {
+        let arch = ArchConfig::gh200_like();
+        let g = WorkloadGraph::builtin("attn-prefill").unwrap();
+        // scores: 512x512 at 1 B/elem over 1024 tiles = 256 B/tile.
+        let share = tensor_share_bytes(&arch, &g.edges[0].tensor);
+        assert_eq!(share, 256);
+        assert!(edge_is_resident(&arch, share, 1024, 1024));
+        let l1 = arch.tile.l1_bytes as u64;
+        assert!(!edge_is_resident(&arch, share, l1, 0));
+
+        // scores edge: qk (GEMM) -> softmax, only the producer side saves.
+        let e = &g.edges[0];
+        assert_eq!(edge_saved_bytes(&arch, &g, e), 512 * 512 * 32);
+        // probs edge: softmax -> av (GEMM), only the consumer side saves.
+        let e = &g.edges[1];
+        assert_eq!(edge_saved_bytes(&arch, &g, e), 512 * 512 * 32);
+    }
+
+    #[test]
+    fn softmax_rows_is_stable_and_normalized() {
+        let out = softmax_rows(&[0.0, 0.0, 1000.0, 1000.0], 2, 2);
+        for r in 0..2 {
+            let sum: f32 = out[r * 2..(r + 1) * 2].iter().sum();
+            assert!((sum - 1.0).abs() < 1e-6, "row {r} sums to {sum}");
+            assert!(out[r * 2].is_finite());
+        }
+        assert_eq!(out[0], 0.5);
+        assert_eq!(out[2], 0.5);
+    }
+}

@@ -17,6 +17,10 @@
 //!   A100-like, arbitrary grids) + config-file parsing, plus named GEMM
 //!   workload suites ([`arch::workload`]: transformer prefill/decode
 //!   traffic).
+//! * [`graph`] — multi-op workload graphs: GEMM + softmax/elementwise
+//!   programs with named intermediate edges, topological iteration, and
+//!   the SPM-residency rule that lets the tuner keep producer/consumer
+//!   intermediates on-fabric (skipping the HBM store + reload).
 //! * [`collective`] — the mask-based NoC collective group calculus
 //!   (`(i & M_row) = S_row ∧ (j & M_col) = S_col`) and mask synthesis.
 //! * [`layout`] — distributed multi-channel HBM data layouts (split scheme,
@@ -60,6 +64,7 @@ pub mod collective;
 pub mod coordinator;
 pub mod dse;
 pub mod functional;
+pub mod graph;
 pub mod ir;
 pub mod layout;
 pub mod perfmodel;
@@ -75,6 +80,7 @@ pub mod prelude {
     pub use crate::arch::{ArchConfig, GemmShape};
     pub use crate::collective::{Mask, TileCoord};
     pub use crate::coordinator::engine::Engine;
+    pub use crate::graph::WorkloadGraph;
     pub use crate::dse::{run_sweep, DseOptions, Objective, SweepSpec};
     pub use crate::layout::{MatrixLayout, Placement};
     pub use crate::perfmodel::EnergyModel;

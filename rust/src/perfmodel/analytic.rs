@@ -35,6 +35,7 @@
 //! re-derives that bound from first principles for every borrow.
 
 use crate::arch::{ArchConfig, GemmShape};
+use crate::graph::{OpKind, WorkloadGraph};
 use crate::schedule::{Dataflow, Schedule};
 use crate::sim::engine_time_ns;
 
@@ -92,6 +93,73 @@ pub fn estimate(arch: &ArchConfig, shape: GemmShape, sched: &Schedule) -> Option
 /// [`estimate`] reduced to the ranking key.
 pub fn estimate_ns(arch: &ArchConfig, shape: GemmShape, sched: &Schedule) -> Option<f64> {
     estimate(arch, shape, sched).map(|l| l.total_ns)
+}
+
+/// Chain-aware estimate for a multi-op workload graph.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GraphEstimate {
+    /// Σ count × per-GEMM [`estimate_ns`] with every edge spilled.
+    pub unfused_ns: f64,
+    /// HBM bytes the resident edges keep on-fabric per pass — the *same*
+    /// arithmetic ([`crate::graph::edge_saved_bytes`] under
+    /// [`crate::graph::edge_is_resident`]) the engine's
+    /// `GraphReport` uses, so measured and estimated savings agree
+    /// exactly.
+    pub saved_hbm_bytes: u64,
+    /// Time the saved traffic would have spent on the HBM channels.
+    pub saved_ns: f64,
+    /// `unfused_ns - saved_ns`, floored at zero.
+    pub total_ns: f64,
+}
+
+/// Estimate one pass of a workload graph under the given per-GEMM
+/// schedules (`scheds[k]` belongs to the k-th GEMM op in graph order —
+/// the order `WorkloadGraph::to_workload` and the engine's report use).
+/// Per-op latency reuses [`estimate`]; resident edges then credit back
+/// the channel time of the intermediate store + reload they skip, priced
+/// at the aggregate streamed rate every channel contributes
+/// (`num_channels · channel_gbps · stream_efficiency`). Returns `None`
+/// when the schedule list does not match the graph's GEMM ops or any op
+/// is unestimable.
+pub fn estimate_graph(
+    arch: &ArchConfig,
+    g: &WorkloadGraph,
+    scheds: &[Schedule],
+) -> Option<GraphEstimate> {
+    let gemms: Vec<&crate::graph::GraphOp> =
+        g.ops.iter().filter(|o| matches!(o.kind, OpKind::Gemm(_))).collect();
+    if gemms.len() != scheds.len() {
+        return None;
+    }
+    let mut unfused_ns = 0.0;
+    let mut sched_of = std::collections::HashMap::new();
+    for (op, sched) in gemms.iter().zip(scheds) {
+        let OpKind::Gemm(shape) = op.kind else { unreachable!() };
+        unfused_ns += op.count as f64 * estimate_ns(arch, shape, sched)?;
+        sched_of.insert(op.id.0, sched);
+    }
+    let mut gemm_need = |op: &crate::graph::GraphOp, shape: GemmShape| -> u64 {
+        crate::schedule::l1_estimate(arch, shape, sched_of[&op.id.0])
+    };
+    let mut saved_bytes = 0u64;
+    for e in &g.edges {
+        let share = crate::graph::tensor_share_bytes(arch, &e.tensor);
+        let need_from = crate::graph::op_need_bytes(arch, g, g.op(e.from), &mut gemm_need);
+        let need_to = crate::graph::op_need_bytes(arch, g, g.op(e.to), &mut gemm_need);
+        if crate::graph::edge_is_resident(arch, share, need_from, need_to) {
+            saved_bytes += crate::graph::edge_saved_bytes(arch, g, e);
+        }
+    }
+    let agg_bw = arch.hbm.num_channels() as f64
+        * arch.hbm.channel_gbps
+        * arch.hbm.stream_efficiency;
+    let saved_ns = saved_bytes as f64 / agg_bw;
+    Some(GraphEstimate {
+        unfused_ns,
+        saved_hbm_bytes: saved_bytes,
+        saved_ns,
+        total_ns: (unfused_ns - saved_ns).max(0.0),
+    })
 }
 
 /// Estimate one L1-resident pass (no chunking).
@@ -257,5 +325,29 @@ mod tests {
         let shape = GemmShape::new(1 << 20, 1 << 20, 1 << 20);
         let sched = Schedule::summa(&arch, shape);
         assert!(estimate(&arch, shape, &sched).is_none());
+    }
+
+    #[test]
+    fn graph_estimate_credits_resident_edges() {
+        let arch = ArchConfig::tiny(4, 4);
+        let g = WorkloadGraph::attention_prefill("attn", 64, 32, 2);
+        let scheds: Vec<Schedule> = g
+            .ops
+            .iter()
+            .filter_map(|o| match o.kind {
+                OpKind::Gemm(s) => Some(Schedule::summa(&arch, s)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(scheds.len(), 2);
+        let est = estimate_graph(&arch, &g, &scheds).unwrap();
+        // Both edges are trivially resident on a 256 KiB-L1 grid, and
+        // each credits its single GEMM endpoint: 64·64·4 B × count 2.
+        assert_eq!(est.saved_hbm_bytes, 2 * (64 * 64 * 4 * 2));
+        assert!(est.saved_ns > 0.0);
+        assert!(est.total_ns < est.unfused_ns);
+        assert!(est.total_ns > 0.0);
+        // The schedule list must cover the GEMM ops exactly.
+        assert!(estimate_graph(&arch, &g, &scheds[..1]).is_none());
     }
 }

@@ -22,7 +22,7 @@
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::engine::WorkloadReport;
+use crate::coordinator::engine::{GraphReport, WorkloadReport};
 use crate::sim::RunStats;
 use crate::util::cfgtext::Doc;
 
@@ -156,6 +156,16 @@ impl EnergyModel {
         }
     }
 
+    /// Energy of one fused graph pass, Joules: the edge-free workload
+    /// energy minus the HBM energy of the bytes resident edges keep
+    /// on-fabric. The saved bytes are credited at `pj_per_hbm_byte` only —
+    /// the intermediate still transits the NoC and SPM either way, so
+    /// those terms stand.
+    pub fn graph_energy_j(&self, rep: &GraphReport) -> f64 {
+        let unfused = self.workload_energy_j(&rep.report);
+        let credit = rep.saved_hbm_bytes() as f64 * self.pj_per_hbm_byte * 1e-12;
+        (unfused - credit).max(0.0)
+    }
 }
 
 #[cfg(test)]
@@ -237,6 +247,21 @@ mod tests {
         assert!(EnergyModel::from_text("[energy]\npj_per_mac = -1\n").is_err());
         assert!(EnergyModel::from_text("[energy]\npj_per_mac = \"lots\"\n").is_err());
         assert!(EnergyModel::from_text("[energy").is_err(), "cfgtext error propagates");
+    }
+
+    #[test]
+    fn graph_energy_credits_exactly_the_saved_hbm_bytes() {
+        let arch = crate::arch::ArchConfig::tiny(4, 4);
+        let g = crate::graph::WorkloadGraph::attention_prefill("attn", 64, 32, 2);
+        let engine = crate::coordinator::engine::Engine::new(&arch);
+        let rep = engine.tune_graph(&g).unwrap();
+        assert!(rep.saved_hbm_bytes() > 0, "tiny attention should fuse");
+        let m = EnergyModel::default_table();
+        let unfused = m.workload_energy_j(&rep.report);
+        let fused = m.graph_energy_j(&rep);
+        let want = rep.saved_hbm_bytes() as f64 * m.pj_per_hbm_byte * 1e-12;
+        assert!(fused < unfused);
+        assert!(((unfused - fused) - want).abs() <= 1e-12 * unfused.max(1.0));
     }
 
     #[test]

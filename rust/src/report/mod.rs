@@ -130,6 +130,45 @@ pub fn workload_counters(rep: &crate::coordinator::engine::WorkloadReport) -> St
     )
 }
 
+/// Render a graph-tuning edge table: one row per intermediate edge with
+/// its size, per-tile SPM share, residency verdict, and the HBM bytes a
+/// resident edge saves per pass — printed with the per-GEMM
+/// [`workload_summary`] by `dit tune-workload --graph`.
+pub fn graph_edges(rep: &crate::coordinator::engine::GraphReport) -> Table {
+    let mut t = Table::new(
+        format!("graph '{}' edges on {}", rep.graph, rep.arch),
+        &["edge", "producer", "consumer", "bytes", "B/tile", "residency", "HBM saved"],
+    );
+    for e in &rep.edges {
+        t.row(vec![
+            e.tensor.clone(),
+            e.from.clone(),
+            e.to.clone(),
+            crate::util::human_bytes(e.tensor_bytes),
+            e.share_bytes.to_string(),
+            if e.resident { "SPM-resident".into() } else { "spilled".into() },
+            crate::util::human_bytes(e.saved_hbm_bytes),
+        ]);
+    }
+    t
+}
+
+/// One-line fusion counter summary for a graph report (see
+/// [`workload_counters`]): fused vs unfused HBM traffic and the
+/// resident-edge tally.
+pub fn graph_counters(rep: &crate::coordinator::engine::GraphReport) -> String {
+    format!(
+        "fusion     : {}/{} edges SPM-resident, {} unfused -> {} fused HBM bytes \
+         ({} saved, {:.1}%)",
+        rep.resident_edges(),
+        rep.edges.len(),
+        crate::util::human_bytes(rep.unfused_hbm_bytes),
+        crate::util::human_bytes(rep.fused_hbm_bytes),
+        crate::util::human_bytes(rep.saved_hbm_bytes()),
+        rep.saved_pct()
+    )
+}
+
 /// Render a serving-replay summary (hit/miss breakdown, database
 /// composition, time-to-schedule percentiles) — the `dit serve`
 /// CLI/bench table.

@@ -1,0 +1,162 @@
+//! Integration tests for the multi-op workload-graph layer: functional
+//! fused-vs-unfused equivalence, HBM traffic accounting against the
+//! analytic estimate, and bit-identity of the degenerate (single-GEMM)
+//! graph path with the flat tuning path.
+
+use dit::arch::workload::Workload;
+use dit::arch::{ArchConfig, GemmShape};
+use dit::coordinator::deploy_functional;
+use dit::coordinator::engine::{Engine, TunePolicy};
+use dit::functional::run_gemm;
+use dit::graph::{softmax_rows, WorkloadGraph};
+use dit::perfmodel::analytic::estimate_graph;
+use dit::schedule::Schedule;
+use dit::util::rng::Rng;
+
+/// The tuned best schedule per GEMM op, in graph order — the slice
+/// [`estimate_graph`] expects.
+fn best_schedules(rep: &dit::coordinator::engine::GraphReport) -> Vec<Schedule> {
+    rep.report.shapes.iter().map(|s| s.result.best().schedule.clone()).collect()
+}
+
+/// Fusing is a traffic optimization, not a numerical one: lowering the
+/// attention chain with the intermediates SPM-resident must produce the
+/// exact same f32 bits as lowering it with every intermediate spilled
+/// through an explicit byte round-trip (the HBM store + reload the fused
+/// pass skips). Both paths run the real deployed GEMMs and the same host
+/// softmax oracle.
+#[test]
+fn fused_and_unfused_lowerings_agree_bitwise() {
+    let arch = ArchConfig::tiny(4, 4);
+    let (seq, d) = (64, 32);
+    let g = WorkloadGraph::attention_prefill("attn", seq, d, 1);
+    let rep = Engine::new(&arch).tune_graph(&g).unwrap();
+
+    // On this grid both intermediates fit next to the tuned working
+    // sets: nothing in the chain round-trips through HBM.
+    assert_eq!(rep.resident_edges(), 2, "{:?}", rep.edges);
+    assert!(rep.hbm_transfers().is_empty(), "{:?}", rep.hbm_transfers());
+
+    let qk_shape = GemmShape::new(seq, seq, d);
+    let av_shape = GemmShape::new(seq, d, seq);
+    assert_eq!(rep.report.shapes[0].shape, qk_shape);
+    assert_eq!(rep.report.shapes[1].shape, av_shape);
+    let scheds = best_schedules(&rep);
+    let qk_dep = deploy_functional(&arch, qk_shape, &scheds[0]).unwrap();
+    let av_dep = deploy_functional(&arch, av_shape, &scheds[1]).unwrap();
+
+    let mut rng = Rng::new(0xD17);
+    let q = rng.f32_vec(seq * d); // A of QK^T: seq x d
+    let kt = rng.f32_vec(d * seq); // B of QK^T: d x seq
+    let v = rng.f32_vec(seq * d); // B of PV: seq x d
+
+    // Fused: scores/probs stay in on-fabric f32 buffers.
+    let scores = run_gemm(&arch, &qk_dep, &q, &kt).unwrap();
+    let probs = softmax_rows(&scores, seq, seq);
+    let fused = run_gemm(&arch, &av_dep, &probs, &v).unwrap();
+
+    // Unfused: every intermediate is serialized to little-endian f32
+    // bytes and read back — an explicit HBM round-trip.
+    let spill = |data: &[f32]| -> Vec<f32> {
+        let bytes: Vec<u8> = data.iter().flat_map(|x| x.to_le_bytes()).collect();
+        bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect()
+    };
+    let scores2 = spill(&run_gemm(&arch, &qk_dep, &q, &kt).unwrap());
+    let probs2 = spill(&softmax_rows(&scores2, seq, seq));
+    let unfused = run_gemm(&arch, &av_dep, &probs2, &v).unwrap();
+
+    assert_eq!(fused.len(), unfused.len());
+    for (i, (a, b)) in fused.iter().zip(&unfused).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "output {i} differs: {a} vs {b}");
+    }
+}
+
+/// The engine's measured saving, the per-edge breakdown and the analytic
+/// model's credit are the same arithmetic — they must agree exactly, and
+/// a resident chain must make the fused pass strictly cheaper.
+#[test]
+fn fused_traffic_is_strictly_lower_and_matches_the_analytic_estimate() {
+    let arch = ArchConfig::tiny(4, 4);
+    let g = WorkloadGraph::attention_prefill("attn", 64, 32, 2);
+    let rep = Engine::new(&arch).tune_graph(&g).unwrap();
+
+    assert!(
+        rep.fused_hbm_bytes < rep.unfused_hbm_bytes,
+        "fused {} vs unfused {}",
+        rep.fused_hbm_bytes,
+        rep.unfused_hbm_bytes
+    );
+    let edge_sum: u64 = rep.edges.iter().map(|e| e.saved_hbm_bytes).sum();
+    assert_eq!(rep.saved_hbm_bytes(), edge_sum, "delta is exactly the per-edge sum");
+
+    let est = estimate_graph(&arch, &g, &best_schedules(&rep)).unwrap();
+    assert_eq!(est.saved_hbm_bytes, rep.saved_hbm_bytes(), "analytic credit == measured delta");
+    assert!(est.saved_ns > 0.0);
+    assert!(est.total_ns < est.unfused_ns);
+}
+
+/// Acceptance: the builtin attention-prefill graph on the flagship
+/// preset keeps both intermediates resident, moves strictly fewer HBM
+/// bytes fused than edge-free, and the delta matches the analytic
+/// estimate (tiered tuning keeps the simulation count small).
+#[test]
+fn builtin_attention_prefill_fuses_on_the_flagship_preset() {
+    let arch = ArchConfig::gh200_like();
+    let g = WorkloadGraph::builtin("attn-prefill").unwrap();
+    let engine = Engine::new(&arch).with_policy(TunePolicy::Tiered { top_k: 2, explore: 1 });
+    let rep = engine.tune_graph(&g).unwrap();
+
+    assert_eq!(rep.resident_edges(), 2, "{:?}", rep.edges);
+    assert!(rep.fused_hbm_bytes < rep.unfused_hbm_bytes);
+    // One GEMM endpoint per edge (the other end is softmax glue):
+    // 512x512 scores at 1 B/elem, 32 heads, twice.
+    assert_eq!(rep.saved_hbm_bytes(), 2 * 512 * 512 * 32);
+    let est = estimate_graph(&arch, &g, &best_schedules(&rep)).unwrap();
+    assert_eq!(est.saved_hbm_bytes, rep.saved_hbm_bytes());
+}
+
+/// A single-GEMM workload expressed as a (degenerate, edge-free) graph
+/// must tune bit-identically to the flat path: same best schedule, same
+/// cache key, same simulated stats — the graph layer adds nothing but
+/// the (empty) edge classification.
+#[test]
+fn single_gemm_graph_path_is_bit_identical_to_the_flat_path() {
+    let arch = ArchConfig::tiny(4, 4);
+    let mut w = Workload::new("one");
+    w.push("gemm0", GemmShape::new(96, 64, 128), 3);
+    let g = WorkloadGraph::from_workload(&w);
+    let rt = g.to_workload();
+    assert_eq!(rt.items.len(), w.items.len(), "lossless round-trip");
+    for (x, y) in rt.items.iter().zip(&w.items) {
+        assert_eq!(
+            (x.label.as_str(), x.shape, x.count),
+            (y.label.as_str(), y.shape, y.count)
+        );
+    }
+
+    let flat = Engine::new(&arch).tune_workload(&w).unwrap();
+    let graph = Engine::new(&arch).tune_graph(&g).unwrap();
+    assert_eq!(graph.report.shapes.len(), 1);
+    let a = flat.shapes[0].result.best();
+    let b = graph.report.shapes[0].result.best();
+    assert_eq!(a.schedule, b.schedule);
+    assert_eq!(a.schedule.cache_key(), b.schedule.cache_key());
+    assert_eq!(a.stats.makespan_ns.to_bits(), b.stats.makespan_ns.to_bits());
+
+    assert!(graph.edges.is_empty(), "no edges on a degenerate graph");
+    assert_eq!(graph.fused_hbm_bytes, graph.unfused_hbm_bytes);
+    assert_eq!(graph.saved_hbm_bytes(), 0);
+}
+
+/// The committed graph config used by the CI lint lane is the builtin,
+/// verbatim — parse it and compare canonical renderings.
+#[test]
+fn committed_attention_prefill_graph_matches_the_builtin() {
+    let text = std::fs::read_to_string("configs/attention_prefill.graph").expect("committed graph");
+    let parsed = WorkloadGraph::from_text(&text).unwrap();
+    let builtin = WorkloadGraph::builtin("attn-prefill").unwrap();
+    assert_eq!(parsed.to_text(), builtin.to_text());
+}
